@@ -1,0 +1,60 @@
+"""Ablations over the paper's tunable design choices.
+
+1. Growth strategy (§2.3: "reconfigurable to prioritise expanding nodes
+   with a higher reduction in the objective function or nodes closer to
+   the root"): depthwise vs lossguide at equal leaf budget.
+2. Quantisation granularity (§2.1/2.2): max_bins 64/128/256 — accuracy vs
+   compressed-matrix bits (the paper's accuracy-vs-memory trade).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BoosterConfig, predict_margins, train
+from repro.core import objectives as O
+from repro.data import make_dataset
+
+
+def run(rows: int = 8000, rounds: int = 30):
+    x, y, spec = make_dataset("higgs", n_rows=rows)
+    n_tr = int(0.8 * rows)
+    xt, yt, xv, yv = x[:n_tr], y[:n_tr], x[n_tr:], y[n_tr:]
+    obj = O.OBJECTIVES[spec.objective]
+    out = []
+
+    def fit(cfg, tag):
+        t0 = time.perf_counter()
+        st = train(xt, yt, cfg)
+        dt = time.perf_counter() - t0
+        mv = predict_margins(st.ensemble, jnp.asarray(xv), cfg.max_depth)
+        acc = float(obj.metric(mv, jnp.asarray(yv)))
+        out.append((tag, dt, acc, st.matrix.bits))
+
+    # growth strategy at equal leaf budget (depth 5 = up to 32 leaves vs
+    # lossguide depth 8 with 32-leaf budget)
+    fit(BoosterConfig(n_rounds=rounds, max_depth=5, objective=spec.objective,
+                      max_bins=256), "depthwise-d5")
+    fit(BoosterConfig(n_rounds=rounds, max_depth=8, growth="lossguide",
+                      max_leaves=32, objective=spec.objective, max_bins=256),
+        "lossguide-32leaf")
+
+    # quantisation granularity
+    for b in (64, 128, 256):
+        fit(BoosterConfig(n_rounds=rounds, max_depth=5,
+                          objective=spec.objective, max_bins=b), f"bins-{b}")
+    return out
+
+
+def main():
+    rows = run()
+    print("# Ablations (higgs-shaped): config,time_s,valid_accuracy,matrix_bits")
+    for tag, dt, acc, bits in rows:
+        print(f"{tag},{dt:.2f},{acc:.4f},{bits}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Paper Figure 2: runtime scaling with device count (airline dataset).
+
+The container has ONE physical core, so wall-clock cannot show real
+speedup; what CAN be measured faithfully is the Algorithm-1 distribution
+itself: per-device row count, per-device histogram work, and the AllReduce
+bytes per boosting round, for p in {1, 2, 4, 8} virtual devices. Each p
+runs in a subprocess (XLA_FLAGS must precede jax init).
+
+AllReduce bytes/round (analytic, verified against the HLO in the dry-run):
+  sum over levels l of 2^l * F * B * 2 * 4 bytes  (histogram f32 pairs)
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_SCRIPT = """
+import time, json
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import BoosterConfig
+from repro.core.distributed import train_distributed
+from repro.data import make_dataset
+
+p = {p}
+x, y, spec = make_dataset("airline", n_rows={rows})
+cfg = BoosterConfig(n_rounds={rounds}, max_depth=6, max_bins=256,
+                    objective=spec.objective)
+mesh = jax.make_mesh((p,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+t0 = time.perf_counter()
+ens, margins, _ = train_distributed(x, y, cfg, mesh)
+jax.block_until_ready(margins)
+dt = time.perf_counter() - t0
+print(json.dumps(dict(p=p, time_s=dt, rows_per_device=len(x)//p)))
+"""
+
+
+def allreduce_bytes_per_round(max_depth=6, n_features=13, max_bins=256):
+    total = 0
+    for level in range(max_depth):
+        total += (2**level) * n_features * max_bins * 2 * 4
+    return total
+
+
+def run(rows=32_768, rounds=5, device_counts=(1, 2, 4, 8)):
+    results = []
+    for p in device_counts:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p}"
+        env["PYTHONPATH"] = os.path.join(ROOT, "src")
+        res = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(_SCRIPT.format(
+                p=p, rows=rows, rounds=rounds))],
+            capture_output=True, text=True, timeout=900, env=env,
+        )
+        if res.returncode != 0:
+            results.append({"p": p, "error": res.stderr[-300:]})
+            continue
+        rec = json.loads(res.stdout.strip().splitlines()[-1])
+        rec["allreduce_bytes_per_round"] = allreduce_bytes_per_round()
+        results.append(rec)
+    return results
+
+
+def main():
+    rows = run()
+    print("# Figure 2 (airline-shaped, virtual devices on 1 core):")
+    print("devices,time_s,rows_per_device,allreduce_bytes_per_round")
+    for r in rows:
+        if "error" in r:
+            print(f"{r['p']},ERROR,{r['error'][:80]}")
+        else:
+            print(f"{r['p']},{r['time_s']:.2f},{r['rows_per_device']},"
+                  f"{r['allreduce_bytes_per_round']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

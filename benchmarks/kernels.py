@@ -1,0 +1,71 @@
+"""Kernel microbenchmarks: Pallas (interpret mode on CPU — correctness
+path; TPU is the perf target) vs the XLA reference path.
+
+The interesting derived number on this container is the XLA-path histogram
+throughput (rows*features/s) since interpret-mode Pallas timing is a Python
+emulation. On TPU the kernel's roofline is reported in EXPERIMENTS.md §4.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compress as C
+from repro.core import histogram as H
+from repro.kernels import ops as KO
+
+
+def _bench(fn, *args, iters=5):
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(n=100_000, f=16, max_bins=256, n_nodes=8):
+    rng = np.random.default_rng(0)
+    bins = jnp.asarray(rng.integers(0, max_bins, size=(n, f)), jnp.int32)
+    gh = jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)
+    pos = jnp.asarray(rng.integers(0, n_nodes, size=n), jnp.int32)
+    bits = C.bits_needed(max_bins - 1)
+    packed = C.pack(bins, bits)
+
+    t_xla = _bench(
+        lambda b, g, p: H.build_histograms(b, g, p, n_nodes, max_bins),
+        bins, gh, pos,
+    )
+    t_unpack = _bench(lambda q: C.unpack(q, bits, n), packed)
+
+    # Pallas interpret-mode correctness spot check (timing not meaningful)
+    small = 4096
+    t0 = time.perf_counter()
+    hk = KO.histogram_packed_op(packed[:, : small // (32 // bits)],
+                                gh[:small], pos[:small], n_nodes, max_bins, bits)
+    jax.block_until_ready(hk)
+    t_pallas_interp = time.perf_counter() - t0
+
+    return {
+        "hist_xla_s": t_xla,
+        "hist_xla_rows_per_s": n / t_xla,
+        "unpack_s": t_unpack,
+        "unpack_GBps": bins.size * 4 / t_unpack / 1e9,
+        "pallas_interpret_4k_s": t_pallas_interp,
+    }
+
+
+def main():
+    r = run()
+    print("# Kernel microbench (CPU; Pallas interpret = correctness only)")
+    for k, v in r.items():
+        print(f"{k},{v:.4g}")
+    return r
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Emit the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from the
+dry-run JSONs (final = experiments/dryrun, baseline = experiments/dryrun_baseline)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = [
+    "phi-3-vision-4.2b", "zamba2-7b", "mamba2-2.7b", "minicpm3-4b", "glm4-9b",
+    "yi-6b", "seamless-m4t-medium", "llama4-maverick-400b-a17b",
+    "stablelm-12b", "llama4-scout-17b-a16e",
+]
+
+
+def load(d):
+    recs = {}
+    for p in glob.glob(os.path.join(d, "*.json")):
+        if "gbdt" in p:
+            continue
+        r = json.load(open(p))
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_bytes(b):
+    if b >= 1e9:
+        return f"{b/1e9:.1f}GB"
+    if b >= 1e6:
+        return f"{b/1e6:.1f}MB"
+    return f"{b/1e3:.0f}KB"
+
+
+def roofline_table(recs, mesh):
+    print(f"\n#### Mesh {mesh}\n")
+    print("| arch | shape | dominant | compute_s | memory_s | collective_s | "
+          "model TFLOPs/dev | useful ratio | peak HBM/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, mesh))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                print(f"| {arch} | {shape} | SKIP | — | — | — | — | — | — |")
+                continue
+            if r["status"] != "ok":
+                print(f"| {arch} | {shape} | ERROR | — | — | — | — | — | — |")
+                continue
+            rf = r["roofline"]
+            mem = r["memory_analysis"]["peak_hbm_bytes_est"]
+            print(
+                f"| {arch} | {shape} | **{rf['dominant']}** "
+                f"| {rf['compute_s']:.2e} | {rf['memory_s']:.2e} "
+                f"| {rf['collective_s']:.2e} "
+                f"| {rf['model_flops_per_device']/1e12:.2f} "
+                f"| {rf['useful_flops_ratio']:.2f} | {fmt_bytes(mem)} |"
+            )
+
+
+def dryrun_summary(recs):
+    ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    skip = sum(1 for r in recs.values() if r["status"] == "skipped")
+    err = sum(1 for r in recs.values() if r["status"] not in ("ok", "skipped"))
+    print(f"\nruns: {ok} ok, {skip} skipped (documented), {err} errors\n")
+    print("| arch | shape | mesh | compile_s | params | active | arg bytes/dev | temp bytes/dev |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mesh in ("pod16x16", "pod2x16x16"):
+                r = recs.get((arch, shape, mesh))
+                if r is None or r["status"] != "ok":
+                    continue
+                m = r["memory_analysis"]
+                print(
+                    f"| {arch} | {shape} | {mesh} | {r['compile_s']:.1f} "
+                    f"| {r['params_total']/1e9:.2f}B | {r['params_active']/1e9:.2f}B "
+                    f"| {fmt_bytes(m['argument_bytes'])} | {fmt_bytes(m['temp_bytes'])} |"
+                )
+
+
+if __name__ == "__main__":
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    recs = load(d)
+    which = sys.argv[2] if len(sys.argv) > 2 else "roofline"
+    if which == "roofline":
+        roofline_table(recs, "pod16x16")
+        roofline_table(recs, "pod2x16x16")
+    else:
+        dryrun_summary(recs)

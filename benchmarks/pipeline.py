@@ -1,0 +1,84 @@
+"""Figure 1 phase split: where does a boosting round spend its time?
+
+Phases timed separately (all on-device, jit'd): quantise, compress,
+gradient evaluation, histogram build, split evaluation, prediction update.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compress as C
+from repro.core import histogram as H
+from repro.core import objectives as O
+from repro.core import predict as PR
+from repro.core import quantile as Q
+from repro.core import split as S
+from repro.core import tree as T
+from repro.data import make_dataset
+
+
+def _time(fn, *args, iters=3):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(rows=50_000, max_bins=256, max_depth=6):
+    x, y, spec = make_dataset("higgs", n_rows=rows)
+    xj, yj = jnp.asarray(x), jnp.asarray(y)
+    obj = O.OBJECTIVES[spec.objective]
+
+    t_quant_cuts = _time(lambda a: Q.compute_cuts(a, max_bins), xj)
+    cuts = Q.compute_cuts(xj, max_bins)
+    t_quantize = _time(lambda a: Q.quantize(a, cuts), xj)
+    bins = Q.quantize(xj, cuts)
+    bits = C.bits_needed(max_bins - 1)
+    t_compress = _time(lambda b: C.pack(b, bits), bins)
+
+    margins = jnp.zeros((rows, 1))
+    t_grad = _time(lambda m: obj.grad(m, yj), margins)
+    gh = obj.grad(margins, yj)[:, 0]
+
+    pos = jnp.zeros(rows, jnp.int32)
+    t_hist = _time(lambda b, g, p: H.build_histograms(b, g, p, 1, max_bins),
+                   bins, gh, pos)
+    hist = H.build_histograms(bins, gh, pos, 1, max_bins)
+    parent = jnp.sum(gh, axis=0)[None]
+    t_split = _time(lambda h, p: S.evaluate_splits(h, p), hist, parent)
+
+    tr = T.grow_tree(bins, gh, cuts, max_depth, max_bins)
+    ens = PR.stack_trees([tr])
+    t_pred = _time(lambda b: PR.predict_binned(ens, b, max_bins - 1, max_depth),
+                   bins)
+    t_tree = _time(lambda b, g: T.grow_tree(b, g, cuts, max_depth, max_bins),
+                   bins, gh)
+
+    return {
+        "quantile_cuts_s": t_quant_cuts,
+        "quantize_s": t_quantize,
+        "compress_s": t_compress,
+        "gradient_s": t_grad,
+        "histogram_root_s": t_hist,
+        "split_eval_s": t_split,
+        "predict_s": t_pred,
+        "full_tree_s": t_tree,
+    }
+
+
+def main():
+    r = run()
+    print("# Pipeline phase split (higgs-shaped, 50k rows, depth 6)")
+    for k, v in r.items():
+        print(f"{k},{v*1e3:.2f}ms")
+    return r
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Roofline table from the dry-run JSONs (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and emits
+the per-(arch x shape x mesh) three-term table with the dominant bottleneck
+and useful-FLOPs ratio. Single-pod rows are the canonical §Roofline table;
+multi-pod rows prove the `pod` axis shards.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(out_dir="experiments/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if isinstance(r, dict) and "mesh" in r:  # skip gbdt_round.json etc.
+            recs.append(r)
+    return recs
+
+
+def table(recs, mesh="pod16x16"):
+    rows = []
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] != "ok":
+            rows.append((r["arch"], r["shape"], r["status"],
+                         r.get("reason", r.get("error", ""))[:60], "", "", "", ""))
+            continue
+        rf = r["roofline"]
+        rows.append((
+            r["arch"], r["shape"], "ok", rf["dominant"],
+            f"{rf['compute_s']:.3e}", f"{rf['memory_s']:.3e}",
+            f"{rf['collective_s']:.3e}", f"{rf['useful_flops_ratio']:.2f}",
+        ))
+    return rows
+
+
+def main():
+    recs = load()
+    if not recs:
+        print("# no dry-run records found; run: python -m repro.launch.dryrun --all --both-meshes")
+        return []
+    for mesh in ("pod16x16", "pod2x16x16"):
+        print(f"# Roofline ({mesh}): arch,shape,status,dominant,compute_s,memory_s,collective_s,useful_ratio")
+        for row in table(recs, mesh):
+            print(",".join(str(c) for c in row))
+    return recs
+
+
+if __name__ == "__main__":
+    main()

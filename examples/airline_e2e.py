@@ -1,0 +1,55 @@
+"""End-to-end driver (the paper's large-scale scenario, reduced for CPU):
+airline-shaped data (13 features, binary), 200 boosting rounds, multi-
+device row sharding with AllReduce histogram combination (Algorithm 1).
+
+Run single-device:
+    PYTHONPATH=src python examples/airline_e2e.py
+Across 8 virtual devices (Algorithm 1 multi-GPU path):
+    PYTHONPATH=src python examples/airline_e2e.py --devices 8
+
+(paper scale: 115M rows on 8 V100s in under 3 minutes; here 200k rows on
+a 1-core CPU container — the algorithm and collectives are the same.)
+"""
+import argparse
+import os
+import sys
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--devices", type=int, default=1)
+ap.add_argument("--rows", type=int, default=200_000)
+ap.add_argument("--rounds", type=int, default=200)
+args = ap.parse_args()
+
+if args.devices > 1 and "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={args.devices}"
+    os.execv(sys.executable, [sys.executable] + sys.argv)
+
+import time
+import jax
+import jax.numpy as jnp
+import numpy as np
+from repro.core import BoosterConfig, train, predict_proba
+from repro.core.distributed import train_distributed
+from repro.data import make_dataset
+
+x, y, spec = make_dataset("airline", n_rows=args.rows)
+n_tr = int(0.9 * args.rows)
+cfg = BoosterConfig(n_rounds=args.rounds, max_depth=6, max_bins=256,
+                    objective=spec.objective)
+t0 = time.perf_counter()
+if args.devices > 1:
+    mesh = jax.make_mesh((args.devices,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    keep = (n_tr // args.devices) * args.devices
+    ens, margins, _ = train_distributed(x[:keep], y[:keep], cfg, mesh,
+                                        verbose_every=50)
+else:
+    st = train(x[:n_tr], y[:n_tr], cfg, verbose_every=50,
+               callback=lambda r, rec: print(rec, flush=True))
+    ens = st.ensemble
+dt = time.perf_counter() - t0
+
+p = np.asarray(predict_proba(ens, x[n_tr:], cfg.max_depth, cfg.objective))
+acc = float(np.mean((p > 0.5) == y[n_tr:]))
+print(f"rows={args.rows} rounds={args.rounds} devices={args.devices} "
+      f"time={dt:.1f}s valid_accuracy={acc:.4f}")

@@ -1,0 +1,27 @@
+"""Train a small LM with the framework's model substrate + AdamW + token
+pipeline (deliverable b's second scenario; the assigned architectures are
+selectable with --arch).
+
+    PYTHONPATH=src python examples/train_lm.py --arch glm4-9b --steps 100
+"""
+import argparse
+
+from repro.configs import ARCHS, get_arch
+from repro.launch.train import train_loop
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", choices=ARCHS, default="yi-6b")
+ap.add_argument("--steps", type=int, default=100)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=128)
+ap.add_argument("--full", action="store_true",
+                help="full config (default: reduced variant for CPU)")
+args = ap.parse_args()
+
+cfg = get_arch(args.arch)
+if not args.full:
+    cfg = cfg.reduced(n_layers=2, d_model=256)
+print(f"training {cfg.name}: {cfg.n_layers}L d={cfg.d_model} "
+      f"({cfg.arch_type})")
+params, hist = train_loop(cfg, args.steps, args.batch, args.seq, lr=3e-3)
+print(f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")

@@ -1,0 +1,5 @@
+"""Checkpointing: msgpack-serialised pytrees (params, optimizer state,
+GBDT ensembles). No external deps beyond msgpack + numpy."""
+from repro.checkpoint.io import load_pytree, save_pytree, save_ensemble, load_ensemble
+
+__all__ = ["save_pytree", "load_pytree", "save_ensemble", "load_ensemble"]

@@ -1,0 +1,93 @@
+"""msgpack pytree checkpointing.
+
+Arrays are stored as (dtype, shape, raw bytes); the pytree structure is
+stored as nested msgpack maps/lists. Works for model params, AdamW state
+and GBDT ensembles. Writes are atomic (tmp file + rename) so an interrupted
+save never corrupts the previous checkpoint.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_ARR = "__arr__"
+_TUP = "__tuple__"
+
+
+def _encode(obj):
+    if isinstance(obj, (jax.Array, np.ndarray, np.generic)):
+        a = np.asarray(obj)
+        return {_ARR: True, "d": a.dtype.str, "s": list(a.shape), "b": a.tobytes()}
+    if isinstance(obj, dict):
+        return {str(k): _encode(v) for k, v in obj.items()}
+    if isinstance(obj, tuple):
+        return {_TUP: [_encode(v) for v in obj]}
+    if isinstance(obj, list):
+        return [_encode(v) for v in obj]
+    if isinstance(obj, (int, float, str, bool)) or obj is None:
+        return obj
+    raise TypeError(f"cannot checkpoint {type(obj)}")
+
+
+def _decode(obj):
+    if isinstance(obj, dict):
+        if obj.get(_ARR):
+            a = np.frombuffer(obj["b"], dtype=np.dtype(obj["d"]))
+            return jnp.asarray(a.reshape(obj["s"]))
+        if _TUP in obj:
+            return tuple(_decode(v) for v in obj[_TUP])
+        return {k: _decode(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_decode(v) for v in obj]
+    return obj
+
+
+def save_pytree(path: str, tree) -> None:
+    host = jax.tree.map(lambda x: np.asarray(x) if hasattr(x, "shape") else x, tree)
+    payload = msgpack.packb(_encode(host), use_bin_type=True)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d)
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(payload)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def load_pytree(path: str):
+    with open(path, "rb") as f:
+        return _decode(msgpack.unpackb(f.read(), raw=False, strict_map_key=False))
+
+
+def save_ensemble(path: str, ens) -> None:
+    from repro.core.predict import Ensemble
+
+    assert isinstance(ens, Ensemble)
+    save_pytree(
+        path,
+        {
+            "fields": {
+                k: getattr(ens, k)
+                for k in ("feature", "split_bin", "threshold", "default_left",
+                          "leaf_value", "is_leaf")
+            },
+            "n_classes": ens.n_classes,
+            "base_score": ens.base_score,
+        },
+    )
+
+
+def load_ensemble(path: str):
+    from repro.core.predict import Ensemble
+
+    d = load_pytree(path)
+    return Ensemble(**d["fields"], n_classes=d["n_classes"], base_score=d["base_score"])

@@ -1,0 +1,36 @@
+"""Core: the paper's contribution — GPU(-style) gradient boosting in JAX.
+
+Pipeline (paper Figure 1): quantile generation -> data compression ->
+gradient evaluation -> histogram tree construction (AllReduce across
+devices) -> prediction, all on-device.
+"""
+# NOTE: function re-exports must not shadow submodule names (`compress`,
+# `predict` stay module-only; use predict_proba / compress_matrix aliases).
+from repro.core.booster import BoosterConfig, TrainState, predict_margins, train
+from repro.core.booster import predict as predict_proba
+from repro.core.compress import CompressedMatrix, pack, unpack
+from repro.core.compress import compress as compress_matrix
+from repro.core.quantile import compute_cuts, quantize
+from repro.core.split import SplitParams
+from repro.core.tree import Tree, grow_tree
+from repro.core.predict import Ensemble, predict_binned, predict_raw
+
+__all__ = [
+    "BoosterConfig",
+    "TrainState",
+    "train",
+    "predict_proba",
+    "predict_margins",
+    "CompressedMatrix",
+    "compress_matrix",
+    "pack",
+    "unpack",
+    "compute_cuts",
+    "quantize",
+    "SplitParams",
+    "Tree",
+    "grow_tree",
+    "Ensemble",
+    "predict_binned",
+    "predict_raw",
+]

@@ -1,0 +1,106 @@
+"""Bit-packed quantised matrix (paper §2.2).
+
+Matrix values are compressed to ceil(log2(max_value+1)) bits and packed into
+uint32 words, unpacked at runtime with bitwise operations — exactly the
+paper's scheme. The paper notes runtime unpacking is "more flexible than
+precompiling many versions of the program"; in JAX the analogue is that the
+bit width is a *static* argument so XLA specialises the shift/mask constants
+per width without any code duplication on our side.
+
+Layout is column-major per feature: symbols of feature f occupy packed[f, :],
+with `spw = 32 // bits` symbols per word and no symbol straddling a word.
+This is chosen for the Pallas histogram kernel: a (F_BLK, W_BLK) word tile
+unpacks to a (F_BLK, W_BLK * spw) bin tile with pure lane-wise shifts.
+
+Typical saving vs the fp32 input: 8-bit bins -> 4x (the paper's ">= 4x").
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def bits_needed(max_value: int) -> int:
+    """ceil(log2(max_value + 1)), minimum 1."""
+    return max(1, int(max_value).bit_length())
+
+
+def symbols_per_word(bits: int) -> int:
+    if not 1 <= bits <= 32:
+        raise ValueError(f"bits must be in [1, 32], got {bits}")
+    return 32 // bits
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def pack(bins: jax.Array, bits: int) -> jax.Array:
+    """Pack (n_rows, n_features) int bins -> (n_features, n_words) uint32.
+
+    Rows are padded to a multiple of symbols_per_word(bits) with zeros.
+    """
+    n, f = bins.shape
+    spw = symbols_per_word(bits)
+    n_pad = (-n) % spw
+    b = jnp.pad(bins.astype(jnp.uint32), ((0, n_pad), (0, 0)))
+    b = b.T.reshape(f, -1, spw)  # (F, W, spw)
+    shifts = (jnp.arange(spw, dtype=jnp.uint32) * bits)[None, None, :]
+    mask = jnp.uint32((1 << bits) - 1)
+    return jnp.bitwise_or.reduce((b & mask) << shifts, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "n_rows"))
+def unpack(packed: jax.Array, bits: int, n_rows: int) -> jax.Array:
+    """Inverse of pack: (n_features, n_words) uint32 -> (n_rows, n_features)."""
+    spw = symbols_per_word(bits)
+    shifts = (jnp.arange(spw, dtype=jnp.uint32) * bits)[None, None, :]
+    mask = jnp.uint32((1 << bits) - 1)
+    b = (packed[:, :, None] >> shifts) & mask  # (F, W, spw)
+    return b.reshape(packed.shape[0], -1)[:, :n_rows].T.astype(jnp.int32)
+
+
+@dataclass(frozen=True)
+class CompressedMatrix:
+    """The quantised + bit-packed training matrix ("ELLPACK page" analogue)."""
+
+    packed: jax.Array  # (n_features, n_words) uint32
+    cuts: jax.Array  # (n_features, n_cuts) float32
+    bits: int
+    n_rows: int
+    max_bins: int
+
+    @property
+    def n_features(self) -> int:
+        return self.packed.shape[0]
+
+    def unpack(self) -> jax.Array:
+        return unpack(self.packed, self.bits, self.n_rows)
+
+    def nbytes_compressed(self) -> int:
+        return int(np.prod(self.packed.shape)) * 4
+
+    def nbytes_dense_fp32(self) -> int:
+        return self.n_rows * self.n_features * 4
+
+    def compression_ratio(self) -> float:
+        return self.nbytes_dense_fp32() / self.nbytes_compressed()
+
+
+def compress(bins: jax.Array, cuts: jax.Array, max_bins: int) -> CompressedMatrix:
+    """Quantised matrix -> compressed form, choosing the minimal bit width.
+
+    The paper compresses to log2(max_value) bits where max_value is the
+    largest bin id actually present; we honour that (a dataset whose features
+    all quantise to <= 16 distinct bins packs at 4-5 bits, not 8).
+    """
+    max_value = int(jnp.max(bins))
+    bits = bits_needed(max_value)
+    return CompressedMatrix(
+        packed=pack(bins, bits),
+        cuts=cuts,
+        bits=bits,
+        n_rows=bins.shape[0],
+        max_bins=max_bins,
+    )

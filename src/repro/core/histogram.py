@@ -1,0 +1,46 @@
+"""Gradient histogram construction (paper §2.3, BuildPartialHistograms).
+
+Each device sums (g, h) pairs of its row shard into per-(node, feature, bin)
+histograms. This module is the XLA-native path (scatter-add); the TPU-MXU
+Pallas kernel lives in repro.kernels.histogram and is numerically checked
+against build_histograms() below.
+
+positions[i] is the *level-local* node index of row i (0..n_nodes-1), or
+`n_nodes` for rows that are inactive (already in a finalised leaf) — they
+fall into a dump slot that is sliced off.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "max_bins"))
+def build_histograms(
+    bins: jax.Array,  # (n, f) int32 bin ids
+    gh: jax.Array,  # (n, 2) float32 gradient/hessian pairs
+    positions: jax.Array,  # (n,) int32 level-local node ids, n_nodes = inactive
+    n_nodes: int,
+    max_bins: int,
+) -> jax.Array:
+    """Returns hist (n_nodes, n_features, max_bins, 2) float32."""
+    n, f = bins.shape
+    pos = jnp.minimum(positions, n_nodes).astype(jnp.int32)
+    # Flat scatter index per (row, feature): ((pos * F) + f) * B + bin.
+    idx = (pos[:, None] * f + jnp.arange(f, dtype=jnp.int32)[None, :]) * max_bins
+    idx = idx + bins
+    flat = jnp.zeros(((n_nodes + 1) * f * max_bins, 2), jnp.float32)
+    gh_rep = jnp.broadcast_to(gh[:, None, :], (n, f, 2)).reshape(-1, 2)
+    flat = flat.at[idx.reshape(-1)].add(gh_rep, mode="drop")
+    return flat.reshape(n_nodes + 1, f, max_bins, 2)[:n_nodes]
+
+
+def node_sums(hist: jax.Array) -> jax.Array:
+    """Total (G, H) per node from a histogram: sum over one feature's bins.
+
+    Every feature's bins partition the same rows, so feature 0 suffices.
+    Returns (n_nodes, 2).
+    """
+    return jnp.sum(hist[:, 0, :, :], axis=1)

@@ -1,0 +1,37 @@
+"""RepartitionInstances (paper §2.3 / Algorithm 1).
+
+After a level of splits is decided, every active row is routed to a child
+node based on its bin id for the split feature; the paper does this per-GPU
+on each device's row shard, and so do we (the function is elementwise over
+rows, so under shard_map it is embarrassingly parallel with no collectives).
+
+Arena indexing: complete binary tree, children of node k are 2k+1 / 2k+2.
+positions[i] = arena node id of row i, or -1 once the row rests in a leaf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def update_positions(
+    bins: jax.Array,  # (n, f) int32
+    positions: jax.Array,  # (n,) int32 arena node ids, -1 = inactive
+    split_mask: jax.Array,  # (n_arena,) bool — nodes that split this level
+    feature: jax.Array,  # (n_arena,) int32
+    split_bin: jax.Array,  # (n_arena,) int32
+    default_left: jax.Array,  # (n_arena,) bool
+    missing_bin: int,
+) -> jax.Array:
+    pos = jnp.maximum(positions, 0)
+    active = positions >= 0
+    splits_here = split_mask[pos] & active
+
+    f = feature[pos]
+    b = jnp.take_along_axis(bins, f[:, None], axis=1)[:, 0]
+    is_missing = b == missing_bin
+    go_left = jnp.where(is_missing, default_left[pos], b <= split_bin[pos])
+
+    child = jnp.where(go_left, 2 * pos + 1, 2 * pos + 2)
+    return jnp.where(splits_here, child, -1).astype(jnp.int32)

@@ -1,0 +1,157 @@
+"""Ensemble prediction (paper §2.4).
+
+The paper assigns one GPU thread per instance and iterates trees
+sequentially, noting tree traversal is branch-heavy. The TPU adaptation
+(DESIGN.md §3) replaces divergent per-thread branching with a *level-wise
+vectorised gather*: all rows advance one tree level per fori_loop step, so
+the computation stays dense (a gather + select per level) and the ensemble
+is folded with lax.scan over stacked tree arrays.
+
+Two input modes, as in XGBoost:
+  * binned   — training-set prediction on the quantised matrix (bin-space
+    thresholds). Used inside the boosting loop (Figure 1's Predict box).
+  * raw      — float inputs vs raw-space thresholds, NaN = missing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tree import Tree
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["feature", "split_bin", "threshold", "default_left", "leaf_value", "is_leaf"],
+    meta_fields=["n_classes", "base_score"],
+)
+@dataclasses.dataclass(frozen=True)
+class Ensemble:
+    """Stacked tree arenas: every field has leading axis n_trees.
+
+    For multiclass, trees are laid out round-robin: tree t predicts
+    class t % n_classes (XGBoost's convention). n_classes/base_score are
+    static pytree metadata so jit specialises on them.
+    """
+
+    feature: jax.Array  # (t, a) int32
+    split_bin: jax.Array  # (t, a) int32
+    threshold: jax.Array  # (t, a) float32
+    default_left: jax.Array  # (t, a) bool
+    leaf_value: jax.Array  # (t, a) float32
+    is_leaf: jax.Array  # (t, a) bool
+    n_classes: int = 1
+    base_score: float = 0.0
+
+    def _replace(self, **kw) -> "Ensemble":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def n_trees(self) -> int:
+        return self.feature.shape[0]
+
+    @property
+    def max_depth(self) -> int:
+        return int(self.feature.shape[1] + 1).bit_length() - 2
+
+
+def stack_trees(trees: list[Tree], n_classes: int = 1, base_score: float = 0.0) -> Ensemble:
+    st = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+    return Ensemble(
+        feature=st.feature,
+        split_bin=st.split_bin,
+        threshold=st.threshold,
+        default_left=st.default_left,
+        leaf_value=st.leaf_value,
+        is_leaf=st.is_leaf,
+        n_classes=n_classes,
+        base_score=base_score,
+    )
+
+
+def _traverse(tree_arrays, x_row_lookup, max_depth: int) -> jax.Array:
+    """Level-wise traversal for one stacked tree over all rows at once.
+
+    x_row_lookup(feature_ids) -> (go_left_bool, is_missing_bool) per row.
+    """
+    feature, default_left, leaf_value, is_leaf = tree_arrays
+
+    def body(_, node):
+        f = feature[node]
+        go_left, is_missing = x_row_lookup(f, node)
+        go_left = jnp.where(is_missing, default_left[node], go_left)
+        child = jnp.where(go_left, 2 * node + 1, 2 * node + 2)
+        return jnp.where(is_leaf[node], node, child)
+
+    n_rows = x_row_lookup.n_rows
+    node = jnp.zeros(n_rows, jnp.int32)
+    node = jax.lax.fori_loop(0, max_depth, body, node)
+    return leaf_value[node]
+
+
+@functools.partial(jax.jit, static_argnames=("missing_bin", "max_depth"))
+def predict_binned(
+    ens: Ensemble, bins: jax.Array, missing_bin: int, max_depth: int
+) -> jax.Array:
+    """Margins (n_rows, n_classes) from the quantised matrix."""
+    n_rows = bins.shape[0]
+
+    def one_tree(carry, t):
+        feature, split_bin, default_left, leaf_value, is_leaf = t
+
+        class Lookup:
+            n_rows = bins.shape[0]
+
+            def __call__(self, f, node):
+                b = jnp.take_along_axis(bins, f[:, None], axis=1)[:, 0]
+                return b <= split_bin[node], b == missing_bin
+
+        return carry, _traverse(
+            (feature, default_left, leaf_value, is_leaf), Lookup(), max_depth
+        )
+
+    _, leaves = jax.lax.scan(
+        one_tree,
+        None,
+        (ens.feature, ens.split_bin, ens.default_left, ens.leaf_value, ens.is_leaf),
+    )  # (n_trees, n_rows)
+    return _fold_classes(leaves, ens, n_rows)
+
+
+@functools.partial(jax.jit, static_argnames=("max_depth",))
+def predict_raw(ens: Ensemble, x: jax.Array, max_depth: int) -> jax.Array:
+    """Margins (n_rows, n_classes) from raw float inputs (NaN = missing)."""
+    n_rows = x.shape[0]
+
+    def one_tree(carry, t):
+        feature, threshold, default_left, leaf_value, is_leaf = t
+
+        class Lookup:
+            n_rows = x.shape[0]
+
+            def __call__(self, f, node):
+                v = jnp.take_along_axis(x, f[:, None], axis=1)[:, 0]
+                return v <= threshold[node], jnp.isnan(v)
+
+        return carry, _traverse(
+            (feature, default_left, leaf_value, is_leaf), Lookup(), max_depth
+        )
+
+    _, leaves = jax.lax.scan(
+        one_tree,
+        None,
+        (ens.feature, ens.threshold, ens.default_left, ens.leaf_value, ens.is_leaf),
+    )
+    return _fold_classes(leaves, ens, n_rows)
+
+
+def _fold_classes(leaves: jax.Array, ens: Ensemble, n_rows: int) -> jax.Array:
+    """(n_trees, n_rows) leaf outputs -> (n_rows, n_classes) margins."""
+    k = ens.n_classes
+    n_trees = leaves.shape[0]
+    n_rounds = n_trees // k
+    per_class = leaves.reshape(n_rounds, k, n_rows).sum(axis=0)  # (k, n_rows)
+    return per_class.T + ens.base_score

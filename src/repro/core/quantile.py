@@ -1,0 +1,90 @@
+"""Feature quantile generation (paper §2.1).
+
+The paper maps quantile sketch construction to the GPU because it is a
+considerable preprocessing cost. Here the same computation is expressed in
+JAX (sort-based exact quantiles, vmapped over features) so XLA runs it on
+the accelerator. Missing values (NaN) are excluded from the sketch and are
+assigned a reserved *missing bin* (the last bin), which is what makes the
+sparsity-aware default-direction logic in split.py possible (DESIGN.md §7.4).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+# Reserved: the last bin id of every feature is the "missing" bin.
+# With max_bins=256 we get 255 value bins + 1 missing bin, so every bin id
+# fits in 8 bits and the histogram axis is 256 = 2x128 (MXU lane aligned).
+DEFAULT_MAX_BINS = 256
+
+
+def missing_bin_id(max_bins: int = DEFAULT_MAX_BINS) -> int:
+    return max_bins - 1
+
+
+def n_value_bins(max_bins: int = DEFAULT_MAX_BINS) -> int:
+    return max_bins - 1
+
+
+@functools.partial(jax.jit, static_argnames=("max_bins",))
+def compute_cuts(x: jax.Array, max_bins: int = DEFAULT_MAX_BINS) -> jax.Array:
+    """Per-feature quantile cut points.
+
+    Args:
+      x: (n_rows, n_features) float array, NaN = missing.
+      max_bins: total bins per feature incl. the reserved missing bin.
+
+    Returns:
+      cuts: (n_features, n_value_bins - 1) float32, ascending; value bin b
+        holds x <= cuts[b] (and x > cuts[b-1]). Unused tail cuts are +inf so
+        quantize() naturally maps everything into the used prefix.
+    """
+    nvb = n_value_bins(max_bins)
+    n = x.shape[0]
+
+    def per_feature(col: jax.Array) -> jax.Array:
+        finite = jnp.isfinite(col)
+        # Push NaNs to the end of the sort; count of valid entries.
+        filled = jnp.where(finite, col, jnp.inf)
+        srt = jnp.sort(filled)
+        n_valid = jnp.sum(finite)
+        # Quantile positions: interior boundaries between nvb equal-mass bins.
+        qs = (jnp.arange(1, nvb, dtype=jnp.float32) / nvb) * jnp.maximum(
+            n_valid - 1, 1
+        ).astype(jnp.float32)
+        lo = jnp.clip(jnp.floor(qs).astype(jnp.int32), 0, n - 1)
+        hi = jnp.clip(lo + 1, 0, n - 1)
+        frac = qs - lo.astype(jnp.float32)
+        lov, hiv = srt[lo], srt[hi]
+        # Linear interpolation, guarding the all-missing / +inf tail case.
+        hiv = jnp.where(jnp.isfinite(hiv), hiv, lov)
+        cand = lov + frac * (hiv - lov)
+        cand = jnp.where(jnp.isfinite(cand), cand, jnp.inf)
+        # Deduplicate: a cut equal to its predecessor is useless; push to +inf
+        # so searchsorted collapses duplicate-mass bins (low-cardinality cols).
+        prev = jnp.concatenate([jnp.array([-jnp.inf], cand.dtype), cand[:-1]])
+        cand = jnp.where(cand > prev, cand, jnp.inf)
+        return jnp.sort(cand)  # keep +inf padding at the tail
+
+    return jax.vmap(per_feature, in_axes=1)(x.astype(jnp.float32))
+
+
+@jax.jit
+def quantize(x: jax.Array, cuts: jax.Array) -> jax.Array:
+    """Map raw features to bin ids. NaN -> missing bin (= n_cuts + 1).
+
+    bin = #cuts strictly below x, i.e. x <= cuts[b] lands in bin b. The last
+    value bin is everything above the final finite cut; missing bin id is
+    cuts.shape[1] + 1 == n_value_bins - ... == max_bins - 1 by construction.
+    """
+    n_cuts = cuts.shape[1]
+
+    def per_feature(col: jax.Array, c: jax.Array) -> jax.Array:
+        b = jnp.searchsorted(c, col, side="left").astype(jnp.int32)
+        return jnp.where(jnp.isnan(col), jnp.int32(n_cuts + 1), b)
+
+    return jax.vmap(per_feature, in_axes=(1, 0), out_axes=1)(
+        x.astype(jnp.float32), cuts
+    )

@@ -1,0 +1,116 @@
+"""Split gain evaluation via parallel prefix sum (paper §2.3, EvaluateSplit).
+
+The paper computes split gain "by performing a scan over the gradient
+histogram ... achieved on the GPU with a parallel prefix sum operation".
+Here the scan is a cumulative sum over the bin axis (XLA lowers cumsum to a
+log-depth parallel scan); the fused Pallas version is kernels/split_scan.py.
+
+Sparsity awareness (XGBoost's default-direction learning, kept per DESIGN.md
+§7.4): the last bin of every feature is the *missing* bin. For each candidate
+threshold we evaluate both routings of the missing mass — missing-left and
+missing-right — and keep the better, recording the learned default direction.
+
+Gain formula (XGBoost objective, regularised):
+  gain = 1/2 [ GL^2/(HL+lam) + GR^2/(HR+lam) - G^2/(H+lam) ] - gamma
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SplitParams(NamedTuple):
+    reg_lambda: float = 1.0
+    gamma: float = 0.0
+    min_child_weight: float = 1.0
+
+
+class Splits(NamedTuple):
+    """Best split per node (level-local arrays of length n_nodes)."""
+
+    gain: jax.Array  # (n,) float32, -inf if no valid split
+    feature: jax.Array  # (n,) int32
+    split_bin: jax.Array  # (n,) int32: bin <= split_bin goes left
+    default_left: jax.Array  # (n,) bool: where missing values go
+    left_sum: jax.Array  # (n, 2) float32 (G, H) of the left child
+    right_sum: jax.Array  # (n, 2) float32
+
+
+def _leaf_gain(g: jax.Array, h: jax.Array, lam: float) -> jax.Array:
+    return (g * g) / (h + lam)
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def evaluate_splits(
+    hist: jax.Array,  # (n_nodes, n_features, max_bins, 2)
+    parent_sum: jax.Array,  # (n_nodes, 2) total (G, H) per node
+    params: SplitParams = SplitParams(),
+) -> Splits:
+    n_nodes, n_features, max_bins, _ = hist.shape
+    lam, gamma, mcw = params.reg_lambda, params.gamma, params.min_child_weight
+
+    g, h = hist[..., 0], hist[..., 1]  # (n, f, b)
+    g_tot = parent_sum[:, None, 0:1]  # (n, 1, 1)
+    h_tot = parent_sum[:, None, 1:2]
+    g_miss = g[..., -1:]  # missing bin mass (n, f, 1)
+    h_miss = h[..., -1:]
+
+    # Prefix sums over value bins (excluding the missing bin). Candidate
+    # threshold at value-bin b means: bin <= b goes left. The last value bin
+    # is excluded as a threshold (nothing would go right).
+    gl = jnp.cumsum(g[..., :-1], axis=-1)[..., :-1]  # (n, f, b-2)
+    hl = jnp.cumsum(h[..., :-1], axis=-1)[..., :-1]
+
+    parent = _leaf_gain(g_tot, h_tot, lam)
+
+    def direction_gain(gl_, hl_):
+        gr_, hr_ = g_tot - gl_, h_tot - hl_
+        gain = 0.5 * (
+            _leaf_gain(gl_, hl_, lam) + _leaf_gain(gr_, hr_, lam) - parent
+        ) - gamma
+        ok = (hl_ >= mcw) & (hr_ >= mcw)
+        return jnp.where(ok, gain, -jnp.inf), gr_, hr_
+
+    # missing-right: missing mass stays out of the left prefix.
+    gain_r, _, _ = direction_gain(gl, hl)
+    # missing-left: missing mass joins the left child.
+    gain_l, _, _ = direction_gain(gl + g_miss, hl + h_miss)
+
+    default_left = gain_l > gain_r
+    gain = jnp.maximum(gain_l, gain_r)  # (n, f, b-2)
+
+    flat = gain.reshape(n_nodes, -1)
+    best = jnp.argmax(flat, axis=1)
+    best_gain = jnp.take_along_axis(flat, best[:, None], axis=1)[:, 0]
+    n_thresh = max_bins - 2
+    best_f = (best // n_thresh).astype(jnp.int32)
+    best_b = (best % n_thresh).astype(jnp.int32)
+    best_dl = jnp.take_along_axis(
+        default_left.reshape(n_nodes, -1), best[:, None], axis=1
+    )[:, 0]
+
+    # Recompute child sums at the winning (feature, bin, direction).
+    nf = jnp.arange(n_nodes)
+    gl_w = jnp.cumsum(g[..., :-1], axis=-1)[nf, best_f, best_b]
+    hl_w = jnp.cumsum(h[..., :-1], axis=-1)[nf, best_f, best_b]
+    gl_w = gl_w + jnp.where(best_dl, g_miss[nf, best_f, 0], 0.0)
+    hl_w = hl_w + jnp.where(best_dl, h_miss[nf, best_f, 0], 0.0)
+    left_sum = jnp.stack([gl_w, hl_w], axis=-1)
+    right_sum = parent_sum - left_sum
+
+    return Splits(
+        gain=best_gain,
+        feature=best_f,
+        split_bin=best_b,
+        default_left=best_dl,
+        left_sum=left_sum,
+        right_sum=right_sum,
+    )
+
+
+def leaf_value(sum_gh: jax.Array, reg_lambda: float) -> jax.Array:
+    """Optimal leaf weight -G/(H+lambda). sum_gh (..., 2) -> (...)."""
+    return -sum_gh[..., 0] / (sum_gh[..., 1] + reg_lambda)

@@ -1,0 +1,250 @@
+"""Decision tree construction (paper §2.3, Algorithm 1), jit-compatible form.
+
+Algorithm 1 grows via a dynamic expand queue; data-dependent tree shapes
+cannot be traced, so we grow *level-synchronously* into a fixed arena of
+2^(max_depth+1) - 1 node slots (DESIGN.md §7.3). All nodes of a level are
+histogrammed in ONE fused build (the level-local node id joins the scatter
+index), which also batches the AllReduce — one collective per level instead
+of one per expand-queue entry (a beyond-paper win recorded in EXPERIMENTS.md).
+
+Growth strategies (the paper: "reconfigurable to prioritise expanding nodes
+with a higher reduction in the objective function or nodes closer to the
+root"):
+  * "depthwise"  — expand every node whose best gain > 0 (closer-to-root
+    priority is implied by level order);
+  * "lossguide"  — a max_leaves budget; within each level only the top-k
+    gains split, k = remaining leaf budget (gain-priority emulation).
+
+`axis_name`: when set, histograms are partial (this shard's rows) and are
+combined with jax.lax.psum — the paper's NCCL AllReduceHistograms.
+`extra_axes`: further mesh axes to reduce over (e.g. ("pod",)).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import histogram as H
+from repro.core import partition as P
+from repro.core import split as S
+
+
+class Tree(NamedTuple):
+    """Array-form tree arena (all arrays length 2^(max_depth+1) - 1)."""
+
+    feature: jax.Array  # int32
+    split_bin: jax.Array  # int32 (bin-space threshold: bin <= split_bin -> left)
+    threshold: jax.Array  # float32 (raw-space threshold: x <= threshold -> left)
+    default_left: jax.Array  # bool
+    leaf_value: jax.Array  # float32
+    is_leaf: jax.Array  # bool
+    gain: jax.Array  # float32 (split gain; for importances)
+
+    @property
+    def n_arena(self) -> int:
+        return self.feature.shape[0]
+
+
+def arena_size(max_depth: int) -> int:
+    return 2 ** (max_depth + 1) - 1
+
+
+def level_offset(level: int) -> int:
+    return 2**level - 1
+
+
+def grow_tree(
+    bins: jax.Array,  # (n, f) int32 quantised rows (this shard's rows)
+    gh: jax.Array,  # (n, 2) float32
+    cuts: jax.Array,  # (f, n_cuts) float32
+    max_depth: int,
+    max_bins: int,
+    params: S.SplitParams = S.SplitParams(),
+    growth: str = "depthwise",
+    max_leaves: int = 0,  # only used by lossguide
+    axis_name: str | None = None,
+    extra_axes: Sequence[str] = (),
+    feature_axis: str | None = None,
+    hist_builder=None,  # optional kernel-backed builder (kernels.ops)
+) -> Tree:
+    """When `feature_axis` is set (beyond-paper mode, DESIGN.md §3): `bins`
+    and `cuts` hold only this shard's feature slice; histograms stay
+    feature-local (1/p of the paper's AllReduce bytes move over the wire),
+    splits are evaluated feature-locally and the winner is chosen via an
+    all-gather of tiny per-node best-split records; row routing for a split
+    owned by another shard arrives via a psum'd route vector."""
+    n, f = bins.shape
+    na = arena_size(max_depth)
+    missing_bin = max_bins - 1
+    build = hist_builder or H.build_histograms
+
+    feature = jnp.zeros(na, jnp.int32)
+    split_bin = jnp.zeros(na, jnp.int32)
+    default_left = jnp.zeros(na, bool)
+    leaf_value = jnp.zeros(na, jnp.float32)
+    is_leaf = jnp.zeros(na, bool)
+    gain_arr = jnp.full(na, -jnp.inf, jnp.float32)
+    node_sum = jnp.zeros((na, 2), jnp.float32)
+
+    positions = jnp.zeros(n, jnp.int32)  # all rows start at the root
+    root_sum = jnp.sum(gh, axis=0)
+    if axis_name is not None:
+        root_sum = jax.lax.psum(root_sum, (axis_name, *extra_axes))
+    node_sum = node_sum.at[0].set(root_sum)
+    active = jnp.zeros(na, bool).at[0].set(True)
+    # lossguide leaf budget: a tree starts as 1 leaf; each split adds 1.
+    budget = jnp.asarray(max(max_leaves - 1, 0) if growth == "lossguide" else na)
+
+    for level in range(max_depth):
+        off = level_offset(level)
+        n_nodes = 2**level
+
+        # --- BuildPartialHistograms (per-shard rows) ---------------------
+        local = jnp.where(
+            (positions >= off) & (positions < off + n_nodes),
+            positions - off,
+            n_nodes,
+        ).astype(jnp.int32)
+        hist = build(bins, gh, local, n_nodes, max_bins)
+        # --- AllReduceHistograms (paper: NCCL; here: psum) ---------------
+        if axis_name is not None:
+            hist = jax.lax.psum(hist, (axis_name, *extra_axes))
+
+        # --- EvaluateSplit (prefix-sum scan over bins) -------------------
+        parent = jax.lax.dynamic_slice_in_dim(node_sum, off, n_nodes)
+        sp = S.evaluate_splits(hist, parent, params)
+        if feature_axis is not None:
+            sp = _combine_feature_shards(sp, f, feature_axis)
+
+        lvl_active = jax.lax.dynamic_slice_in_dim(active, off, n_nodes)
+        will_split = lvl_active & (sp.gain > 0.0) & jnp.isfinite(sp.gain)
+
+        if growth == "lossguide":
+            # Keep only the top-`budget` gains among would-be splits.
+            g = jnp.where(will_split, sp.gain, -jnp.inf)
+            order = jnp.argsort(-g)  # descending
+            rank = jnp.zeros(n_nodes, jnp.int32).at[order].set(
+                jnp.arange(n_nodes, dtype=jnp.int32)
+            )
+            will_split = will_split & (rank < budget)
+            budget = budget - jnp.sum(will_split)
+
+        idx = off + jnp.arange(n_nodes)
+        feature = feature.at[idx].set(jnp.where(will_split, sp.feature, 0))
+        split_bin = split_bin.at[idx].set(jnp.where(will_split, sp.split_bin, 0))
+        default_left = default_left.at[idx].set(will_split & sp.default_left)
+        gain_arr = gain_arr.at[idx].set(jnp.where(will_split, sp.gain, -jnp.inf))
+        is_leaf = is_leaf.at[idx].set(lvl_active & ~will_split)
+        leaf_value = leaf_value.at[idx].set(
+            jnp.where(lvl_active & ~will_split, S.leaf_value(parent, params.reg_lambda), 0.0)
+        )
+
+        # Children bookkeeping (sums come from the split evaluation — no
+        # extra pass over the data, mirroring the paper's histogram reuse).
+        lidx, ridx = 2 * idx + 1, 2 * idx + 2
+        node_sum = node_sum.at[lidx].set(jnp.where(will_split[:, None], sp.left_sum, 0.0))
+        node_sum = node_sum.at[ridx].set(jnp.where(will_split[:, None], sp.right_sum, 0.0))
+        active = active.at[lidx].set(will_split).at[ridx].set(will_split)
+
+        # --- RepartitionInstances ----------------------------------------
+        split_mask = jnp.zeros(na, bool).at[idx].set(will_split)
+        full_feature = jnp.zeros(na, jnp.int32).at[idx].set(feature[idx])
+        full_bin = jnp.zeros(na, jnp.int32).at[idx].set(split_bin[idx])
+        full_dl = jnp.zeros(na, bool).at[idx].set(default_left[idx])
+        if feature_axis is None:
+            positions = P.update_positions(
+                bins, positions, split_mask, full_feature, full_bin, full_dl,
+                missing_bin,
+            )
+        else:
+            positions = _update_positions_feature_sharded(
+                bins, positions, split_mask, full_feature, full_bin, full_dl,
+                missing_bin, f, feature_axis,
+            )
+
+    # Final level: every still-active node is a leaf.
+    off = level_offset(max_depth)
+    n_nodes = 2**max_depth
+    idx = off + jnp.arange(n_nodes)
+    lvl_active = jax.lax.dynamic_slice_in_dim(active, off, n_nodes)
+    parent = jax.lax.dynamic_slice_in_dim(node_sum, off, n_nodes)
+    is_leaf = is_leaf.at[idx].set(lvl_active)
+    leaf_value = leaf_value.at[idx].set(
+        jnp.where(lvl_active, S.leaf_value(parent, params.reg_lambda), 0.0)
+    )
+
+    # Raw-space thresholds for prediction on unquantised inputs.
+    if feature_axis is None:
+        threshold = cuts[feature, jnp.clip(split_bin, 0, cuts.shape[1] - 1)]
+    else:
+        my = jax.lax.axis_index(feature_axis)
+        f_loc = jnp.clip(feature - my * f, 0, f - 1)
+        owned = (feature // f) == my
+        thr_local = cuts[f_loc, jnp.clip(split_bin, 0, cuts.shape[1] - 1)]
+        threshold = jax.lax.psum(jnp.where(owned, thr_local, 0.0), feature_axis)
+    threshold = jnp.where(is_leaf, jnp.inf, threshold)
+
+    return Tree(
+        feature=feature,
+        split_bin=split_bin,
+        threshold=threshold,
+        default_left=default_left,
+        leaf_value=leaf_value,
+        is_leaf=is_leaf,
+        gain=gain_arr,
+    )
+
+
+def _combine_feature_shards(sp: S.Splits, f_local: int, feature_axis: str) -> S.Splits:
+    """Pick the global best split from feature-shard-local bests.
+
+    All-gathers only the per-node best-split records (a few bytes per node)
+    instead of full histograms — this is the collective-term optimisation
+    measured in EXPERIMENTS.md §Perf. Tie-break matches the single-shard
+    global argmax (lowest global feature id wins).
+    """
+    my = jax.lax.axis_index(feature_axis)
+    sp = sp._replace(feature=sp.feature + my * f_local)
+    g = jax.lax.all_gather(sp, feature_axis)  # every leaf gains axis 0 (p,)
+    win = jnp.argmax(g.gain, axis=0)  # (n_nodes,) first max = lowest shard
+
+    def take(arr):
+        w = win.reshape(win.shape + (1,) * (arr.ndim - 1 - win.ndim))
+        return jnp.take_along_axis(arr, w[None], axis=0)[0]
+
+    return S.Splits(*(take(x) for x in g))
+
+
+def _update_positions_feature_sharded(
+    bins: jax.Array,
+    positions: jax.Array,
+    split_mask: jax.Array,
+    feature: jax.Array,  # (n_arena,) GLOBAL feature ids
+    split_bin: jax.Array,
+    default_left: jax.Array,
+    missing_bin: int,
+    f_local: int,
+    feature_axis: str,
+) -> jax.Array:
+    """RepartitionInstances when the winning feature's bins may live on
+    another feature shard: the owner computes the route (1=left, 2=right)
+    and a psum broadcasts it to all shards (n_rows int32 per level)."""
+    my = jax.lax.axis_index(feature_axis)
+    pos = jnp.maximum(positions, 0)
+    active = positions >= 0
+    splits_here = split_mask[pos] & active
+
+    f_glob = feature[pos]
+    owned = (f_glob // f_local) == my
+    f_loc = jnp.clip(f_glob - my * f_local, 0, f_local - 1)
+    b = jnp.take_along_axis(bins, f_loc[:, None], axis=1)[:, 0]
+    go_left = jnp.where(b == missing_bin, default_left[pos], b <= split_bin[pos])
+    route = jnp.where(splits_here & owned, jnp.where(go_left, 1, 2), 0)
+    # int8 on the wire: exactly one shard contributes a nonzero (<=2) value,
+    # so the psum fits in int8 — 4x fewer routing bytes per level (§Perf
+    # GBDT iteration 2; routing dominates collectives for narrow matrices).
+    route = jax.lax.psum(route.astype(jnp.int8), feature_axis).astype(jnp.int32)
+    child = 2 * pos + route
+    return jnp.where(splits_here, child, -1).astype(jnp.int32)

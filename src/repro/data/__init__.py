@@ -1,0 +1,6 @@
+"""Data pipeline: synthetic generators for the paper's six benchmark
+datasets (Table 1 shapes) and a deterministic LM token stream."""
+from repro.data.datasets import DATASETS, DatasetSpec, dataset_spec, make_dataset
+from repro.data.tokens import TokenStream
+
+__all__ = ["DATASETS", "DatasetSpec", "dataset_spec", "make_dataset", "TokenStream"]

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+histogram   — gradient histogram build from the bit-packed matrix
+              (one-hot MXU matmul replacing CUDA atomicAdd, DESIGN.md §4)
+split_scan  — fused prefix-sum split-gain evaluation
+decompress  — runtime bit-unpack of the compressed matrix
+
+Each has a pure-jnp oracle in ref.py and a jit wrapper in ops.py; validated
+with interpret=True on CPU (TPU is the target).
+"""

@@ -1,0 +1,50 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+`build_histograms_kernel` matches core.histogram.build_histograms'
+signature so it can slot into grow_tree(hist_builder=...) — this is what
+BoosterConfig(use_kernel_histograms=True) routes through.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compress as C
+from repro.kernels.histogram import histogram_packed
+from repro.kernels.split_scan import split_scan
+from repro.kernels.decompress import decompress
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "max_bins", "bits"))
+def histogram_packed_op(packed, gh, positions, n_nodes: int, max_bins: int, bits: int):
+    return histogram_packed(packed, gh, positions, n_nodes, max_bins, bits)
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "max_bins"))
+def build_histograms_kernel(
+    bins: jax.Array,  # (n, f) int32 (already unpacked upstream)
+    gh: jax.Array,
+    positions: jax.Array,
+    n_nodes: int,
+    max_bins: int,
+) -> jax.Array:
+    """Drop-in for core.histogram.build_histograms via the Pallas kernel.
+
+    Re-packs the bins (cheap, fused by XLA) so the kernel exercises the
+    same unpack-in-VMEM path it runs on TPU.
+    """
+    bits = C.bits_needed(max_bins - 1)
+    packed = C.pack(bins, bits)
+    return histogram_packed(packed, gh, positions, n_nodes, max_bins, bits)
+
+
+@functools.partial(jax.jit, static_argnames=("reg_lambda", "min_child_weight"))
+def split_scan_op(hist, parent_sum, reg_lambda: float = 1.0, min_child_weight: float = 1.0):
+    return split_scan(hist, parent_sum, reg_lambda, min_child_weight)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "n_rows"))
+def decompress_op(packed, bits: int, n_rows: int):
+    return decompress(packed, bits, n_rows)

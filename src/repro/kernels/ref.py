@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's tests sweep shapes/dtypes and assert_allclose against these.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import histogram as H
+from repro.core.compress import unpack as _unpack
+
+
+def histogram_ref(
+    packed: jax.Array,  # (F, W) uint32
+    gh: jax.Array,  # (N, 2) float32
+    positions: jax.Array,  # (N,) int32, n_nodes = inactive/dump
+    n_nodes: int,
+    max_bins: int,
+    bits: int,
+) -> jax.Array:
+    """Oracle for kernels.histogram: unpack then scatter-add."""
+    n = gh.shape[0]
+    bins = _unpack(packed, bits, n)
+    return H.build_histograms(bins, gh, positions, n_nodes, max_bins)
+
+
+def decompress_ref(packed: jax.Array, bits: int, n_rows: int) -> jax.Array:
+    """Oracle for kernels.decompress (= core.compress.unpack)."""
+    return _unpack(packed, bits, n_rows)
+
+
+def split_scan_ref(
+    hist: jax.Array,  # (n_nodes, F, B, 2)
+    parent_sum: jax.Array,  # (n_nodes, 2)
+    reg_lambda: float,
+    min_child_weight: float,
+) -> jax.Array:
+    """Oracle for kernels.split_scan: per-(node, feature) best split.
+
+    Returns (n_nodes, F, 4): [gain, best_bin, default_left, hl_at_best].
+    Mirrors core.split.evaluate_splits' per-feature inner computation
+    (gamma is applied by the caller; it is a constant shift).
+    """
+    g, h = hist[..., 0], hist[..., 1]
+    g_tot = parent_sum[:, None, 0:1]
+    h_tot = parent_sum[:, None, 1:2]
+    g_miss, h_miss = g[..., -1:], h[..., -1:]
+
+    gl = jnp.cumsum(g[..., :-1], axis=-1)[..., :-1]
+    hl = jnp.cumsum(h[..., :-1], axis=-1)[..., :-1]
+
+    def gain_of(gl_, hl_):
+        gr_, hr_ = g_tot - gl_, h_tot - hl_
+        gain = (
+            gl_**2 / (hl_ + reg_lambda)
+            + gr_**2 / (hr_ + reg_lambda)
+            - g_tot**2 / (h_tot + reg_lambda)
+        ) * 0.5
+        ok = (hl_ >= min_child_weight) & (hr_ >= min_child_weight)
+        return jnp.where(ok, gain, -jnp.inf)
+
+    gain_r = gain_of(gl, hl)
+    gain_l = gain_of(gl + g_miss, hl + h_miss)
+    dl = gain_l > gain_r
+    gain = jnp.maximum(gain_l, gain_r)  # (n, F, B-2)
+
+    best = jnp.argmax(gain, axis=-1)  # (n, F)
+    bg = jnp.take_along_axis(gain, best[..., None], axis=-1)[..., 0]
+    bdl = jnp.take_along_axis(dl, best[..., None], axis=-1)[..., 0]
+    hl_best = jnp.take_along_axis(hl, best[..., None], axis=-1)[..., 0]
+    hl_best = hl_best + jnp.where(bdl, h_miss[..., 0], 0.0)
+    return jnp.stack(
+        [bg, best.astype(jnp.float32), bdl.astype(jnp.float32), hl_best], axis=-1
+    )

@@ -1,0 +1,247 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input shape) pair, jit the step function with the
+production in/out shardings, .lower() it with ShapeDtypeStruct stand-ins
+(no allocation), .compile() it for the 16x16 single-pod mesh or the
+2x16x16 multi-pod mesh, and record:
+
+  * compiled.memory_analysis()       (fits-on-chip evidence)
+  * compiled.cost_analysis()         (XLA's own counters, body-once caveat)
+  * hlo_analysis.analyze()           (loop-corrected per-device dot FLOPs,
+                                      dot bytes, collective bytes by type)
+  * derived roofline terms           (197 TF bf16, 819 GB/s HBM, 50 GB/s link)
+
+Usage:
+  python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+
+NOTE the XLA_FLAGS line above MUST precede any jax import (device count is
+locked at first init); this module is the only place it is set.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, get_arch
+from repro.launch import specs as SP
+from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.models.config import SHAPES, ArchConfig, ShapeConfig
+from repro.optimizer import AdamWConfig, adamw_init, adamw_update
+
+PEAK_FLOPS = 197e12  # bf16 per chip (TPU v5e)
+HBM_BW = 819e9  # bytes/s per chip
+LINK_BW = 50e9  # bytes/s per ICI link
+
+
+def count_params(struct) -> int:
+    import math
+
+    return sum(math.prod(x.shape) for x in jax.tree.leaves(struct))
+
+
+def active_params(cfg: ArchConfig, total: int) -> int:
+    if not cfg.n_experts:
+        return total
+    moe_part = cfg.n_layers * 3 * cfg.n_experts * cfg.d_model * cfg.d_ff
+    return total - moe_part + moe_part * cfg.top_k // cfg.n_experts
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig, n_active: int) -> float:
+    """6*N*D (train) / 2*N*D (inference) global useful FLOPs."""
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    factor = 6.0 if shape.kind == "train" else 2.0
+    return factor * n_active * tokens
+
+
+def build_step(model, cfg: ArchConfig, shape: ShapeConfig, mesh):
+    """Returns (fn, arg_structs, in_shardings)."""
+    rules = SP.rules_for(mesh, shape)
+    batch_structs = SP.input_specs(cfg, shape)
+    batch_specs = SP.batch_partition_specs(cfg, shape, rules)
+    ns = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    params_struct = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    pspecs = model.param_specs()
+
+    if shape.kind == "train":
+        acfg = AdamWConfig()
+        opt_struct = jax.eval_shape(adamw_init, params_struct)
+        ospecs = type(opt_struct)(step=P(), m=pspecs, v=pspecs)
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: model.loss_fn(p, batch, rules)
+            )(params)
+            new_params, new_opt = adamw_update(params, grads, opt_state, acfg)
+            return new_params, new_opt, loss
+
+        return (
+            train_step,
+            (params_struct, opt_struct, batch_structs),
+            (ns(pspecs), ns(ospecs), ns(batch_specs)),
+        )
+
+    if shape.kind == "prefill":
+
+        def prefill_step(params, batch):
+            return model.forward_logits(params, batch, rules)
+
+        return prefill_step, (params_struct, batch_structs), (ns(pspecs), ns(batch_specs))
+
+    # decode
+    cap = SP.cache_capacity(cfg, shape)
+    cache_struct = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, cap, jnp.bfloat16)
+    )
+    cspecs = model.cache_specs(rules)
+    idx_struct = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def decode_step(params, batch, cache, index):
+        return model.decode_fn(params, batch, cache, index, rules)
+
+    return (
+        decode_step,
+        (params_struct, batch_structs, cache_struct, idx_struct),
+        (ns(pspecs), ns(batch_specs), ns(cspecs), NamedSharding(mesh, P())),
+    )
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str) -> dict:
+    base_cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = SP.supports_shape(base_cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            with open(os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.json"), "w") as f:
+                json.dump(rec, f, indent=1)
+        return rec
+
+    cfg = SP.cfg_for_shape(base_cfg, shape)
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+
+    t0 = time.perf_counter()
+    try:
+        fn, structs, shardings = build_step(model, cfg, shape, mesh)
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(fn, in_shardings=shardings).lower(*structs)
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = analyze(compiled.as_text())
+
+        n_total = count_params(jax.eval_shape(model.init_params, jax.random.PRNGKey(0)))
+        n_active = active_params(cfg, n_total)
+        mf = model_flops(cfg, shape, n_active)
+        flops_dev = hlo["dot_flops_per_device"]
+        bytes_dev = hlo["dot_bytes_per_device"]
+        coll_dev = hlo["collective_bytes_total"]
+
+        compute_s = flops_dev / PEAK_FLOPS
+        memory_s = bytes_dev / HBM_BW
+        collective_s = coll_dev / LINK_BW
+        dominant = max(
+            [("compute", compute_s), ("memory", memory_s), ("collective", collective_s)],
+            key=lambda kv: kv[1],
+        )[0]
+
+        rec.update(
+            status="ok",
+            chips=int(chips),
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            params_total=int(n_total),
+            params_active=int(n_active),
+            memory_analysis={
+                "argument_bytes": int(mem.argument_size_in_bytes),
+                "output_bytes": int(mem.output_size_in_bytes),
+                "temp_bytes": int(mem.temp_size_in_bytes),
+                "alias_bytes": int(mem.alias_size_in_bytes),
+                "peak_hbm_bytes_est": int(
+                    mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                    + mem.output_size_in_bytes - mem.alias_size_in_bytes
+                ),
+            },
+            cost_analysis={
+                "flops_body_once": float(ca.get("flops", 0.0)),
+                "bytes_accessed_body_once": float(ca.get("bytes accessed", 0.0)),
+            },
+            hlo=hlo,
+            roofline={
+                "compute_s": compute_s,
+                "memory_s": memory_s,
+                "collective_s": collective_s,
+                "dominant": dominant,
+                "model_flops_global": mf,
+                "model_flops_per_device": mf / chips,
+                "useful_flops_ratio": (mf / chips) / flops_dev if flops_dev else 0.0,
+            },
+        )
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    pairs = (
+        [(a, s) for a in ARCHS for s in SHAPES]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch, shape in pairs:
+        for mp in meshes:
+            rec = run_one(arch, shape, mp, args.out)
+            r = rec.get("roofline", {})
+            print(
+                f"{rec['arch']:26s} {rec['shape']:12s} {rec['mesh']:10s} "
+                f"{rec['status']:8s} "
+                + (
+                    f"compile={rec['compile_s']:7.1f}s dom={r['dominant']:10s} "
+                    f"c/m/coll={r['compute_s']:.2e}/{r['memory_s']:.2e}/{r['collective_s']:.2e} "
+                    f"useful={r['useful_flops_ratio']:.2f}"
+                    if rec["status"] == "ok"
+                    else rec.get("reason", rec.get("error", ""))[:120]
+                ),
+                flush=True,
+            )
+
+
+if __name__ == "__main__":
+    main()

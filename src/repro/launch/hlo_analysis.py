@@ -1,0 +1,174 @@
+"""Post-SPMD HLO text analysis for the roofline (EXPERIMENTS.md §Roofline).
+
+Why not compiled.cost_analysis() alone: XLA's HloCostAnalysis visits while
+bodies ONCE, so a scanned 62-layer model reports ~1 layer of FLOPs.
+This module parses compiled.as_text() (the optimized, partitioned HLO):
+
+  * builds a name -> shape table from op definitions,
+  * counts matmul FLOPs from `dot` / `convolution` ops,
+  * sums collective bytes from all-reduce / all-gather / reduce-scatter /
+    all-to-all / collective-permute result shapes,
+  * attributes ops to their computation and multiplies every while body's
+    counts by the loop trip count recovered from the loop condition's
+    comparison constant (nested whiles multiply through).
+
+All counts are PER DEVICE (the HLO is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _parse_shape(text: str):
+    """First shape in `text` -> (dtype, dims) or None. Handles tuples by
+    returning the list of all component shapes."""
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(x) for x in dims.split(",")] if dims else []))
+    return out
+
+
+def _nbytes(shapes) -> int:
+    tot = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        tot += n * _DTYPE_BYTES[dt]
+    return tot
+
+
+@dataclass
+class ComputationStats:
+    name: str
+    dot_flops: float = 0.0
+    dot_bytes: float = 0.0  # lhs + rhs + out of every dot (HBM-traffic proxy)
+    collective_bytes: dict = field(default_factory=dict)
+    whiles: list = field(default_factory=list)  # (body, cond) computation names
+    called: list = field(default_factory=list)  # fusions etc. (not multiplied)
+    max_constant: int = 0  # used when this computation is a loop condition
+
+
+def parse_hlo(text: str) -> dict[str, ComputationStats]:
+    comps: dict[str, ComputationStats] = {}
+    cur: ComputationStats | None = None
+    shapes: dict[str, list] = {}
+
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        # computation header: `%name (params...) -> ... {` or `ENTRY %name ...{`
+        header = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{", line)
+        if header and not line.lstrip().startswith(("ROOT", "//")) and "=" not in line.split("(")[0]:
+            cur = ComputationStats(name=header.group(1))
+            if line.startswith("ENTRY"):
+                cur.name = "ENTRY"
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        res_shapes = _parse_shape(rhs.split("(")[0] if "(" in rhs else rhs)
+        if res_shapes:
+            shapes[name] = res_shapes
+
+        # constants (for loop trip counts)
+        cm = re.search(r"constant\((\d+)\)", rhs)
+        if cm:
+            cur.max_constant = max(cur.max_constant, int(cm.group(1)))
+
+        # while ops
+        wm = re.search(r"\bwhile\(", rhs)
+        if wm:
+            bm = re.search(r"body=%?([\w.\-]+)", rhs)
+            cm2 = re.search(r"condition=%?([\w.\-]+)", rhs)
+            if bm and cm2:
+                cur.whiles.append((bm.group(1), cm2.group(1)))
+
+        # dot ops: flops = 2 * prod(result dims) * contracted size
+        dm = re.search(r"\bdot\(\s*%?([\w.\-]+),\s*%?([\w.\-]+)\)", rhs)
+        if dm and res_shapes:
+            lhs_name = dm.group(1)
+            lcd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+            k = 1
+            lhs_shapes = shapes.get(lhs_name)
+            if lcd and lhs_shapes:
+                dims = lhs_shapes[0][1]
+                for di in (int(x) for x in lcd.group(1).split(",") if x):
+                    if di < len(dims):
+                        k *= dims[di]
+            res_elems = 1
+            for d in res_shapes[0][1]:
+                res_elems *= d
+            cur.dot_flops += 2.0 * res_elems * k
+            operand_bytes = sum(
+                _nbytes(shapes.get(dm.group(i), [])) for i in (1, 2)
+            )
+            cur.dot_bytes += _nbytes(res_shapes) + operand_bytes
+
+        # collectives: bytes = result size
+        for cname in _COLLECTIVES:
+            if re.search(rf"\b{cname}(?:-start|-done)?\(", rhs):
+                if cname + "-done(" in rhs:
+                    continue  # avoid double count of async pairs
+                b = _nbytes(res_shapes)
+                cur.collective_bytes[cname] = cur.collective_bytes.get(cname, 0) + b
+                break
+    return comps
+
+
+def _trip_count(cond_name: str, comps: dict[str, ComputationStats]) -> int:
+    cond = comps.get(cond_name)
+    return max(cond.max_constant, 1) if cond else 1
+
+
+def aggregate(comps: dict[str, ComputationStats]):
+    """Fold while bodies into their callers with trip-count multipliers."""
+
+    def total(name: str, mult: float, seen: frozenset):
+        if name not in comps or name in seen:
+            return 0.0, 0.0, {}
+        c = comps[name]
+        flops = c.dot_flops * mult
+        dbytes = c.dot_bytes * mult
+        coll = {k: v * mult for k, v in c.collective_bytes.items()}
+        for body, cond in c.whiles:
+            n = _trip_count(cond, comps)
+            f2, b2, c2 = total(body, mult * n, seen | {name})
+            flops += f2
+            dbytes += b2
+            for k, v in c2.items():
+                coll[k] = coll.get(k, 0) + v
+        return flops, dbytes, coll
+
+    return total("ENTRY", 1.0, frozenset())
+
+
+def analyze(compiled_text: str) -> dict:
+    comps = parse_hlo(compiled_text)
+    flops, dot_bytes, coll = aggregate(comps)
+    return {
+        "dot_flops_per_device": flops,
+        "dot_bytes_per_device": dot_bytes,
+        "collective_bytes_per_device": coll,
+        "collective_bytes_total": sum(coll.values()),
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,7 @@
+"""Assigned-architecture substrate: dense/MoE/SSM/hybrid/enc-dec backbones
+with scan-over-layers, GSPMD sharding specs, train + prefill + decode paths."""
+from repro.models.api import Model, build_model, NO_SHARDING, ShardingRules
+from repro.models.config import ArchConfig, ShapeConfig, SHAPES
+
+__all__ = ["Model", "build_model", "NO_SHARDING", "ShardingRules",
+           "ArchConfig", "ShapeConfig", "SHAPES"]

@@ -1,0 +1,156 @@
+"""Unified model interface over the five backbone families.
+
+build_model(cfg) returns a Model whose functions all take/return plain
+pytrees so the launcher can jit them with explicit in/out shardings:
+
+  init_params(key)                -> params
+  param_specs()                   -> PartitionSpec pytree (mirrors params)
+  loss_fn(params, batch, rules)   -> scalar (train step objective)
+  forward_logits(params, batch, rules) -> logits (prefill / eval)
+  init_cache(batch, capacity)     -> decode cache pytree
+  cache_specs(rules)              -> PartitionSpec pytree for the cache
+  decode_fn(params, batch, cache, index, rules) -> (logits, new_cache)
+
+batch keys by family: tokens/targets (all), prefix_embeds (vlm),
+src_embeds (audio/encdec).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models import encdec as ED
+from repro.models import hybrid as HY
+from repro.models import ssm_model as SM
+from repro.models import transformer as TF
+from repro.models.transformer import NO_SHARDING, ShardingRules  # re-export
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init_params: Callable
+    param_specs: Callable
+    loss_fn: Callable
+    forward_logits: Callable
+    init_cache: Callable
+    cache_specs: Callable
+    decode_fn: Callable
+    supports_decode: bool = True
+
+
+def _tf_model(cfg: ArchConfig) -> Model:
+    def loss(params, batch, rules):
+        return TF.loss_fn(params, batch, cfg, rules)
+
+    def fwd(params, batch, rules):
+        logits, _ = TF.forward(
+            params, batch["tokens"], cfg, rules,
+            prefix_embeds=batch.get("prefix_embeds"),
+        )
+        return logits
+
+    def dec(params, batch, cache, index, rules):
+        return TF.decode_step(params, batch["tokens"], cache, index, cfg, rules)
+
+    return Model(
+        cfg=cfg,
+        init_params=lambda key: TF.init_params(cfg, key),
+        param_specs=lambda m="model": TF.param_specs(cfg, m),
+        loss_fn=loss,
+        forward_logits=fwd,
+        init_cache=lambda b, cap, dtype=jnp.bfloat16: TF.init_cache(cfg, b, cap, dtype),
+        cache_specs=lambda rules: TF.cache_specs(cfg, rules),
+        decode_fn=dec,
+    )
+
+
+def _ssm_model(cfg: ArchConfig) -> Model:
+    def loss(params, batch, rules):
+        logits, _ = SM.forward(params, batch["tokens"], cfg, rules)
+        return TF.xent_loss(logits, batch["targets"])
+
+    def fwd(params, batch, rules):
+        return SM.forward(params, batch["tokens"], cfg, rules)[0]
+
+    def dec(params, batch, cache, index, rules):
+        return SM.decode_step(params, batch["tokens"], cache, index, cfg, rules)
+
+    return Model(
+        cfg=cfg,
+        init_params=lambda key: SM.init_params(cfg, key),
+        param_specs=lambda m="model": SM.param_specs(cfg, m),
+        loss_fn=loss,
+        forward_logits=fwd,
+        init_cache=lambda b, cap=0, dtype=jnp.bfloat16: SM.init_cache(cfg, b, cap, dtype),
+        cache_specs=lambda rules: SM.cache_specs(cfg, rules),
+        decode_fn=dec,
+    )
+
+
+def _hybrid_model(cfg: ArchConfig) -> Model:
+    def loss(params, batch, rules):
+        logits, _ = HY.forward(params, batch["tokens"], cfg, rules)
+        return TF.xent_loss(logits, batch["targets"])
+
+    def fwd(params, batch, rules):
+        return HY.forward(params, batch["tokens"], cfg, rules)[0]
+
+    def dec(params, batch, cache, index, rules):
+        return HY.decode_step(params, batch["tokens"], cache, index, cfg, rules)
+
+    return Model(
+        cfg=cfg,
+        init_params=lambda key: HY.init_params(cfg, key),
+        param_specs=lambda m="model": HY.param_specs(cfg, m),
+        loss_fn=loss,
+        forward_logits=fwd,
+        init_cache=lambda b, cap, dtype=jnp.bfloat16: HY.init_cache(cfg, b, cap, dtype),
+        cache_specs=lambda rules: HY.cache_specs(cfg, rules),
+        decode_fn=dec,
+    )
+
+
+def _encdec_model(cfg: ArchConfig) -> Model:
+    def loss(params, batch, rules):
+        logits, _ = ED.forward(params, batch, cfg, rules)
+        return TF.xent_loss(logits, batch["targets"])
+
+    def fwd(params, batch, rules):
+        return ED.forward(params, batch, cfg, rules)[0]
+
+    def dec(params, batch, cache, index, rules):
+        # Serving precomputes the encoder output once per request
+        # (batch["enc_out"]); falls back to encoding src_embeds inline.
+        enc_out = batch.get("enc_out")
+        if enc_out is None:
+            enc_out = ED.encode(params, batch["src_embeds"], cfg, rules)
+        return ED.decode_step(
+            params, batch["tokens"], cache, index, enc_out, cfg, rules
+        )
+
+    return Model(
+        cfg=cfg,
+        init_params=lambda key: ED.init_params(cfg, key),
+        param_specs=lambda m="model": ED.param_specs(cfg, m),
+        loss_fn=loss,
+        forward_logits=fwd,
+        init_cache=lambda b, cap, dtype=jnp.bfloat16: ED.init_cache(cfg, b, cap, dtype),
+        cache_specs=lambda rules: ED.cache_specs(cfg, rules),
+        decode_fn=dec,
+    )
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.arch_type in ("dense", "moe", "vlm"):
+        return _tf_model(cfg)
+    if cfg.arch_type == "ssm":
+        return _ssm_model(cfg)
+    if cfg.arch_type == "hybrid":
+        return _hybrid_model(cfg)
+    if cfg.arch_type in ("encdec", "audio"):
+        return _encdec_model(cfg)
+    raise ValueError(f"unknown arch_type {cfg.arch_type}")

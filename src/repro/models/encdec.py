@@ -1,0 +1,189 @@
+"""Encoder-decoder backbone (seamless-m4t style, arXiv:2308.11596).
+
+The audio frontend (mel-spectrogram + conv feature extractor) is a STUB per
+the brief: input_specs() provides precomputed frame embeddings (B, S_src, D)
+that feed the encoder directly (with a learned input projection). The text
+decoder is a causal transformer with cross-attention to the encoder output.
+
+Encoder: bidirectional self-attention (no causal mask, no RoPE offset
+games — standard rope over source positions). Decoder: causal self-attn
+(KV cache for decode) + cross-attn (encoder output is static during decode,
+so only self-attn is cached and the cross-attn K/V are precomputed once).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig
+from repro.models.layers import BF16, _sdpa, dot, dot_f32, dot_tp_out, rmsnorm
+from repro.models import transformer as TF
+
+
+def _cross_attn(x, enc_kv, p, *, n_heads, n_kv_heads, head_dim):
+    """Cross attention: queries from decoder x, keys/values precomputed from
+    the encoder output (no mask, no rope)."""
+    b, s, _ = x.shape
+    q = dot(x, p["wq"]).reshape(b, s, n_heads, head_dim)
+    out = _sdpa(q, enc_kv["k"], enc_kv["v"], jnp.ones((), bool))
+    return dot_tp_out(out.reshape(b, s, n_heads * head_dim), p["wo"])
+
+
+def cross_kv(enc_out, p, *, n_kv_heads, head_dim):
+    b, t, _ = enc_out.shape
+    k = dot(enc_out, p["wk"]).reshape(b, t, n_kv_heads, head_dim)
+    v = dot(enc_out, p["wv"]).reshape(b, t, n_kv_heads, head_dim)
+    return {"k": k, "v": v}
+
+
+def init_dec_layer(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    base = TF.init_layer_params(k1, cfg)
+    base["ln_x"] = jnp.ones((cfg.d_model,), jnp.float32)
+    base["cross"] = TF.init_attn_params(k2, cfg)
+    return base
+
+
+def init_params(cfg: ArchConfig, key):
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "src_proj": TF._glorot(ks[2], (cfg.d_model, cfg.d_model)),
+        "enc_layers": jax.vmap(lambda k: TF.init_layer_params(k, cfg))(enc_keys),
+        "enc_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "embed": TF._glorot(ks[3], (cfg.padded_vocab, cfg.d_model)),
+        "dec_layers": jax.vmap(lambda k: init_dec_layer(k, cfg))(dec_keys),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": TF._glorot(ks[4], (cfg.d_model, cfg.padded_vocab)),
+    }
+
+
+def param_specs(cfg: ArchConfig, m: str = "model"):
+    dec = TF.layer_param_specs(cfg, m, stacked=True)
+    dec["ln_x"] = P(None, None)
+    dec["cross"] = jax.tree.map(
+        lambda s: P(None, *s), TF.attn_param_specs(cfg, m),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return {
+        "src_proj": P(None, None),
+        "enc_layers": TF.layer_param_specs(cfg, m, stacked=True),
+        "enc_norm": P(None),
+        "embed": P(m, None),
+        "dec_layers": dec,
+        "final_norm": P(None),
+        "lm_head": P(None, m),
+    }
+
+
+def encode(params, src_embeds, cfg: ArchConfig, rules: TF.ShardingRules):
+    x = dot(src_embeds.astype(BF16), params["src_proj"])
+    positions = jnp.arange(x.shape[1])[None, :]
+    x = TF._constrain(x, rules.act(), rules)
+
+    def body(carry, lp):
+        h = rmsnorm(carry, lp["ln1"], cfg.norm_eps)
+        from repro.models.layers import attention_gqa
+
+        attn_out, _ = attention_gqa(
+            h, lp["attn"], n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+            positions=positions, causal=False,
+        )
+        y = carry + attn_out
+        h = rmsnorm(y, lp["ln2"], cfg.norm_eps)
+        ffn = dot_tp_out(
+            jax.nn.silu(dot(h, lp["ffn"]["w_gate"])) * dot(h, lp["ffn"]["w_up"]),
+            lp["ffn"]["w_down"],
+        )
+        y = TF._constrain(y + ffn, rules.act(), rules)
+        return y, None
+
+    if cfg.remat:
+        policy = (None if cfg.remat_policy == "full"
+                  else getattr(jax.checkpoint_policies, cfg.remat_policy))
+        body = jax.checkpoint(body, policy=policy)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_layer(x, lp, enc_kv, cfg, positions, rules, cache=None, cache_index=None):
+    h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    from repro.models.layers import attention_gqa
+
+    attn_out, new_cache = attention_gqa(
+        h, lp["attn"], n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+        positions=positions, cache=cache, cache_index=cache_index,
+    )
+    x = x + attn_out
+    h = rmsnorm(x, lp["ln_x"], cfg.norm_eps)
+    x = x + _cross_attn(
+        h, enc_kv, lp["cross"], n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+    )
+    h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    ffn = dot_tp_out(
+        jax.nn.silu(dot(h, lp["ffn"]["w_gate"])) * dot(h, lp["ffn"]["w_up"]),
+        lp["ffn"]["w_down"],
+    )
+    x = TF._constrain(x + ffn, rules.act(), rules)
+    return x, new_cache
+
+
+def forward(params, batch, cfg: ArchConfig, rules: TF.ShardingRules):
+    """Training/prefill forward. batch: src_embeds (B,Ss,D), tokens (B,St)."""
+    enc_out = encode(params, batch["src_embeds"], cfg, rules)
+    x = params["embed"][batch["tokens"]].astype(BF16)
+    positions = jnp.arange(x.shape[1])[None, :]
+    x = TF._constrain(x, rules.act(), rules)
+
+    def body(carry, lp):
+        ekv = cross_kv(enc_out, lp["cross"], n_kv_heads=cfg.n_kv_heads,
+                       head_dim=cfg.resolved_head_dim)
+        y, _ = _dec_layer(carry, lp, ekv, cfg, positions, rules)
+        return y, None
+
+    if cfg.remat:
+        policy = (None if cfg.remat_policy == "full"
+                  else getattr(jax.checkpoint_policies, cfg.remat_policy))
+        body = jax.checkpoint(body, policy=policy)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return dot_f32(x, params["lm_head"]), {}
+
+
+def init_cache(cfg: ArchConfig, batch: int, capacity: int, dtype=jnp.bfloat16):
+    k, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, capacity, k, hd), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, capacity, k, hd), dtype),
+    }
+
+
+def cache_specs(cfg: ArchConfig, rules: TF.ShardingRules):
+    return {
+        "k": P(None, rules.batch, rules.seq, None, None),
+        "v": P(None, rules.batch, rules.seq, None, None),
+    }
+
+
+def decode_step(params, token, cache, cache_index, enc_out,
+                cfg: ArchConfig, rules: TF.ShardingRules):
+    """One decode step; enc_out (B, Ss, D) precomputed by encode()."""
+    x = params["embed"][token].astype(BF16)
+    positions = jnp.full((1, 1), cache_index, jnp.int32)
+
+    def body(carry, inp):
+        lp, lc = inp
+        ekv = cross_kv(enc_out, lp["cross"], n_kv_heads=cfg.n_kv_heads,
+                       head_dim=cfg.resolved_head_dim)
+        y, nc = _dec_layer(carry, lp, ekv, cfg, positions, rules,
+                           cache=lc, cache_index=cache_index)
+        return y, nc
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_layers"], cache))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return dot_f32(x, params["lm_head"]), new_cache

@@ -1,0 +1,211 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared attention block applied
+every `attn_every` layers (arXiv:2411.15242).
+
+The shared block's weights are a single copy (zamba2's parameter-efficiency
+trick); each *application* keeps its own KV cache. Layer params are stacked
+(G, A, ...) — G groups of A mamba layers — so the forward is an outer scan
+over groups (inner scan over mamba layers + one shared-attn call), keeping
+the HLO at one mamba body + one attention body total.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig
+from repro.models.layers import BF16, dot, dot_f32, rmsnorm
+from repro.models import ssm as SSM
+from repro.models import transformer as TF
+
+
+def _group_shape(cfg: ArchConfig) -> tuple[int, int, int]:
+    a = cfg.attn_every
+    g = cfg.n_layers // a
+    rest = cfg.n_layers - g * a
+    return g, a, rest
+
+
+def init_params(cfg: ArchConfig, key):
+    g, a, rest = _group_shape(cfg)
+    ks = jax.random.split(key, 6)
+    group_keys = jax.random.split(ks[0], g * a).reshape(g, a, 2)
+    groups = jax.vmap(
+        jax.vmap(lambda k: SSM.init_mamba2_params(k, cfg))
+    )(group_keys)
+    mamba_norms = {
+        "groups": jnp.ones((g, a, cfg.d_model), jnp.float32),
+        "rest": jnp.ones((rest, cfg.d_model), jnp.float32),
+    }
+    rest_keys = jax.random.split(ks[1], max(rest, 1))[:rest].reshape(rest, 2)
+    rest_p = jax.vmap(lambda k: SSM.init_mamba2_params(k, cfg))(rest_keys) if rest else None
+    params = {
+        "embed": TF._glorot(ks[2], (cfg.padded_vocab, cfg.d_model)),
+        "mamba_groups": groups,
+        "mamba_norms": mamba_norms,
+        "shared_attn": TF.init_layer_params(ks[3], cfg),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": TF._glorot(ks[4], (cfg.d_model, cfg.padded_vocab)),
+    }
+    if rest:
+        params["mamba_rest"] = rest_p
+    return params
+
+
+def param_specs(cfg: ArchConfig, m: str = "model"):
+    g, a, rest = _group_shape(cfg)
+    mspec = SSM.mamba2_param_specs(m)
+    grp = jax.tree.map(lambda s: P(None, None, *s), mspec,
+                       is_leaf=lambda x: isinstance(x, P))
+    specs = {
+        "embed": P(m, None),
+        "mamba_groups": grp,
+        "mamba_norms": {"groups": P(None, None, None), "rest": P(None, None)},
+        "shared_attn": TF.layer_param_specs(cfg, m, stacked=False),
+        "final_norm": P(None),
+        "lm_head": P(None, m),
+    }
+    if rest:
+        specs["mamba_rest"] = jax.tree.map(
+            lambda s: P(None, *s), mspec, is_leaf=lambda x: isinstance(x, P)
+        )
+    return specs
+
+
+def _mamba_layer(x, lp, norm_w, cfg, rules, cache=None):
+    h = rmsnorm(x, norm_w, cfg.norm_eps)
+    out, new_cache = SSM.mamba2_block(h, lp, cfg, cache=cache)
+    x = x + out
+    return TF._constrain(x, rules.act(), rules), new_cache
+
+
+def forward(params, tokens, cfg: ArchConfig, rules: TF.ShardingRules,
+            prefix_embeds=None, window: int | None = None):
+    g, a, rest = _group_shape(cfg)
+    w = cfg.sliding_window if window is None else window
+    x = params["embed"][tokens].astype(BF16)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    x = TF._constrain(x, rules.act(), rules)
+    shared = params["shared_attn"]
+
+    def mamba_body(carry, inp):
+        lp, nw = inp
+        y, _ = _mamba_layer(carry, lp, nw, cfg, rules)
+        return y, None
+
+    if cfg.remat:
+        policy = (None if cfg.remat_policy == "full"
+                  else getattr(jax.checkpoint_policies, cfg.remat_policy))
+        mamba_body = jax.checkpoint(mamba_body, policy=policy)
+
+    def group_body(carry, inp):
+        gp, gn = inp  # one group's stacked mamba params + norms
+        y, _ = jax.lax.scan(mamba_body, carry, (gp, gn))
+        y, _ = TF._layer_fwd(y, shared, cfg, positions, rules, w)
+        return y, None
+
+    x, _ = jax.lax.scan(
+        group_body, x, (params["mamba_groups"], params["mamba_norms"]["groups"])
+    )
+    if rest:
+        x, _ = jax.lax.scan(
+            mamba_body, x, (params["mamba_rest"], params["mamba_norms"]["rest"])
+        )
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = dot_f32(x, params["lm_head"])
+    return logits, {}
+
+
+def init_cache(cfg: ArchConfig, batch: int, capacity: int, dtype=jnp.bfloat16):
+    g, a, rest = _group_shape(cfg)
+    kk, n = cfg.ssm_conv, cfg.ssm_state
+    mcache = lambda *lead: {
+        "conv": {
+            "x": jnp.zeros((*lead, batch, kk - 1, cfg.d_inner), jnp.float32),
+            "b": jnp.zeros((*lead, batch, kk - 1, n), jnp.float32),
+            "c": jnp.zeros((*lead, batch, kk - 1, n), jnp.float32),
+        },
+        "state": jnp.zeros(
+            (*lead, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            jnp.float32,
+        ),
+    }
+    k, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    cache = {
+        "mamba_groups": mcache(g, a),
+        "attn": {
+            "k": jnp.zeros((g, batch, capacity, k, hd), dtype),
+            "v": jnp.zeros((g, batch, capacity, k, hd), dtype),
+        },
+    }
+    if rest:
+        cache["mamba_rest"] = mcache(rest)
+    return cache
+
+
+def cache_specs(cfg: ArchConfig, rules: TF.ShardingRules, m: str = "model"):
+    g, a, rest = _group_shape(cfg)
+    mspec = lambda n_lead: {
+        "conv": {
+            "x": P(*([None] * n_lead), rules.batch, None, m),
+            "b": P(*([None] * n_lead), rules.batch, None, None),
+            "c": P(*([None] * n_lead), rules.batch, None, None),
+        },
+        "state": P(*([None] * n_lead), rules.batch, m, None, None),
+    }
+    specs = {
+        "mamba_groups": mspec(2),
+        "attn": {
+            "k": P(None, rules.batch, rules.seq, None, None),
+            "v": P(None, rules.batch, rules.seq, None, None),
+        },
+    }
+    if rest:
+        specs["mamba_rest"] = mspec(1)
+    return specs
+
+
+def decode_step(params, token, cache, cache_index, cfg: ArchConfig,
+                rules: TF.ShardingRules, window: int | None = None):
+    g, a, rest = _group_shape(cfg)
+    w = cfg.sliding_window if window is None else window
+    x = params["embed"][token].astype(BF16)
+    positions = jnp.full((1, 1), cache_index, jnp.int32)
+    shared = params["shared_attn"]
+
+    def mamba_body(carry, inp):
+        lp, nw, lc = inp
+        y, nc = _mamba_layer(carry, lp, nw, cfg, rules, cache=lc)
+        return y, nc
+
+    def group_body(carry, inp):
+        gp, gn, gc, ac = inp
+        y, new_mc = jax.lax.scan(mamba_body, carry, (gp, gn, gc))
+        y, (new_ac, _) = TF._layer_fwd(
+            y, shared, cfg, positions, rules, w, cache=ac, cache_index=cache_index
+        )
+        return y, (new_mc, new_ac)
+
+    x, (new_groups, new_attn) = jax.lax.scan(
+        group_body,
+        x,
+        (
+            params["mamba_groups"],
+            params["mamba_norms"]["groups"],
+            cache["mamba_groups"],
+            cache["attn"],
+        ),
+    )
+    new_cache = {"mamba_groups": new_groups, "attn": new_attn}
+    if rest:
+        x, new_rest = jax.lax.scan(
+            mamba_body, x,
+            (params["mamba_rest"], params["mamba_norms"]["rest"], cache["mamba_rest"]),
+        )
+        new_cache["mamba_rest"] = new_rest
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = dot_f32(x, params["lm_head"])
+    return logits, new_cache

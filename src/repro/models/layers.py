@@ -1,0 +1,346 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA / MLA attention, SwiGLU.
+
+Mixed precision: params are stored f32, matmuls run in bf16 with f32
+accumulation (preferred_element_type) — the roofline compute term assumes
+bf16 MXU throughput.
+
+Sharding is GSPMD-style: parameters get PartitionSpecs from
+transformer.param_specs(); activations are constrained at layer boundaries
+by the caller. Attention supports three modes used by the four input
+shapes: full causal (train/prefill), KV-cache decode (decode_32k), and
+sliding-window (long_500k's sub-quadratic carve-out for dense archs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BF16 = jnp.bfloat16
+
+
+def dot(a, b):
+    """bf16 matmul, bf16 out: keeps the residual stream AND its backward
+    cotangents in bf16, halving the tensor-parallel all-reduce bytes in both
+    directions (§Perf yi-6b iteration 3 — the f32-out variant left 5 GB/layer
+    of f32 input-grad partial sums on the wire)."""
+    return jnp.dot(a.astype(BF16), b.astype(BF16), preferred_element_type=BF16)
+
+
+def dot_f32(a, b):
+    """f32-accumulated matmul for the lm_head: logits stay f32 for the loss."""
+    return jnp.dot(a.astype(BF16), b.astype(BF16), preferred_element_type=jnp.float32)
+
+
+# Row-parallel output projections (wo / w_down / out_proj) — same bf16-out
+# contract; name kept separate for intent.
+dot_tp_out = dot
+
+
+def rmsnorm(x, w, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    s = jnp.mean(x * x, axis=-1, keepdims=True)
+    # stats in f32; output back in the stream dtype (bf16 in training)
+    return (x * jax.lax.rsqrt(s + eps) * w).astype(dt)
+
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions (...,) int32 -> cos/sin (..., head_dim//2)."""
+    freqs = 1.0 / theta ** (
+        jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., S, H, D); cos/sin (..., S, D//2) broadcast over heads.
+    Rotation in f32, result back in the stream dtype."""
+    dt = x.dtype
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c, s = cos[..., None, :], sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(dt)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = dot(x, w_gate)
+    u = dot(x, w_up)
+    return dot(jax.nn.silu(g) * u, w_down)
+
+
+def _sdpa(q, k, v, mask):
+    """q (B,S,H,D), k/v (B,T,K,D) with H = G*K query groups per kv head."""
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    q = q.reshape(b, s, kh, g, d)
+    scores = jnp.einsum(
+        "bskgd,btkd->bkgst", q.astype(BF16), k.astype(BF16),
+        preferred_element_type=jnp.float32,
+    ) / jnp.sqrt(d).astype(jnp.float32)
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bkgst,btkd->bskgd", p.astype(BF16), v.astype(BF16),
+        preferred_element_type=BF16,
+    )
+    return out.reshape(b, s, h, d)
+
+
+def flash_attention_gqa(q, k, v, *, causal: bool, window: int = 0,
+                        q_blk: int = 512, kv_blk: int = 512):
+    """Online-softmax attention, nested-scan over (q blocks, kv blocks).
+
+    Bounds activation memory to O(q_blk * kv_blk) per head instead of the
+    O(S*T) materialised score matrix — mandatory for the 32k/500k shapes
+    (32k^2 scores would be terabytes). Pure XLA (no Pallas) so the multi-pod
+    dry-run lowers on any backend; causal masking is applied inside blocks,
+    so HLO FLOPs count ~2x the useful causal work — documented in
+    EXPERIMENTS.md §Roofline (a TPU Pallas flash kernel with triangle block
+    skipping is the projected fix; see §Perf).
+    """
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    q_blk, kv_blk = min(q_blk, s), min(kv_blk, t)
+    assert s % q_blk == 0 and t % kv_blk == 0, (s, t, q_blk, kv_blk)
+    nq, nk = s // q_blk, t // kv_blk
+    off = t - s  # query i sits at absolute position off + i
+
+    qr = jnp.moveaxis(q.reshape(b, nq, q_blk, kh, g, d), 1, 0)
+    kr = jnp.moveaxis(k.reshape(b, nk, kv_blk, kh, d), 1, 0)
+    vr = jnp.moveaxis(v.reshape(b, nk, kv_blk, kh, d), 1, 0)
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    def q_step(_, qin):
+        qb, qi = qin  # (b, q_blk, kh, g, d), scalar block idx
+        qpos = off + qi * q_blk + jnp.arange(q_blk)
+
+        def kv_step(carry, kin):
+            m, l, acc = carry
+            kb, vb, ki = kin
+            kpos = ki * kv_blk + jnp.arange(kv_blk)
+            sc = jnp.einsum(
+                "bqkgd,btkd->bkgqt", qb.astype(BF16), kb.astype(BF16),
+                preferred_element_type=jnp.float32,
+            ) * scale
+            mask = jnp.ones((q_blk, kv_blk), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window > 0:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            sc = jnp.where(mask[None, None, None], sc, -1e30)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum(
+                "bkgqt,btkd->bkgqd", p.astype(BF16), vb.astype(BF16),
+                preferred_element_type=jnp.float32,
+            )
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kh, g, q_blk), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, q_blk), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, q_blk, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (kr, vr, jnp.arange(nk))
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (b, kh, g, q_blk, d)
+        out = out.astype(BF16)
+        return None, jnp.moveaxis(out, 3, 1)  # (b, q_blk, kh, g, d)
+
+    _, outs = jax.lax.scan(q_step, None, (qr, jnp.arange(nq)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, d)
+    return out
+
+
+# Above this token count, full-seq attention switches to the flash path.
+FLASH_THRESHOLD = 2048
+
+
+def causal_mask(s: int, t: int, window: int = 0):
+    """(1,1,1,s,t) bool; query i attends key j iff j <= i (+ window bound).
+    For s == t the usual triangle; for cached decode t > s the query row is
+    offset so the newest query sees everything."""
+    qi = jnp.arange(s)[:, None] + (t - s)
+    kj = jnp.arange(t)[None, :]
+    m = kj <= qi
+    if window > 0:
+        m &= kj > qi - window
+    return m[None, None, None]
+
+
+def _quantize_kv(x):
+    """(B, S, K, D) float -> (int8 values, (B, S, K) f32 scales)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def attention_gqa(
+    x,
+    p,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    positions,
+    cache=None,  # dict(k, v) (B, T, K, D) or None
+    cache_index=None,  # scalar write position when cache is given
+    window: int = 0,
+    causal: bool = True,
+):
+    """Returns (out, new_cache). Full-seq when cache is None; single-step
+    (or short-step) decode against the cache otherwise."""
+    b, s, _ = x.shape
+    q = dot(x, p["wq"]).reshape(b, s, n_heads, head_dim)
+    k = dot(x, p["wk"]).reshape(b, s, n_kv_heads, head_dim)
+    v = dot(x, p["wv"]).reshape(b, s, n_kv_heads, head_dim)
+
+    cos, sin = rope_angles(positions, head_dim, rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    new_cache = None
+    if cache is None:
+        if s >= FLASH_THRESHOLD:
+            out = flash_attention_gqa(q, k, v, causal=causal, window=window)
+        else:
+            mask = causal_mask(s, s, window) if causal else jnp.ones((), bool)
+            out = _sdpa(q, k, v, mask)
+    else:
+        if cache["k"].dtype == jnp.int8:
+            # int8 KV cache (paper §2.2's compression insight applied to
+            # serving): per-(token, head) absmax quantisation halves the
+            # dominant decode HBM stream vs bf16; dequant on read (fused on
+            # TPU). §Perf bonus iteration in EXPERIMENTS.md.
+            kq, ks = _quantize_kv(k)
+            vq, vs = _quantize_kv(v)
+            ck = jax.lax.dynamic_update_slice(cache["k"], kq, (0, cache_index, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], vq, (0, cache_index, 0, 0))
+            cks = jax.lax.dynamic_update_slice(cache["k_scale"], ks, (0, cache_index, 0))
+            cvs = jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, cache_index, 0))
+            new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+            ck = ck.astype(BF16) * cks[..., None].astype(BF16)
+            cv = cv.astype(BF16) * cvs[..., None].astype(BF16)
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0)
+            )
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0)
+            )
+            new_cache = {"k": ck, "v": cv}
+        t = ck.shape[1]
+        kj = jnp.arange(t)[None, :]
+        qi = cache_index + jnp.arange(s)[:, None]
+        m = kj <= qi
+        if window > 0:
+            m &= kj > qi - window
+        out = _sdpa(q, ck, cv, m[None, None, None])
+
+    out = dot_tp_out(out.reshape(b, s, n_heads * head_dim), p["wo"])
+    return out, new_cache
+
+
+def attention_mla(
+    x,
+    p,
+    *,
+    n_heads: int,
+    kv_lora_rank: int,
+    q_lora_rank: int,
+    rope_head_dim: int,
+    nope_head_dim: int,
+    v_head_dim: int,
+    rope_theta: float,
+    positions,
+    cache=None,  # dict(ckv (B,T,R), krope (B,T,Dr)) or None
+    cache_index=None,
+    window: int = 0,
+):
+    """Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3 style).
+
+    KV state is compressed to a rank-R latent + a single shared RoPE key —
+    the cache stores (R + Dr) floats per token instead of 2*K*D. For
+    decode the latent is up-projected per step; this is the paper-exact
+    "cache the latent" formulation (not the absorbed-weights serving trick).
+    """
+    b, s, _ = x.shape
+    dq = nope_head_dim + rope_head_dim
+
+    cq = dot(x, p["w_dq"])  # (b, s, q_lora)
+    q = dot(cq, p["w_uq"]).reshape(b, s, n_heads, dq)
+    q_nope, q_rope = q[..., :nope_head_dim], q[..., nope_head_dim:]
+
+    ckv = dot(x, p["w_dkv"])  # (b, s, R)
+    krope = dot(x, p["w_krope"]).reshape(b, s, 1, rope_head_dim)
+
+    cos, sin = rope_angles(positions, rope_head_dim, rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    krope = apply_rope(krope, cos, sin)
+
+    new_cache = None
+    if cache is not None:
+        ckv = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, cache_index, 0)
+        )
+        krope_t = jax.lax.dynamic_update_slice(
+            cache["krope"], krope[:, :, 0].astype(cache["krope"].dtype),
+            (0, cache_index, 0),
+        )
+        new_cache = {"ckv": ckv, "krope": krope_t}
+        krope_full = krope_t[:, :, None, :]
+        t = ckv.shape[1]
+        qi = cache_index + jnp.arange(s)[:, None]
+    else:
+        krope_full = krope
+        t = s
+        qi = jnp.arange(s)[:, None]
+
+    k_nope = dot(ckv, p["w_uk"]).reshape(b, t, n_heads, nope_head_dim)
+    value = dot(ckv, p["w_uv"]).reshape(b, t, n_heads, v_head_dim)
+
+    if cache is None and s >= FLASH_THRESHOLD:
+        # Long prefill: fold nope+rope into one head dim and use the flash
+        # path (v is zero-padded to the q/k head dim, sliced after).
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+        kf = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope_full, (b, t, n_heads, rope_head_dim))],
+            axis=-1,
+        )
+        vf = jnp.pad(value, ((0, 0), (0, 0), (0, 0), (0, dq - v_head_dim)))
+        out = flash_attention_gqa(qf, kf, vf, causal=True, window=window)
+        out = out[..., :v_head_dim]
+        out = dot_tp_out(out.reshape(b, s, n_heads * v_head_dim), p["wo"])
+        return out, new_cache
+
+    kj = jnp.arange(t)[None, :]
+    m = kj <= qi
+    if window > 0:
+        m &= kj > qi - window
+    mask = m[None, None, :, :]  # (1,1,s,t) -> broadcast over heads
+
+    scale = 1.0 / jnp.sqrt(jnp.float32(dq))
+    s_nope = jnp.einsum(
+        "bshd,bthd->bhst", q_nope.astype(BF16), k_nope.astype(BF16),
+        preferred_element_type=jnp.float32,
+    )
+    s_rope = jnp.einsum(
+        "bshd,btxd->bhst", q_rope.astype(BF16),
+        jnp.broadcast_to(krope_full, (b, t, 1, rope_head_dim)).astype(BF16),
+        preferred_element_type=jnp.float32,
+    )
+    scores = (s_nope + s_rope) * scale
+    scores = jnp.where(mask, scores, -1e30)
+    pattn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bhst,bthd->bshd", pattn.astype(BF16), value.astype(BF16),
+        preferred_element_type=BF16,
+    )
+    out = dot_tp_out(out.reshape(b, s, n_heads * v_head_dim), p["wo"])
+    return out, new_cache

@@ -1,0 +1,100 @@
+"""Mixture-of-Experts FFN (llama4-style top-k routing, expert-parallel).
+
+Experts are sharded over the `model` mesh axis (expert parallelism): the
+stacked expert weights (E, D, F) carry PartitionSpec ("model", None, None).
+
+Dispatch is scatter/gather based (sort-free): each routed token computes its
+position in its expert's capacity-bounded queue via a prefix sum over the
+one-hot routing matrix, then a scatter-add places it in the (E, C, D)
+expert buffers and a gather brings expert outputs back. This avoids the
+(N, E, C) one-hot dispatch tensor of the classic einsum formulation, which
+at llama4-maverick scale (E=128) would be gigabytes per device. Under GSPMD
+the buffer exchange lowers to the expert all-to-all tracked in §Perf.
+
+Aux losses: switch-style load-balance loss + router z-loss (llama4 maverick
+routes top-1, switch-style).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import BF16, dot
+
+
+def moe_ffn(x, p, *, n_experts: int, top_k: int, capacity_factor: float,
+            rules=None):
+    """x (B, S, D) -> (out (B, S, D), aux dict).
+
+    p: router (D, E), w_gate/w_up (E, D, F), w_down (E, F, D).
+
+    `rules` (ShardingRules): when given, the expert buffers are constrained
+    to P(model, batch, None) — experts over `model`, capacity over the data
+    axes. Without the capacity constraint GSPMD replicates every expert's
+    FULL global-capacity matmul on all 16 data shards (measured 11x useful
+    FLOPs on llama4-maverick train_4k; EXPERIMENTS.md §Perf MoE iteration).
+    """
+    b, s, d = x.shape
+    n_tok = b * s
+    xt = x.reshape(n_tok, d)
+
+    logits = dot(xt, p["router"])  # (N, E)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)  # (N, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    capacity = max(int(capacity_factor * n_tok * top_k / n_experts), 4)
+
+    # Queue position of each routing slot within its expert (prefix sum over
+    # the (N*k, E) one-hot routing matrix — the scan the paper would call a
+    # parallel prefix sum).
+    flat_idx = gate_idx.reshape(n_tok * top_k)
+    onehot = jax.nn.one_hot(flat_idx, n_experts, dtype=jnp.float32)
+    pos = (jnp.cumsum(onehot, axis=0) - 1.0)[
+        jnp.arange(n_tok * top_k), flat_idx
+    ].astype(jnp.int32)  # (N*k,)
+    keep = pos < capacity
+
+    # Scatter tokens into expert buffers (dump row for overflow).
+    slot = jnp.where(keep, flat_idx * capacity + pos, n_experts * capacity)
+    xrep = jnp.repeat(xt, top_k, axis=0)  # (N*k, D)
+    buf = jnp.zeros((n_experts * capacity + 1, d), jnp.float32)
+    buf = buf.at[slot].add(xrep, mode="drop")
+    ebuf = buf[:-1].reshape(n_experts, capacity, d)
+    if rules is not None and rules.enabled:
+        from jax.sharding import PartitionSpec as P
+
+        ebuf = jax.lax.with_sharding_constraint(
+            ebuf, P(rules.model, rules.batch, None))
+
+    # Per-expert SwiGLU, batched over the (model-sharded) expert axis.
+    g = jnp.einsum("ecd,edf->ecf", ebuf.astype(BF16), p["w_gate"].astype(BF16),
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", ebuf.astype(BF16), p["w_up"].astype(BF16),
+                   preferred_element_type=jnp.float32)
+    h = jax.nn.silu(g) * u
+    eout = jnp.einsum("ecf,efd->ecd", h.astype(BF16), p["w_down"].astype(BF16),
+                      preferred_element_type=jnp.float32)
+    if rules is not None and rules.enabled:
+        from jax.sharding import PartitionSpec as P
+
+        eout = jax.lax.with_sharding_constraint(
+            eout, P(rules.model, rules.batch, None))
+
+    # Gather expert outputs back to tokens, apply gate weights, fold top-k.
+    flat_out = eout.reshape(n_experts * capacity, d)
+    tok_out = flat_out[jnp.clip(slot, 0, n_experts * capacity - 1)]
+    tok_out = tok_out * (keep.astype(jnp.float32) * gate_vals.reshape(-1))[:, None]
+    out = jnp.sum(tok_out.reshape(n_tok, top_k, d), axis=1)
+
+    # Aux losses (switch transformer): load balance + router z-loss.
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(gate_idx[:, 0], n_experts, dtype=jnp.float32), axis=0
+    )
+    frac_probs = jnp.mean(probs, axis=0)
+    lb_loss = n_experts * jnp.sum(frac_tokens * frac_probs)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)))
+
+    # back to the residual-stream dtype (bf16 in training)
+    return out.reshape(b, s, d).astype(x.dtype), {"lb_loss": lb_loss, "z_loss": z_loss}

@@ -1,0 +1,214 @@
+"""Mamba2 blocks via SSD — state-space duality (arXiv:2405.21060).
+
+The chunked SSD algorithm: sequence is split into chunks of Q tokens;
+within a chunk the recurrence is expanded into an attention-like quadratic
+form (MXU-friendly — this is the "duality"), across chunks a short
+lax.scan propagates the (H, P, N) state. Decode is the O(1) recurrence.
+
+Shapes: x (B, L, H, P) heads x head_dim, B/C (B, L, N) (single group),
+dt (B, L, H), A (H,) negative reals (stored as log magnitude).
+
+Sharding: heads are sharded over the `model` axis; the inter-chunk scan
+carries (B, H, P, N) states — no sequence-axis collectives are needed
+because chunking is local to each data shard's rows.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import BF16, dot, dot_tp_out, rmsnorm
+
+
+def _segsum_exp(dA_cs):
+    """dA_cs (..., Q) inclusive cumsum -> exp lower-triangular decay (.., Q, Q).
+
+    L[i, j] = exp(cs[i] - cs[j]) for i >= j else 0.
+    """
+    q = dA_cs.shape[-1]
+    diff = dA_cs[..., :, None] - dA_cs[..., None, :]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    # Mask BEFORE exp: exp of a large positive (upper-triangle) diff is inf,
+    # and where(tri, inf, 0) poisons the backward pass with 0 * inf = NaN.
+    return jnp.exp(jnp.where(tri, diff, -jnp.inf))
+
+
+def ssd_chunked(x, dt, a_log, bm, cm, chunk: int):
+    """Full-sequence SSD. Returns y (B, L, H, P) and final state (B,H,P,N)."""
+    bsz, l, h, p = x.shape
+    n = bm.shape[-1]
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0)))
+    lp = l + pad
+    nc = lp // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32))  # (H,) negative
+
+    xr = x.reshape(bsz, nc, chunk, h, p)
+    dtr = dt.reshape(bsz, nc, chunk, h)
+    br = bm.reshape(bsz, nc, chunk, n)
+    cr = cm.reshape(bsz, nc, chunk, n)
+
+    dA = dtr * a  # (b, c, q, h)
+    cs = jnp.cumsum(dA, axis=2)
+
+    # --- intra-chunk (quadratic / attention-like, MXU) -------------------
+    decay = _segsum_exp(jnp.moveaxis(cs, -1, -2))  # (b, c, h, q, q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", cr.astype(BF16), br.astype(BF16),
+                        preferred_element_type=jnp.float32)
+    w = scores[:, :, None] * decay * jnp.moveaxis(dtr, -1, -2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", w.astype(BF16), xr.astype(BF16),
+                         preferred_element_type=jnp.float32)
+
+    # --- chunk states -----------------------------------------------------
+    last = cs[:, :, -1:, :]  # (b, c, 1, h)
+    sdecay = jnp.exp(last - cs)  # (b, c, q, h)
+    wx = xr * (sdecay * dtr)[..., None]  # (b, c, q, h, p)
+    states = jnp.einsum("bcqn,bcqhp->bchpn", br.astype(BF16), wx.astype(BF16),
+                        preferred_element_type=jnp.float32)
+
+    # --- inter-chunk recurrence (short scan over nc chunks) --------------
+    chunk_decay = jnp.exp(last[:, :, 0])  # (b, c, h)
+
+    def step(s, inp):
+        st, dec = inp  # (b,h,p,n), (b,h)
+        s_new = s * dec[..., None, None] + st
+        return s_new, s
+
+    s0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    final, prev = jax.lax.scan(
+        step,
+        s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev = jnp.moveaxis(prev, 0, 1)  # (b, c, h, p, n) state entering chunk c
+
+    # --- inter-chunk contribution ----------------------------------------
+    qdecay = jnp.exp(cs)  # (b, c, q, h)
+    y_inter = jnp.einsum("bcqn,bchpn->bcqhp", cr.astype(BF16), prev.astype(BF16),
+                         preferred_element_type=jnp.float32)
+    y_inter = y_inter * qdecay[..., None]
+
+    y = (y_intra + y_inter).reshape(bsz, lp, h, p)[:, :l]
+    return y, final
+
+
+def ssd_decode_step(x, dt, a_log, bm, cm, state):
+    """One-token recurrence. x (B,1,H,P), dt (B,1,H), bm/cm (B,1,N),
+    state (B,H,P,N) -> (y (B,1,H,P), new_state)."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dA = jnp.exp(dt[:, 0] * a)  # (B,H)
+    upd = jnp.einsum("bn,bhp->bhpn", bm[:, 0], x[:, 0] * dt[:, 0, :, None])
+    new_state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, cm[:, 0])
+    return y[:, None], new_state
+
+
+def mamba2_block(x, p, cfg, *, cache=None):
+    """Full Mamba2 block: in_proj -> conv -> SSD -> gated norm -> out_proj.
+
+    cache: None (full seq) or dict(conv (B, K-1, C_conv), state (B,H,P,N))
+    for single-token decode. Returns (out, new_cache).
+    """
+    bsz, l, _ = x.shape
+    h, pdim, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    di = cfg.d_inner
+
+    # Separate per-stream projections (NOT one fused zxbcdt matmul): the
+    # fused form's slice boundaries cut across `model`-axis shards, which
+    # made GSPMD insert ~100 GB/step of collective-permute resharding on the
+    # production mesh (EXPERIMENTS.md §Perf, mamba2 iteration 1). Separate
+    # weights shard each stream independently; XLA still fuses the matmuls.
+    z = dot(x, p["w_z"])  # (B, L, di)        sharded over model
+    xin = dot(x, p["w_x"])  # (B, L, di)      sharded over model
+    bm = dot(x, p["w_b"])  # (B, L, N)        replicated (tiny)
+    cm = dot(x, p["w_c"])  # (B, L, N)        replicated (tiny)
+    dt = dot(x, p["w_dt"])  # (B, L, H)       sharded over model
+    dt = jax.nn.softplus(dt + p["dt_bias"])  # (B, L, H)
+
+    # Depthwise causal conv1d per stream (same sharding-alignment reasoning:
+    # a fused conv over concat(x, B, C) would reshard at the concat).
+    k = cfg.ssm_conv
+    new_cache = None
+
+    def causal_conv(inp, w, b, hist=None):
+        if hist is None:
+            padded = jnp.pad(inp, ((0, 0), (k - 1, 0), (0, 0)))
+            out = sum(padded[:, i : i + l] * w[i][None, None, :] for i in range(k))
+            return jax.nn.silu(out + b), None
+        full = jnp.concatenate([hist, inp], axis=1)  # (B, k-1+l, C)
+        out = sum(full[:, i : i + l] * w[i][None, None, :] for i in range(k))
+        return jax.nn.silu(out + b), full[:, -(k - 1) :]
+
+    hists = (cache or {}).get("conv", {})
+    xs, hx = causal_conv(xin, p["conv_w_x"], p["conv_b_x"], hists.get("x"))
+    bm, hb = causal_conv(bm, p["conv_w_b"], p["conv_b_b"], hists.get("b"))
+    cm, hc = causal_conv(cm, p["conv_w_c"], p["conv_b_c"], hists.get("c"))
+    if cache is not None:
+        new_conv = {"x": hx, "b": hb, "c": hc}
+    xs = xs.reshape(bsz, l, h, pdim)
+
+    if cache is None:
+        y, final = ssd_chunked(xs, dt, p["a_log"], bm, cm, cfg.ssm_chunk)
+    else:
+        y, final = ssd_decode_step(xs, dt, p["a_log"], bm, cm, cache["state"])
+        new_cache = {"conv": new_conv, "state": final}
+
+    y = y + xs * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, l, di)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return dot_tp_out(y, p["out_proj"]), new_cache
+
+
+def init_mamba2_params(key, cfg, dtype=jnp.float32):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    scale = lambda fan: 1.0 / jnp.sqrt(jnp.float32(fan))
+    return {
+        "w_z": jax.random.normal(ks[0], (d, di), dtype) * scale(d),
+        "w_x": jax.random.normal(ks[1], (d, di), dtype) * scale(d),
+        "w_b": jax.random.normal(ks[2], (d, n), dtype) * scale(d),
+        "w_c": jax.random.normal(ks[3], (d, n), dtype) * scale(d),
+        "w_dt": jax.random.normal(ks[4], (d, h), dtype) * scale(d),
+        "out_proj": jax.random.normal(ks[5], (di, d), dtype) * scale(di),
+        "conv_w_x": jax.random.normal(ks[6], (cfg.ssm_conv, di), dtype) * 0.1,
+        "conv_b_x": jnp.zeros((di,), dtype),
+        "conv_w_b": jax.random.normal(ks[7], (cfg.ssm_conv, n), dtype) * 0.1,
+        "conv_b_b": jnp.zeros((n,), dtype),
+        "conv_w_c": jax.random.normal(ks[7], (cfg.ssm_conv, n), dtype) * 0.1,
+        "conv_b_c": jnp.zeros((n,), dtype),
+        "dt_bias": jnp.zeros((h,), dtype),
+        "a_log": jnp.zeros((h,), dtype),  # A = -1
+        "d_skip": jnp.ones((h,), dtype),
+        "norm_w": jnp.ones((di,), dtype),
+    }
+
+
+def mamba2_param_specs(mesh_model_axis: str = "model"):
+    """PartitionSpecs matching init_mamba2_params: the wide streams (z, x,
+    dt, heads) shard over `model`; the tiny shared B/C streams replicate."""
+    from jax.sharding import PartitionSpec as P
+
+    m = mesh_model_axis
+    return {
+        "w_z": P(None, m),
+        "w_x": P(None, m),
+        "w_b": P(None, None),
+        "w_c": P(None, None),
+        "w_dt": P(None, m),
+        "out_proj": P(m, None),
+        "conv_w_x": P(None, m),
+        "conv_b_x": P(m),
+        "conv_w_b": P(None, None),
+        "conv_b_b": P(None),
+        "conv_w_c": P(None, None),
+        "conv_b_c": P(None),
+        "dt_bias": P(m),
+        "a_log": P(m),
+        "d_skip": P(m),
+        "norm_w": P(m),
+    }

@@ -1,0 +1,102 @@
+"""Pure-SSM LM (mamba2-2.7b): a stack of Mamba2 blocks, attention-free.
+
+Decode carries O(1) state per layer — this is the arch family for which
+long_500k is natural (no KV cache at all; DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig
+from repro.models.layers import BF16, dot, dot_f32, rmsnorm
+from repro.models import ssm as SSM
+from repro.models import transformer as TF
+
+
+def init_params(cfg: ArchConfig, key):
+    ks = jax.random.split(key, 4)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    layers = jax.vmap(lambda k: SSM.init_mamba2_params(k, cfg))(layer_keys)
+    return {
+        "embed": TF._glorot(ks[1], (cfg.padded_vocab, cfg.d_model)),
+        "layers": layers,
+        "layer_norms": jnp.ones((cfg.n_layers, cfg.d_model), jnp.float32),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": TF._glorot(ks[2], (cfg.d_model, cfg.padded_vocab)),
+    }
+
+
+def param_specs(cfg: ArchConfig, m: str = "model"):
+    mspec = SSM.mamba2_param_specs(m)
+    return {
+        "embed": P(m, None),
+        "layers": jax.tree.map(lambda s: P(None, *s), mspec,
+                               is_leaf=lambda x: isinstance(x, P)),
+        "layer_norms": P(None, None),
+        "final_norm": P(None),
+        "lm_head": P(None, m),
+    }
+
+
+def forward(params, tokens, cfg: ArchConfig, rules: TF.ShardingRules):
+    x = params["embed"][tokens].astype(BF16)
+    x = TF._constrain(x, rules.act(), rules)
+
+    def body(carry, inp):
+        lp, nw = inp
+        h = rmsnorm(carry, nw, cfg.norm_eps)
+        out, _ = SSM.mamba2_block(h, lp, cfg)
+        y = TF._constrain(carry + out, rules.act(), rules)
+        return y, None
+
+    if cfg.remat:
+        policy = (None if cfg.remat_policy == "full"
+                  else getattr(jax.checkpoint_policies, cfg.remat_policy))
+        body = jax.checkpoint(body, policy=policy)
+    x, _ = jax.lax.scan(body, x, (params["layers"], params["layer_norms"]))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return dot_f32(x, params["lm_head"]), {}
+
+
+def init_cache(cfg: ArchConfig, batch: int, capacity: int = 0, dtype=jnp.bfloat16):
+    l, k, n = cfg.n_layers, cfg.ssm_conv, cfg.ssm_state
+    return {
+        "conv": {
+            "x": jnp.zeros((l, batch, k - 1, cfg.d_inner), jnp.float32),
+            "b": jnp.zeros((l, batch, k - 1, n), jnp.float32),
+            "c": jnp.zeros((l, batch, k - 1, n), jnp.float32),
+        },
+        "state": jnp.zeros(
+            (l, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        ),
+    }
+
+
+def cache_specs(cfg: ArchConfig, rules: TF.ShardingRules, m: str = "model"):
+    return {
+        "conv": {
+            "x": P(None, rules.batch, None, m),
+            "b": P(None, rules.batch, None, None),
+            "c": P(None, rules.batch, None, None),
+        },
+        "state": P(None, rules.batch, m, None, None),
+    }
+
+
+def decode_step(params, token, cache, cache_index, cfg: ArchConfig,
+                rules: TF.ShardingRules):
+    x = params["embed"][token].astype(BF16)
+
+    def body(carry, inp):
+        lp, nw, lc = inp
+        h = rmsnorm(carry, nw, cfg.norm_eps)
+        out, nc = SSM.mamba2_block(h, lp, cfg, cache=lc)
+        return carry + out, nc
+
+    x, new_cache = jax.lax.scan(
+        body, x, (params["layers"], params["layer_norms"], cache)
+    )
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return dot_f32(x, params["lm_head"]), new_cache

@@ -1,0 +1,14 @@
+"""Optimizers for the LM substrate (built here; no external optax dep)."""
+from repro.optimizer.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optimizer.sgd import sgd_init, sgd_update
+from repro.optimizer.util import clip_by_global_norm, global_norm
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "sgd_init",
+    "sgd_update",
+    "clip_by_global_norm",
+    "global_norm",
+]

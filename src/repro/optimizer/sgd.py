@@ -1,0 +1,27 @@
+"""SGD with momentum (baseline optimizer for ablations)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    momentum: object
+
+
+def sgd_init(params) -> SGDState:
+    return SGDState(
+        step=jnp.zeros((), jnp.int32),
+        momentum=jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+    )
+
+
+def sgd_update(params, grads, state: SGDState, lr: float, beta: float = 0.9):
+    new_m = jax.tree.map(
+        lambda m, g: beta * m + g.astype(jnp.float32), state.momentum, grads
+    )
+    new_p = jax.tree.map(lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype), params, new_m)
+    return new_p, SGDState(step=state.step + 1, momentum=new_m)

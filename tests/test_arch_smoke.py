@@ -1,0 +1,162 @@
+"""Deliverable (f): per-architecture smoke tests — a REDUCED variant of the
+same family (2 layers, d_model<=512, <=4 experts) runs one forward/train
+step on CPU; output shapes asserted, no NaNs. Full configs are exercised
+only by the dry-run (launch/dryrun.py, ShapeDtypeStruct, no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_arch
+from repro.models import NO_SHARDING, build_model
+
+
+def _batch(cfg, b=2, s=32, key=None):
+    key = jax.random.PRNGKey(0) if key is None else key
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "targets": toks}
+    if cfg.arch_type == "vlm":
+        batch["prefix_embeds"] = (
+            jax.random.normal(key, (b, cfg.n_prefix_tokens, cfg.d_model)) * 0.02
+        )
+    if cfg.arch_type in ("audio", "encdec"):
+        batch["src_embeds"] = jax.random.normal(key, (b, 16, cfg.d_model)) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_constraints(arch):
+    cfg = get_arch(arch).reduced()
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512 and cfg.n_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    b, s = batch["tokens"].shape
+
+    logits = model.forward_logits(params, batch, NO_SHARDING)
+    exp_s = s + (cfg.n_prefix_tokens if cfg.arch_type == "vlm" else 0)
+    assert logits.shape == (b, exp_s, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    loss, grads = jax.value_and_grad(
+        lambda p: model.loss_fn(p, batch, NO_SHARDING)
+    )(params)
+    assert bool(jnp.isfinite(loss))
+    gn = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    assert bool(jnp.isfinite(gn)) and float(gn) > 0
+
+
+@pytest.mark.parametrize("arch", ["glm4-9b", "yi-6b", "llama4-scout-17b-a16e",
+                                  "mamba2-2.7b"])
+def test_one_opt_step_reduces_loss(arch):
+    from repro.optimizer import AdamWConfig, adamw_init, adamw_update
+
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(1))
+    batch = _batch(cfg, key=jax.random.PRNGKey(2))
+    acfg = AdamWConfig(lr=5e-3, weight_decay=0.0)
+    state = adamw_init(params)
+
+    @jax.jit
+    def step(p, st):
+        loss, g = jax.value_and_grad(lambda q: model.loss_fn(q, batch, NO_SHARDING))(p)
+        p, st = adamw_update(p, g, st, acfg)
+        return p, st, loss
+
+    losses = []
+    for _ in range(8):
+        params, state, loss = step(params, state)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "minicpm3-4b", "mamba2-2.7b",
+                                  "zamba2-7b", "seamless-m4t-medium"])
+def test_decode_matches_forward(arch):
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(3))
+    T = 12
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, T), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "targets": toks}
+    if cfg.arch_type in ("audio", "encdec"):
+        batch["src_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(5), (2, 8, cfg.d_model)) * 0.02
+    full = model.forward_logits(params, batch, NO_SHARDING)
+
+    cache = model.init_cache(2, T, dtype=jnp.float32)
+    dec = jax.jit(lambda p, bb, c, i: model.decode_fn(p, bb, c, i, NO_SHARDING))
+    outs = []
+    for t in range(T):
+        db = {"tokens": toks[:, t : t + 1]}
+        if "src_embeds" in batch:
+            db["src_embeds"] = batch["src_embeds"]
+        logits, cache = dec(params, db, cache, t)
+        outs.append(logits[:, 0])
+    got = jnp.stack(outs, axis=1)
+    rel = float(jnp.max(jnp.abs(got - full))) / float(jnp.max(jnp.abs(full)))
+    assert rel < 2e-2, rel
+
+
+def test_exact_assigned_specs():
+    """The full configs must match the assignment table exactly."""
+    c = get_arch("glm4-9b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (40, 4096, 32, 2, 13696, 151552)
+    c = get_arch("zamba2-7b")
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab_size, c.ssm_state) == (
+        81, 3584, 14336, 32000, 64)
+    c = get_arch("mamba2-2.7b")
+    assert (c.n_layers, c.d_model, c.vocab_size, c.ssm_state) == (
+        64, 2560, 50280, 128)
+    c = get_arch("llama4-maverick-400b-a17b")
+    assert (c.n_experts, c.top_k, c.vocab_size, c.d_model) == (128, 1, 202048, 5120)
+    c = get_arch("llama4-scout-17b-a16e")
+    assert (c.n_experts, c.top_k) == (16, 1)
+    c = get_arch("minicpm3-4b")
+    assert (c.n_layers, c.attention, c.vocab_size) == (62, "mla", 73448)
+    c = get_arch("seamless-m4t-medium")
+    assert (c.n_layers, c.n_enc_layers, c.vocab_size) == (12, 12, 256206)
+    c = get_arch("phi-3-vision-4.2b")
+    assert (c.n_layers, c.d_model, c.n_prefix_tokens) == (32, 3072, 576)
+    c = get_arch("yi-6b")
+    assert (c.n_kv_heads, c.d_ff, c.vocab_size) == (4, 11008, 64000)
+    c = get_arch("stablelm-12b")
+    assert (c.n_layers, c.d_model, c.vocab_size) == (40, 5120, 100352)
+
+
+def test_int8_kv_cache_decode_matches_forward():
+    """§2.2 compression applied to serving: int8 KV cache decode must track
+    the full forward within quantisation noise."""
+    import dataclasses
+
+    cfg = dataclasses.replace(get_arch("glm4-9b").reduced(), kv_cache_dtype="int8")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(3))
+    T = 12
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, T), 0, cfg.vocab_size)
+    full = model.forward_logits(params, {"tokens": toks}, NO_SHARDING)
+    cache = model.init_cache(2, T)
+    assert cache["k"].dtype == jnp.int8 and "k_scale" in cache
+    dec = jax.jit(lambda p, b, c, i: model.decode_fn(p, b, c, i, NO_SHARDING))
+    outs = []
+    for t in range(T):
+        logits, cache = dec(params, {"tokens": toks[:, t : t + 1]}, cache, t)
+        outs.append(logits[:, 0])
+    got = jnp.stack(outs, 1)
+    rel = float(jnp.max(jnp.abs(got - full))) / float(jnp.max(jnp.abs(full)))
+    assert rel < 0.05, rel
+    # the int8 cache is ~1.8x smaller than bf16
+    import numpy as np
+    int8_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+    bf16 = model.init_cache(2, T, dtype=jnp.bfloat16)
+    cfg2 = dataclasses.replace(cfg, kv_cache_dtype="bfloat16")
+    bf16 = build_model(cfg2).init_cache(2, T, dtype=jnp.bfloat16)
+    bf16_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(bf16))
+    assert int8_bytes < 0.7 * bf16_bytes

@@ -1,0 +1,123 @@
+"""End-to-end gradient boosting (Figure 1 pipeline) behaviour tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BoosterConfig, train, predict_proba, predict_margins
+from repro.core import objectives as O
+
+
+@pytest.fixture(scope="module")
+def binary_data():
+    rng = np.random.default_rng(0)
+    n, f = 1500, 8
+    x = rng.normal(size=(n, f)).astype(np.float32)
+    w = rng.normal(size=f)
+    y = ((x @ w + 0.4 * np.sin(3 * x[:, 0]) + 0.3 * rng.normal(size=n)) > 0)
+    return x, y.astype(np.float32)
+
+
+def test_binary_classification(binary_data):
+    x, y = binary_data
+    cfg = BoosterConfig(n_rounds=20, max_depth=4, objective="binary:logistic",
+                        max_bins=64)
+    st = train(x, y, cfg)
+    p = np.asarray(predict_proba(st.ensemble, x, cfg.max_depth, cfg.objective))
+    acc = np.mean((p > 0.5) == y)
+    assert acc > 0.9, acc
+
+
+def test_train_metric_improves(binary_data):
+    x, y = binary_data
+    cfg = BoosterConfig(n_rounds=15, max_depth=3, objective="binary:logistic",
+                        max_bins=32)
+    st = train(x, y, cfg, verbose_every=7)
+    accs = [h["train_accuracy"] for h in st.history if "train_accuracy" in h]
+    assert accs[-1] > accs[0], accs
+
+
+def test_regression_rmse(rng):
+    n, f = 1200, 6
+    x = rng.normal(size=(n, f)).astype(np.float32)
+    y = (x @ rng.normal(size=f) + 0.5 * x[:, 0] * x[:, 1]).astype(np.float32)
+    cfg = BoosterConfig(n_rounds=30, max_depth=4, objective="reg:squarederror",
+                        max_bins=64)
+    st = train(x, y, cfg)
+    pred = np.asarray(predict_margins(st.ensemble, jnp.asarray(x), 4))[:, 0]
+    rmse = float(np.sqrt(np.mean((pred - y) ** 2)))
+    base = float(np.std(y))
+    assert rmse < 0.4 * base, (rmse, base)
+
+
+def test_multiclass(rng):
+    n, f, k = 900, 6, 4
+    centers = rng.normal(size=(k, f)) * 2.5
+    y = rng.integers(0, k, size=n)
+    x = (centers[y] + rng.normal(size=(n, f))).astype(np.float32)
+    cfg = BoosterConfig(n_rounds=10, max_depth=3, objective="multi:softmax",
+                        n_classes=k, max_bins=32)
+    st = train(x, y.astype(np.float32), cfg)
+    assert st.ensemble.n_trees == 10 * k  # k trees per round
+    pred = np.asarray(predict_proba(st.ensemble, x, 3, "multi:softmax"))
+    assert np.mean(pred == y) > 0.9
+
+
+def test_missing_values_learned_direction(rng):
+    """Signal carried BY missingness: x0 is NaN for class 1. The
+    sparsity-aware default direction must pick it up."""
+    n = 1000
+    x = rng.normal(size=(n, 3)).astype(np.float32)
+    y = (rng.random(n) < 0.5).astype(np.float32)
+    x[y == 1, 0] = np.nan
+    cfg = BoosterConfig(n_rounds=5, max_depth=2, objective="binary:logistic",
+                        max_bins=16)
+    st = train(x, y, cfg)
+    p = np.asarray(predict_proba(st.ensemble, x, 2, cfg.objective))
+    assert np.mean((p > 0.5) == y) > 0.95
+
+
+def test_kernel_path_identical(binary_data):
+    """Pallas histogram kernel path must reproduce the XLA path's trees."""
+    x, y = binary_data
+    x, y = x[:600], y[:600]
+    kw = dict(n_rounds=4, max_depth=3, objective="binary:logistic", max_bins=32)
+    st_a = train(x, y, BoosterConfig(**kw))
+    st_b = train(x, y, BoosterConfig(**kw, use_kernel_histograms=True))
+    assert bool(jnp.all(st_a.ensemble.feature == st_b.ensemble.feature))
+    assert bool(jnp.all(st_a.ensemble.split_bin == st_b.ensemble.split_bin))
+    np.testing.assert_allclose(np.asarray(st_a.ensemble.leaf_value),
+                               np.asarray(st_b.ensemble.leaf_value), atol=1e-4)
+
+
+def test_rank_pairwise(rng):
+    n_groups, per = 40, 8
+    n = n_groups * per
+    x = rng.normal(size=(n, 5)).astype(np.float32)
+    rel = (x @ rng.normal(size=5)).astype(np.float32)
+    gids = np.repeat(np.arange(n_groups), per).astype(np.int32)
+    cfg = BoosterConfig(n_rounds=10, max_depth=3, objective="rank:pairwise",
+                        max_bins=32)
+    st = train(x, rel, cfg, group_ids=gids)
+    m = predict_margins(st.ensemble, jnp.asarray(x), 3)
+    acc = float(O.pairwise_rank.metric(m, jnp.asarray(rel)))
+    assert acc > 0.75, acc
+
+
+def test_eval_set(binary_data):
+    x, y = binary_data
+    cfg = BoosterConfig(n_rounds=8, max_depth=3, objective="binary:logistic",
+                        max_bins=32)
+    st = train(x[:1000], y[:1000], cfg, eval_set=(x[1000:], y[1000:]))
+    rec = [h for h in st.history if "valid_accuracy" in h]
+    assert rec and rec[-1]["valid_accuracy"] > 0.8
+
+
+def test_lossguide_end_to_end(binary_data):
+    x, y = binary_data
+    cfg = BoosterConfig(n_rounds=10, max_depth=6, growth="lossguide",
+                        max_leaves=8, objective="binary:logistic", max_bins=32)
+    st = train(x, y, cfg)
+    leaves = np.asarray(jnp.sum(st.ensemble.is_leaf, axis=1))
+    assert np.all(leaves <= 8)
+    p = np.asarray(predict_proba(st.ensemble, x, 6, cfg.objective))
+    assert np.mean((p > 0.5) == y) > 0.85

@@ -1,0 +1,122 @@
+"""Paper §2.3: histogram build + split evaluation correctness."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import histogram as H
+from repro.core import split as S
+
+
+def brute_hist(bins, gh, pos, n_nodes, max_bins):
+    out = np.zeros((n_nodes, bins.shape[1], max_bins, 2), np.float64)
+    for i in range(bins.shape[0]):
+        if pos[i] < n_nodes:
+            for f in range(bins.shape[1]):
+                out[pos[i], f, bins[i, f]] += gh[i]
+    return out
+
+
+def test_histogram_vs_bruteforce(rng):
+    n, f, b, nodes = 500, 5, 16, 3
+    bins = rng.integers(0, b, size=(n, f)).astype(np.int32)
+    gh = rng.normal(size=(n, 2)).astype(np.float32)
+    pos = rng.integers(0, nodes + 1, size=n).astype(np.int32)
+    got = np.asarray(H.build_histograms(jnp.asarray(bins), jnp.asarray(gh),
+                                        jnp.asarray(pos), nodes, b))
+    want = brute_hist(bins, gh, pos, nodes, b)
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_histogram_mass_conservation(seed):
+    """Sum over (feature-0 bins) of each node == that node's (G, H) sum —
+    every feature's bins partition the same rows (invariant the split
+    evaluator relies on)."""
+    rng = np.random.default_rng(seed)
+    n, f, b, nodes = 200, 3, 8, 2
+    bins = rng.integers(0, b, size=(n, f)).astype(np.int32)
+    gh = rng.normal(size=(n, 2)).astype(np.float32)
+    pos = rng.integers(0, nodes, size=n).astype(np.int32)
+    hist = np.asarray(H.build_histograms(jnp.asarray(bins), jnp.asarray(gh),
+                                         jnp.asarray(pos), nodes, b))
+    for nd in range(nodes):
+        want = gh[pos == nd].sum(axis=0)
+        for feat in range(f):
+            np.testing.assert_allclose(hist[nd, feat].sum(axis=0), want, atol=1e-3)
+
+
+def brute_best_split(bins, gh, max_bins, lam, mcw):
+    """Enumerate every (feature, threshold, missing-direction)."""
+    n, f = bins.shape
+    g_tot, h_tot = gh.sum(axis=0)
+    parent = g_tot**2 / (h_tot + lam)
+    best = (-np.inf, 0, 0, False)
+    for feat in range(f):
+        for thr in range(max_bins - 2):
+            for dl in (False, True):
+                val = bins[:, feat]
+                missing = val == max_bins - 1
+                left = (val <= thr) & ~missing
+                if dl:
+                    left = left | missing
+                gl, hl = gh[left].sum(axis=0) if left.any() else (0.0, 0.0)
+                gr, hr = g_tot - gl, h_tot - hl
+                if hl < mcw or hr < mcw:
+                    continue
+                gain = 0.5 * (gl**2 / (hl + lam) + gr**2 / (hr + lam) - parent)
+                if gain > best[0] + 1e-9:
+                    best = (gain, feat, thr, dl)
+    return best
+
+
+def test_split_vs_bruteforce(rng):
+    n, f, b = 120, 3, 8
+    for trial in range(5):
+        bins = rng.integers(0, b, size=(n, f)).astype(np.int32)
+        gh = np.stack([rng.normal(size=n), np.abs(rng.normal(size=n)) + 0.1],
+                      axis=1).astype(np.float32)
+        pos = np.zeros(n, np.int32)
+        hist = H.build_histograms(jnp.asarray(bins), jnp.asarray(gh),
+                                  jnp.asarray(pos), 1, b)
+        parent = jnp.asarray(gh.sum(axis=0))[None]
+        sp = S.evaluate_splits(hist, parent, S.SplitParams(1.0, 0.0, 0.5))
+        want = brute_best_split(bins, gh, b, 1.0, 0.5)
+        assert abs(float(sp.gain[0]) - want[0]) < 1e-3, (trial, float(sp.gain[0]), want)
+        assert int(sp.feature[0]) == want[1]
+        assert int(sp.split_bin[0]) == want[2]
+
+
+def test_split_child_sums_consistent(rng):
+    n, f, b = 200, 4, 16
+    bins = rng.integers(0, b, size=(n, f)).astype(np.int32)
+    gh = np.stack([rng.normal(size=n), np.ones(n)], axis=1).astype(np.float32)
+    pos = np.zeros(n, np.int32)
+    hist = H.build_histograms(jnp.asarray(bins), jnp.asarray(gh),
+                              jnp.asarray(pos), 1, b)
+    parent = jnp.asarray(gh.sum(axis=0))[None]
+    sp = S.evaluate_splits(hist, parent, S.SplitParams())
+    np.testing.assert_allclose(
+        np.asarray(sp.left_sum + sp.right_sum), np.asarray(parent), atol=1e-3
+    )
+    # recompute left sum by routing rows (bin b-1 is the missing bin and
+    # follows the learned default direction)
+    feat, thr, dl = int(sp.feature[0]), int(sp.split_bin[0]), bool(sp.default_left[0])
+    val = bins[:, feat]
+    missing = val == b - 1
+    left = (val <= thr) & ~missing
+    if dl:
+        left |= missing
+    np.testing.assert_allclose(
+        gh[left].sum(axis=0), np.asarray(sp.left_sum[0]), atol=1e-3
+    )
+
+
+def test_no_valid_split_gives_neg_inf():
+    """A pure node (all same bin) has no valid split."""
+    bins = np.zeros((50, 2), np.int32)
+    gh = np.stack([np.ones(50), np.ones(50)], axis=1).astype(np.float32)
+    hist = H.build_histograms(jnp.asarray(bins), jnp.asarray(gh),
+                              jnp.zeros(50, jnp.int32), 1, 8)
+    sp = S.evaluate_splits(hist, jnp.asarray([[50.0, 50.0]]), S.SplitParams())
+    assert not np.isfinite(float(sp.gain[0])) or float(sp.gain[0]) <= 1e-5

@@ -1,0 +1,72 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret=True)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compress as C
+from repro.kernels import ops as KO
+from repro.kernels import ref as KR
+
+
+@pytest.mark.parametrize(
+    "n,f,max_bins,n_nodes",
+    [
+        (257, 4, 16, 1),
+        (1000, 17, 64, 4),
+        (513, 3, 256, 8),
+        (64, 1, 8, 2),
+        (2048, 9, 32, 13),
+    ],
+)
+def test_histogram_kernel_sweep(rng, n, f, max_bins, n_nodes):
+    bits = C.bits_needed(max_bins - 1)
+    bins = jnp.asarray(rng.integers(0, max_bins, size=(n, f)), jnp.int32)
+    gh = jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)
+    pos = jnp.asarray(rng.integers(0, n_nodes + 1, size=n), jnp.int32)
+    packed = C.pack(bins, bits)
+    got = KO.histogram_packed_op(packed, gh, pos, n_nodes, max_bins, bits)
+    want = KR.histogram_ref(packed, gh, pos, n_nodes, max_bins, bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("gh_dtype", [jnp.float32])
+@pytest.mark.parametrize("block", [(4, 4, 16), (8, 8, 64)])
+def test_histogram_kernel_blocks(rng, gh_dtype, block):
+    from repro.kernels.histogram import histogram_packed
+
+    nodes_blk, f_blk, w_blk = block
+    n, f, max_bins, n_nodes = 700, 6, 32, 5
+    bits = C.bits_needed(max_bins - 1)
+    bins = jnp.asarray(rng.integers(0, max_bins, size=(n, f)), jnp.int32)
+    gh = jnp.asarray(rng.normal(size=(n, 2)), gh_dtype)
+    pos = jnp.asarray(rng.integers(0, n_nodes + 1, size=n), jnp.int32)
+    packed = C.pack(bins, bits)
+    got = histogram_packed(packed, gh, pos, n_nodes, max_bins, bits,
+                           nodes_blk=nodes_blk, f_blk=f_blk, w_blk=w_blk)
+    want = KR.histogram_ref(packed, gh, pos, n_nodes, max_bins, bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", [(1, 3, 8), (4, 17, 64), (8, 5, 256)])
+def test_split_scan_kernel_sweep(rng, shape):
+    n_nodes, f, b = shape
+    hist = jnp.asarray(np.abs(rng.normal(size=(n_nodes, f, b, 2))), jnp.float32)
+    parent = jnp.sum(hist[:, 0], axis=1)
+    got = KO.split_scan_op(hist, parent, 1.0, 0.5)
+    want = KR.split_scan_ref(hist, parent, 1.0, 0.5)
+    fin = np.isfinite(np.asarray(want[..., 0]))
+    assert np.array_equal(np.isfinite(np.asarray(got[..., 0])), fin)
+    np.testing.assert_allclose(
+        np.asarray(got)[fin], np.asarray(want)[fin], rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4, 5, 8, 10, 16])
+def test_decompress_kernel_bits(rng, bits):
+    n, f = 333, 7
+    bins = jnp.asarray(rng.integers(0, 2**bits, size=(n, f)), jnp.int32)
+    packed = C.pack(bins, bits)
+    got = KO.decompress_op(packed, bits, n)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(bins))
+    want = KR.decompress_ref(packed, bits, n)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,76 @@
+"""§2.5 gradient evaluation: g/h must equal d/dm and d2/dm2 of the loss."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import objectives as O
+
+
+def _check_against_autodiff(obj, loss_scalar, margins, y, **kw):
+    gh = np.asarray(obj.grad(jnp.asarray(margins), jnp.asarray(y), **kw))
+    g_auto = jax.grad(lambda m: loss_scalar(m, jnp.asarray(y)))(jnp.asarray(margins))
+    np.testing.assert_allclose(gh[..., 0], np.asarray(g_auto), atol=1e-4)
+
+
+def test_logistic_gradients(rng):
+    n = 50
+    m = rng.normal(size=(n, 1)).astype(np.float32)
+    y = (rng.random(n) < 0.5).astype(np.float32)
+
+    def loss(margins, yy):
+        return jnp.sum(jax.nn.softplus(margins[:, 0]) - yy * margins[:, 0])
+
+    _check_against_autodiff(O.logistic, loss, m, y)
+    gh = np.asarray(O.logistic.grad(jnp.asarray(m), jnp.asarray(y)))
+    p = 1 / (1 + np.exp(-m[:, 0]))
+    np.testing.assert_allclose(gh[:, 0, 1], p * (1 - p), atol=1e-5)  # eq (2)
+
+
+def test_squared_gradients(rng):
+    n = 40
+    m = rng.normal(size=(n, 1)).astype(np.float32)
+    y = rng.normal(size=n).astype(np.float32)
+
+    def loss(margins, yy):
+        return 0.5 * jnp.sum((margins[:, 0] - yy) ** 2)
+
+    _check_against_autodiff(O.squared_error, loss, m, y)
+
+
+def test_softmax_gradients(rng):
+    n, k = 30, 5
+    m = rng.normal(size=(n, k)).astype(np.float32)
+    y = rng.integers(0, k, size=n).astype(np.float32)
+
+    def loss(margins, yy):
+        lse = jax.nn.logsumexp(margins, axis=1)
+        tgt = jnp.take_along_axis(margins, yy.astype(jnp.int32)[:, None], axis=1)[:, 0]
+        return jnp.sum(lse - tgt)
+
+    _check_against_autodiff(O.softmax, loss, m, y)
+
+
+def test_pairwise_gradients(rng):
+    n = 24
+    m = rng.normal(size=(n, 1)).astype(np.float32)
+    y = rng.normal(size=n).astype(np.float32)
+    gid = np.repeat(np.arange(4), 6).astype(np.int32)
+
+    def loss(margins, yy):
+        s = margins[:, 0]
+        same = jnp.asarray(gid)[:, None] == jnp.asarray(gid)[None, :]
+        better = (yy[:, None] > yy[None, :]) & same
+        pair = jax.nn.softplus(-(s[:, None] - s[None, :]))
+        return jnp.sum(jnp.where(better, pair, 0.0))
+
+    _check_against_autodiff(O.pairwise_rank, loss, m, y,
+                            group_ids=jnp.asarray(gid))
+
+
+def test_hessians_positive(rng):
+    n = 64
+    m = rng.normal(size=(n, 1)).astype(np.float32)
+    y = (rng.random(n) < 0.5).astype(np.float32)
+    for obj in (O.logistic, O.squared_error):
+        gh = np.asarray(obj.grad(jnp.asarray(m), jnp.asarray(y)))
+        assert np.all(gh[..., 1] > 0)

@@ -1,0 +1,55 @@
+"""Paper §2.1: feature quantile generation."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantile as Q
+
+
+def test_cuts_monotonic(rng):
+    x = rng.normal(size=(500, 6)).astype(np.float32)
+    cuts = np.asarray(Q.compute_cuts(jnp.asarray(x), 64))
+    finite = np.where(np.isfinite(cuts), cuts, np.inf)
+    assert np.all(np.diff(finite, axis=1) >= 0), "cuts must be ascending"
+
+
+def test_quantize_range_and_missing(rng):
+    x = rng.normal(size=(300, 4)).astype(np.float32)
+    x[rng.random(x.shape) < 0.2] = np.nan
+    max_bins = 32
+    cuts = Q.compute_cuts(jnp.asarray(x), max_bins)
+    bins = np.asarray(Q.quantize(jnp.asarray(x), cuts))
+    miss = Q.missing_bin_id(max_bins)
+    assert bins.min() >= 0 and bins.max() <= miss
+    np.testing.assert_array_equal(bins == miss, np.isnan(x))
+
+
+def test_quantize_equal_mass(rng):
+    """Each used value bin should hold roughly n/n_bins rows for a
+    continuous feature."""
+    n, max_bins = 8192, 16
+    x = rng.normal(size=(n, 1)).astype(np.float32)
+    cuts = Q.compute_cuts(jnp.asarray(x), max_bins)
+    bins = np.asarray(Q.quantize(jnp.asarray(x), cuts))[:, 0]
+    counts = np.bincount(bins, minlength=max_bins)
+    used = counts[counts > 0]
+    assert len(used) == Q.n_value_bins(max_bins)
+    assert used.max() / used.min() < 1.5
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), max_bins=st.sampled_from([4, 16, 64]))
+def test_quantize_order_preserving(seed, max_bins):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(100, 1)).astype(np.float32)
+    cuts = Q.compute_cuts(jnp.asarray(x), max_bins)
+    bins = np.asarray(Q.quantize(jnp.asarray(x), cuts))[:, 0]
+    order = np.argsort(x[:, 0])
+    assert np.all(np.diff(bins[order]) >= 0), "quantisation must preserve order"
+
+
+def test_constant_feature(rng):
+    x = np.full((100, 1), 3.14, np.float32)
+    cuts = Q.compute_cuts(jnp.asarray(x), 16)
+    bins = np.asarray(Q.quantize(jnp.asarray(x), cuts))
+    assert len(np.unique(bins)) == 1, "constant feature -> single bin"
