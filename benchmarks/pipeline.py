@@ -1,16 +1,32 @@
-"""Figure 1 phase split: where does a boosting round spend its time?
+"""Figure 1 pipeline benchmark + compressed-vs-dense round-loop comparison.
 
-Phases timed separately (all on-device, jit'd): quantise, compress,
-gradient evaluation, histogram build, split evaluation, prediction update.
+Two parts, both emitted into BENCH_pipeline.json so the perf trajectory is
+tracked across PRs (EXPERIMENTS.md §Perf):
+
+1. Phase split — where a boosting round spends its time (quantise,
+   compress, gradients, histogram build, split eval, prediction), each
+   phase jit'd and timed separately.
+
+2. Round loop — per-round wall-clock of the scan-compiled packed-native
+   training path (this repo's default) vs a seed-style dense path that
+   re-creates the pre-compressed-native behaviour: per-round Python
+   dispatch, full-matrix unpack at the top of every round, dense
+   histogram/partition/prediction, and an end-of-training concatenate.
+
+Acceptance tracking: the packed path must be >= 1.5x faster per round at
+1M x 50 synthetic rows on CPU (ISSUE 1).
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import booster as B
 from repro.core import compress as C
 from repro.core import histogram as H
 from repro.core import objectives as O
@@ -18,7 +34,6 @@ from repro.core import predict as PR
 from repro.core import quantile as Q
 from repro.core import split as S
 from repro.core import tree as T
-from repro.data import make_dataset
 
 
 def _time(fn, *args, iters=3):
@@ -30,10 +45,19 @@ def _time(fn, *args, iters=3):
     return (time.perf_counter() - t0) / iters
 
 
-def run(rows=50_000, max_bins=256, max_depth=6):
-    x, y, spec = make_dataset("higgs", n_rows=rows)
-    xj, yj = jnp.asarray(x), jnp.asarray(y)
-    obj = O.OBJECTIVES[spec.objective]
+def synthetic(rows: int, features: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((rows, features), dtype=np.float32)
+    w = np.zeros(features, np.float32)
+    k = max(3, features // 5)
+    w[:k] = rng.standard_normal(k).astype(np.float32)
+    y = ((x @ w + 0.3 * rng.standard_normal(rows)) > 0).astype(np.float32)
+    return x, y
+
+
+def phase_split(xj, yj, max_bins, max_depth, objective="binary:logistic"):
+    rows = xj.shape[0]
+    obj = O.OBJECTIVES[objective]
 
     t_quant_cuts = _time(lambda a: Q.compute_cuts(a, max_bins), xj)
     cuts = Q.compute_cuts(xj, max_bins)
@@ -41,6 +65,7 @@ def run(rows=50_000, max_bins=256, max_depth=6):
     bins = Q.quantize(xj, cuts)
     bits = C.bits_needed(max_bins - 1)
     t_compress = _time(lambda b: C.pack(b, bits), bins)
+    packed = C.pack(bins, bits)
 
     margins = jnp.zeros((rows, 1))
     t_grad = _time(lambda m: obj.grad(m, yj), margins)
@@ -49,34 +74,150 @@ def run(rows=50_000, max_bins=256, max_depth=6):
     pos = jnp.zeros(rows, jnp.int32)
     t_hist = _time(lambda b, g, p: H.build_histograms(b, g, p, 1, max_bins),
                    bins, gh, pos)
+    t_hist_packed = _time(
+        lambda pk, g, p: H.build_histograms_packed(
+            pk, g, p, 1, max_bins, bits, rows),
+        packed, gh, pos)
     hist = H.build_histograms(bins, gh, pos, 1, max_bins)
     parent = jnp.sum(gh, axis=0)[None]
     t_split = _time(lambda h, p: S.evaluate_splits(h, p), hist, parent)
 
-    tr = T.grow_tree(bins, gh, cuts, max_depth, max_bins)
+    pb = C.PackedBins(packed=packed, bits=bits, n_rows=rows)
+    tr = T.grow_tree(pb, gh, cuts, max_depth, max_bins)
     ens = PR.stack_trees([tr])
-    t_pred = _time(lambda b: PR.predict_binned(ens, b, max_bins - 1, max_depth),
-                   bins)
-    t_tree = _time(lambda b, g: T.grow_tree(b, g, cuts, max_depth, max_bins),
-                   bins, gh)
+    t_pred = _time(
+        lambda pk: PR.predict_binned_packed(
+            ens, pk, bits, rows, max_bins - 1, max_depth),
+        packed)
+    t_tree = _time(lambda d, g: T.grow_tree(d, g, cuts, max_depth, max_bins),
+                   pb, gh)
 
     return {
-        "quantile_cuts_s": t_quant_cuts,
-        "quantize_s": t_quantize,
-        "compress_s": t_compress,
-        "gradient_s": t_grad,
-        "histogram_root_s": t_hist,
-        "split_eval_s": t_split,
-        "predict_s": t_pred,
-        "full_tree_s": t_tree,
+        "quantile_cuts_ms": t_quant_cuts * 1e3,
+        "quantize_ms": t_quantize * 1e3,
+        "compress_ms": t_compress * 1e3,
+        "gradient_ms": t_grad * 1e3,
+        "histogram_root_dense_ms": t_hist * 1e3,
+        "histogram_root_packed_ms": t_hist_packed * 1e3,
+        "split_eval_ms": t_split * 1e3,
+        "predict_packed_ms": t_pred * 1e3,
+        "full_tree_packed_ms": t_tree * 1e3,
     }
 
 
-def main():
-    r = run()
-    print("# Pipeline phase split (higgs-shaped, 50k rows, depth 6)")
-    for k, v in r.items():
-        print(f"{k},{v*1e3:.2f}ms")
+def _make_seed_dense_round(cfg, obj, cuts, n_rows, bits):
+    """The seed's round step, verbatim in spirit: full-matrix unpack up
+    front, dense builders, per-tree Ensemble reconstruction for the margin
+    update. jit'd per round and dispatched from Python."""
+    mb = cfg.max_bins - 1
+
+    @jax.jit
+    def round_step(packed, margins, y):
+        bins = C.unpack(packed, bits, n_rows)
+        gh_all = obj.grad(margins, y)
+        tr = T.grow_tree(
+            bins, gh_all[:, 0, :], cuts, cfg.max_depth, cfg.max_bins,
+            cfg.split_params,
+            hist_subtraction=False,  # the seed had full builds every level
+        )
+        ens1 = PR.Ensemble(
+            feature=tr.feature[None], split_bin=tr.split_bin[None],
+            threshold=tr.threshold[None], default_left=tr.default_left[None],
+            leaf_value=tr.leaf_value[None], is_leaf=tr.is_leaf[None],
+            n_classes=1, base_score=0.0,
+        )
+        delta = PR.predict_binned(ens1, bins, mb, cfg.max_depth)[:, 0]
+        new_margins = margins.at[:, 0].add(cfg.learning_rate * delta)
+        stacked = jax.tree.map(lambda a: a[None], tr)
+        return stacked, new_margins
+
+    return round_step
+
+
+def round_loop(xj, yj, max_bins, max_depth, n_rounds):
+    rows = xj.shape[0]
+    cfg = B.BoosterConfig(
+        n_rounds=n_rounds, max_depth=max_depth, max_bins=max_bins,
+        objective="binary:logistic",
+    )
+    obj = O.OBJECTIVES[cfg.objective]
+    cuts = Q.compute_cuts(xj, max_bins)
+    bins = Q.quantize(xj, cuts)
+    matrix = C.compress(bins, cuts, max_bins)
+    pb = matrix.as_packed_bins()
+    margins0 = jnp.zeros((rows, 1), jnp.float32)
+
+    # --- seed-style dense path: python dispatch + unpack per round --------
+    seed_round = _make_seed_dense_round(cfg, obj, cuts, rows, matrix.bits)
+    _, warm = seed_round(matrix.packed, margins0, yj)  # compile
+    jax.block_until_ready(warm)
+    t0 = time.perf_counter()
+    trees, margins = [], margins0
+    for _ in range(n_rounds):
+        stacked, margins = seed_round(matrix.packed, margins, yj)
+        trees.append(stacked)
+    all_trees = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *trees)
+    jax.block_until_ready((all_trees, margins))
+    t_seed = time.perf_counter() - t0
+
+    # --- scan-compiled packed-native path ---------------------------------
+    train_fn = B._make_train_fn(cfg, obj, cuts, None, track_metric=False)
+    out = train_fn(pb, margins0, yj, {})  # compile
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    out = train_fn(pb, margins0, yj, {})
+    jax.block_until_ready(out)
+    t_packed = time.perf_counter() - t0
+
+    dense_bins_bytes = rows * xj.shape[1] * 4
+    return {
+        "n_rounds": n_rounds,
+        "seed_dense_per_round_s": t_seed / n_rounds,
+        "packed_scan_per_round_s": t_packed / n_rounds,
+        "speedup_packed_vs_seed_dense": t_seed / t_packed,
+        "rows_per_sec_packed": rows * n_rounds / t_packed,
+        "rows_per_sec_seed_dense": rows * n_rounds / t_seed,
+        "resident_matrix_bytes_packed": matrix.nbytes_compressed(),
+        "resident_matrix_bytes_dense_int32": dense_bins_bytes,
+        "seed_transient_unpack_bytes_per_round": dense_bins_bytes,
+        "packed_transient_unpack_bytes_per_round": 0,
+        "compression_ratio_vs_fp32": matrix.compression_ratio(),
+    }
+
+
+def run(rows, features, max_bins, max_depth, n_rounds):
+    x, y = synthetic(rows, features)
+    xj, yj = jnp.asarray(x), jnp.asarray(y)
+    result = {
+        "config": {
+            "rows": rows, "features": features, "max_bins": max_bins,
+            "max_depth": max_depth, "backend": jax.default_backend(),
+        },
+        "phases": phase_split(xj, yj, max_bins, max_depth),
+        "round_loop": round_loop(xj, yj, max_bins, max_depth, n_rounds),
+    }
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=1_000_000)
+    ap.add_argument("--features", type=int, default=50)
+    ap.add_argument("--max-bins", type=int, default=256)
+    ap.add_argument("--max-depth", type=int, default=6)
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--out", type=str, default="BENCH_pipeline.json")
+    args = ap.parse_args(argv)
+
+    r = run(args.rows, args.features, args.max_bins, args.max_depth, args.rounds)
+    print(f"# Pipeline ({args.rows}x{args.features}, depth {args.max_depth})")
+    for k, v in r["phases"].items():
+        print(f"{k},{v:.2f}")
+    for k, v in r["round_loop"].items():
+        print(f"{k},{v}")
+    with open(args.out, "w") as f:
+        json.dump(r, f, indent=2)
+    print(f"wrote {args.out}")
     return r
 
 

@@ -39,7 +39,7 @@ def main() -> None:
             kernels.main()
         elif sec == "pipeline":
             from benchmarks import pipeline
-            pipeline.main()
+            pipeline.main([])  # defaults; don't re-parse run.py's argv
         elif sec == "ablations":
             from benchmarks import ablations
             ablations.main()

@@ -8,12 +8,17 @@ devices) -> prediction, all on-device.
 # `predict` stay module-only; use predict_proba / compress_matrix aliases).
 from repro.core.booster import BoosterConfig, TrainState, predict_margins, train
 from repro.core.booster import predict as predict_proba
-from repro.core.compress import CompressedMatrix, pack, unpack
+from repro.core.compress import CompressedMatrix, PackedBins, pack, unpack
 from repro.core.compress import compress as compress_matrix
 from repro.core.quantile import compute_cuts, quantize
 from repro.core.split import SplitParams
 from repro.core.tree import Tree, grow_tree
-from repro.core.predict import Ensemble, predict_binned, predict_raw
+from repro.core.predict import (
+    Ensemble,
+    predict_binned,
+    predict_binned_packed,
+    predict_raw,
+)
 
 __all__ = [
     "BoosterConfig",
@@ -22,6 +27,7 @@ __all__ = [
     "predict_proba",
     "predict_margins",
     "CompressedMatrix",
+    "PackedBins",
     "compress_matrix",
     "pack",
     "unpack",
@@ -32,5 +38,6 @@ __all__ = [
     "grow_tree",
     "Ensemble",
     "predict_binned",
+    "predict_binned_packed",
     "predict_raw",
 ]

@@ -1,13 +1,21 @@
 """Gradient boosting driver — the Figure 1 pipeline, end-to-end on device.
 
-Train loop per boosting round (all phases on-accelerator, as in the paper):
+The entire training run is ONE compiled program: a jax.lax.scan over
+boosting rounds whose ys-stack is the preallocated (n_rounds * k, arena)
+ensemble arena. Per round (all phases on-accelerator, as in the paper):
   predict (incremental margins) -> gradient evaluation -> quantised-histogram
   tree construction -> margin update.
+There is no per-round Python dispatch and no end-of-training concatenate —
+scan writes each round's trees into its output buffer in place.
 
 Feature quantisation + compression happen once up front (Figure 1's left
-boxes). The booster never touches the raw float matrix again after
-quantisation; training-set prediction runs on bin-space thresholds
-(predict_binned), validation on raw thresholds (predict_raw).
+boxes). With compress_matrix=True the bit-packed CompressedMatrix is the
+*only* training-set representation from then on (paper §2.2, DESIGN.md §2):
+histograms are built from the packed words (Pallas kernel or the row-block
+XLA fallback), row repartitioning and training-set prediction extract the
+needed feature column from the words on the fly. The dense (n, f) int32
+bins array is never materialised again after quantisation. Validation runs
+on raw thresholds (predict_raw).
 
 Multiclass trains n_classes trees per round on softmax gradients (round-robin
 class layout, XGBoost's scheme). Margins are maintained incrementally — each
@@ -47,6 +55,7 @@ class BoosterConfig:
     max_leaves: int = 0  # lossguide budget (0 = 2^max_depth)
     use_kernel_histograms: bool = False  # route through the Pallas kernel path
     compress_matrix: bool = True  # paper §2.2 (False = raw int32 bins)
+    hist_block_rows: int = 65536  # packed-histogram fallback dense-tile bound
 
     @property
     def split_params(self) -> S.SplitParams:
@@ -61,22 +70,34 @@ class TrainState:
     history: list[dict] = field(default_factory=list)
 
 
-def _make_round_step(cfg: BoosterConfig, obj: O.Objective, cuts: jax.Array,
-                     n_rows: int, bits: int, hist_builder=None):
-    """One boosting round as a single jit: gradients -> K trees -> margins."""
-    k = obj.n_outputs(cfg.n_classes)
-    mb = cfg.max_bins - 1  # missing bin id
+def _tree_margin_delta(cfg: BoosterConfig, tr: T.Tree, data) -> jax.Array:
+    """One tree's leaf outputs over all training rows, straight from the
+    training representation (packed or dense) — no Ensemble construction."""
+    mb = cfg.max_bins - 1
+    if isinstance(data, C.PackedBins):
+        return PR.traverse_tree_packed(
+            tr.feature, tr.split_bin, tr.default_left, tr.leaf_value, tr.is_leaf,
+            data.packed, data.bits, data.n_rows, mb, cfg.max_depth,
+        )
+    return PR.traverse_tree_binned(
+        tr.feature, tr.split_bin, tr.default_left, tr.leaf_value, tr.is_leaf,
+        data, mb, cfg.max_depth,
+    )
 
-    def round_step(packed_or_bins, margins, y, extra):
-        if cfg.compress_matrix:
-            bins = C.unpack(packed_or_bins, bits, n_rows)
-        else:
-            bins = packed_or_bins
+
+def _make_round_step(cfg: BoosterConfig, obj: O.Objective, cuts: jax.Array,
+                     hist_builder=None):
+    """One boosting round: gradients -> K trees -> margins. Pure (not jit'd
+    on its own) so it can be the body of the training scan."""
+    k = obj.n_outputs(cfg.n_classes)
+
+    def round_step(data, margins, y, extra):
         gh_all = obj.grad(margins, y, **extra)  # (n, k, 2)
         trees = []
+        new_margins = margins
         for c in range(k):
             tr = T.grow_tree(
-                bins,
+                data,
                 gh_all[:, c, :],
                 cuts,
                 cfg.max_depth,
@@ -85,27 +106,41 @@ def _make_round_step(cfg: BoosterConfig, obj: O.Objective, cuts: jax.Array,
                 growth=cfg.growth,
                 max_leaves=cfg.max_leaves or 2**cfg.max_depth,
                 hist_builder=hist_builder,
+                hist_block_rows=cfg.hist_block_rows,
             )
             trees.append(tr)
-        # Incremental margin update from this round's trees only.
-        new_margins = margins
-        for c, tr in enumerate(trees):
-            ens1 = PR.Ensemble(
-                feature=tr.feature[None],
-                split_bin=tr.split_bin[None],
-                threshold=tr.threshold[None],
-                default_left=tr.default_left[None],
-                leaf_value=tr.leaf_value[None],
-                is_leaf=tr.is_leaf[None],
-                n_classes=1,
-                base_score=0.0,
-            )
-            delta = PR.predict_binned(ens1, bins, mb, cfg.max_depth)[:, 0]
+            # Incremental margin update from this tree only.
+            delta = _tree_margin_delta(cfg, tr, data)
             new_margins = new_margins.at[:, c].add(cfg.learning_rate * delta)
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
         return stacked, new_margins
 
-    return jax.jit(round_step)
+    return round_step
+
+
+def _make_train_fn(cfg: BoosterConfig, obj: O.Objective, cuts: jax.Array,
+                   hist_builder, track_metric: bool):
+    """The whole training run as one jit: scan over rounds. Returns
+    (final_margins, stacked_trees (n_rounds, k, arena...), metrics (n_rounds,))."""
+    round_step = _make_round_step(cfg, obj, cuts, hist_builder)
+
+    @jax.jit
+    def train_fn(data, margins0, y, extra):
+        def body(margins, _):
+            stacked, new_margins = round_step(data, margins, y, extra)
+            metric = (
+                obj.metric(new_margins, y).astype(jnp.float32)
+                if track_metric
+                else jnp.float32(0.0)
+            )
+            return new_margins, (stacked, metric)
+
+        margins, (all_trees, metrics) = jax.lax.scan(
+            body, margins0, None, length=cfg.n_rounds
+        )
+        return margins, all_trees, metrics
+
+    return train_fn
 
 
 def train(
@@ -133,38 +168,59 @@ def train(
     margins = jnp.full((n, k), base, jnp.float32)
     extra = {"group_ids": jnp.asarray(group_ids)} if group_ids is not None else {}
 
+    if cfg.compress_matrix:
+        data = matrix.as_packed_bins()
+        del bins  # packed words are the training representation from here on
+    else:
+        data = bins
+
     hist_builder = None
     if cfg.use_kernel_histograms:
         from repro.kernels import ops as KO
 
-        hist_builder = KO.build_histograms_kernel
+        hist_builder = (
+            KO.build_histograms_kernel_packed
+            if cfg.compress_matrix
+            else KO.build_histograms_kernel
+        )
 
-    data = matrix.packed if cfg.compress_matrix else bins
-    round_step = _make_round_step(cfg, obj, cuts, n, matrix.bits, hist_builder)
+    # Record cadence: verbose_every if set, else every round when only a
+    # callback wants records. The whole run is one compiled program, so
+    # records are emitted post-hoc and share the fit's wall clock.
+    record_every = verbose_every or (1 if callback else 0)
+    track_metric = record_every > 0
+    train_fn = _make_train_fn(cfg, obj, cuts, hist_builder, track_metric)
 
-    trees_per_class: list = []
-    history: list[dict] = []
     t0 = time.perf_counter()
-    for r in range(cfg.n_rounds):
-        stacked, margins = round_step(data, margins, y, extra)
-        trees_per_class.append(stacked)
-        if verbose_every and (r % verbose_every == 0 or r == cfg.n_rounds - 1):
-            m = float(obj.metric(margins, y))
-            rec = {"round": r, f"train_{obj.metric_name}": m,
-                   "elapsed_s": time.perf_counter() - t0}
-            history.append(rec)
-            if callback:
-                callback(r, rec)
+    margins, all_trees, metrics = train_fn(data, margins, y, extra)
+    jax.block_until_ready(margins)
+    elapsed = time.perf_counter() - t0
 
-    # Stack rounds: each `stacked` is a Tree pytree with leading axis k.
-    all_trees = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *trees_per_class)
+    history: list[dict] = []
+    if track_metric:
+        metrics_host = np.asarray(metrics)
+        for r in range(cfg.n_rounds):
+            if r % record_every == 0 or r == cfg.n_rounds - 1:
+                rec = {
+                    "round": r,
+                    f"train_{obj.metric_name}": float(metrics_host[r]),
+                    "elapsed_s": elapsed,  # whole-fit wall clock (one program)
+                }
+                history.append(rec)
+                if callback:
+                    callback(r, rec)
+
+    # The scan's ys-stack IS the ensemble arena: (n_rounds, k, arena) fields
+    # reshaped to XGBoost's round-robin (n_rounds * k, arena) layout — no
+    # concatenate, no per-round host round trips.
+    arena = all_trees.feature.shape[-1]
     ens = PR.Ensemble(
-        feature=all_trees.feature,
-        split_bin=all_trees.split_bin,
-        threshold=all_trees.threshold,
-        default_left=all_trees.default_left,
-        leaf_value=all_trees.leaf_value,
-        is_leaf=all_trees.is_leaf,
+        feature=all_trees.feature.reshape(-1, arena),
+        split_bin=all_trees.split_bin.reshape(-1, arena),
+        threshold=all_trees.threshold.reshape(-1, arena),
+        default_left=all_trees.default_left.reshape(-1, arena),
+        leaf_value=all_trees.leaf_value.reshape(-1, arena),
+        is_leaf=all_trees.is_leaf.reshape(-1, arena),
         n_classes=k,
         base_score=base,
     )

@@ -61,6 +61,49 @@ def unpack(packed: jax.Array, bits: int, n_rows: int) -> jax.Array:
     return b.reshape(packed.shape[0], -1)[:, :n_rows].T.astype(jnp.int32)
 
 
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["packed"],
+    meta_fields=["bits", "n_rows"],
+)
+@dataclass(frozen=True)
+class PackedBins:
+    """Traced view of the bit-packed matrix — the first-class training
+    representation (DESIGN.md §2).
+
+    Unlike CompressedMatrix (a host-side container that also carries cuts),
+    PackedBins is a registered pytree so it can flow through jit / scan /
+    shard_map. `bits` and `n_rows` are static metadata, so XLA specialises
+    the shift/mask constants per width. grow_tree, update_positions and
+    binned prediction all dispatch on this type and consume the packed
+    words directly — the full dense (n_rows, n_features) bins array is
+    never materialised after initial quantisation.
+    """
+
+    packed: jax.Array  # (n_features, n_words) uint32
+    bits: int
+    n_rows: int
+
+    @property
+    def n_features(self) -> int:
+        return self.packed.shape[0]
+
+
+def gather_feature_bins(packed: jax.Array, bits: int, feat: jax.Array) -> jax.Array:
+    """Extract bins[i, feat[i]] for every row i straight from packed words.
+
+    One uint32 word gather per row plus a shift/mask — the dense matrix
+    never needs to exist. feat is (n,) int32 (a per-row feature id, e.g.
+    the split feature of the node each row currently sits in).
+    """
+    n = feat.shape[0]
+    spw = symbols_per_word(bits)
+    row = jnp.arange(n, dtype=jnp.int32)
+    word = packed[feat, row // spw]
+    shift = (row % spw).astype(jnp.uint32) * jnp.uint32(bits)
+    return ((word >> shift) & jnp.uint32((1 << bits) - 1)).astype(jnp.int32)
+
+
 @dataclass(frozen=True)
 class CompressedMatrix:
     """The quantised + bit-packed training matrix ("ELLPACK page" analogue)."""
@@ -87,15 +130,28 @@ class CompressedMatrix:
     def compression_ratio(self) -> float:
         return self.nbytes_dense_fp32() / self.nbytes_compressed()
 
+    def as_packed_bins(self) -> PackedBins:
+        return PackedBins(packed=self.packed, bits=self.bits, n_rows=self.n_rows)
 
-def compress(bins: jax.Array, cuts: jax.Array, max_bins: int) -> CompressedMatrix:
+
+def compress(
+    bins: jax.Array,
+    cuts: jax.Array,
+    max_bins: int,
+    max_value: int | None = None,
+) -> CompressedMatrix:
     """Quantised matrix -> compressed form, choosing the minimal bit width.
 
     The paper compresses to log2(max_value) bits where max_value is the
     largest bin id actually present; we honour that (a dataset whose features
     all quantise to <= 16 distinct bins packs at 4-5 bits, not 8).
+
+    `max_value`: pass it when known (e.g. a caller that just quantised with
+    NaNs present knows the missing bin max_bins - 1 is occupied) to skip the
+    device->host sync that `int(jnp.max(bins))` otherwise forces.
     """
-    max_value = int(jnp.max(bins))
+    if max_value is None:
+        max_value = int(jnp.max(bins))
     bits = bits_needed(max_value)
     return CompressedMatrix(
         packed=pack(bins, bits),

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import jaxcompat
 from repro.core import compress as C
 from repro.core import objectives as O
 from repro.core import quantile as Q
@@ -50,15 +51,17 @@ def make_distributed_round(
 
     def round_body(data, margins, y):
         if cfg.compress_matrix:
-            bins = C.unpack(data, bits, n_rows_per_shard)
+            # Packed-native: each shard's words ARE its training matrix —
+            # no per-round unpack, no dense (n, f) bins (DESIGN.md §2).
+            rep = C.PackedBins(packed=data, bits=bits, n_rows=n_rows_per_shard)
         else:
-            bins = data
+            rep = data
         gh_all = obj.grad(margins, y)
         trees = []
         new_margins = margins
         for c in range(k):
             tr = T.grow_tree(
-                bins,
+                rep,
                 gh_all[:, c, :],
                 cuts,
                 cfg.max_depth,
@@ -70,15 +73,17 @@ def make_distributed_round(
                 extra_axes=extra,
             )
             trees.append(tr)
-            ens1 = PR.Ensemble(
-                feature=tr.feature[None],
-                split_bin=tr.split_bin[None],
-                threshold=tr.threshold[None],
-                default_left=tr.default_left[None],
-                leaf_value=tr.leaf_value[None],
-                is_leaf=tr.is_leaf[None],
-            )
-            delta = PR.predict_binned(ens1, bins, mb, cfg.max_depth)[:, 0]
+            if cfg.compress_matrix:
+                delta = PR.traverse_tree_packed(
+                    tr.feature, tr.split_bin, tr.default_left, tr.leaf_value,
+                    tr.is_leaf, rep.packed, rep.bits, rep.n_rows, mb,
+                    cfg.max_depth,
+                )
+            else:
+                delta = PR.traverse_tree_binned(
+                    tr.feature, tr.split_bin, tr.default_left, tr.leaf_value,
+                    tr.is_leaf, rep, mb, cfg.max_depth,
+                )
             new_margins = new_margins.at[:, c].add(cfg.learning_rate * delta)
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
         return stacked, new_margins
@@ -91,12 +96,11 @@ def make_distributed_round(
     else:
         data_spec = P(axes, None)
 
-    shard_fn = jax.shard_map(
+    shard_fn = jaxcompat.shard_map(
         round_body,
         mesh=mesh,
         in_specs=(data_spec, row_spec, row_spec),
         out_specs=(P(), row_spec),
-        check_vma=False,
     )
     return jax.jit(shard_fn)
 

@@ -16,6 +16,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.compress import symbols_per_word
+
 
 @functools.partial(jax.jit, static_argnames=("n_nodes", "max_bins"))
 def build_histograms(
@@ -34,6 +36,123 @@ def build_histograms(
     flat = jnp.zeros(((n_nodes + 1) * f * max_bins, 2), jnp.float32)
     gh_rep = jnp.broadcast_to(gh[:, None, :], (n, f, 2)).reshape(-1, 2)
     flat = flat.at[idx.reshape(-1)].add(gh_rep, mode="drop")
+    return flat.reshape(n_nodes + 1, f, max_bins, 2)[:n_nodes]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_nodes", "max_bins", "bits", "n_rows", "block_rows"),
+)
+def build_histograms_packed(
+    packed: jax.Array,  # (f, n_words) uint32 bit-packed bins
+    gh: jax.Array,  # (n, 2) float32
+    positions: jax.Array,  # (n,) int32 level-local node ids, n_nodes = inactive
+    n_nodes: int,
+    max_bins: int,
+    bits: int,
+    n_rows: int,
+    block_rows: int = 65536,
+) -> jax.Array:
+    """build_histograms from the bit-packed matrix, without ever
+    materialising the full dense (n_rows, n_features) bins array.
+
+    XLA-native fallback for the Pallas kernel (kernels/histogram.py): a
+    lax.scan over row blocks unpacks one (block_rows, f) tile at a time in
+    registers/cache and scatter-adds it into the carried flat histogram.
+    HBM reads of the dominant input stream stay at the compressed size
+    (DESIGN.md §2), and the dense intermediate is bounded by block_rows
+    regardless of n_rows.
+    """
+    f, w = packed.shape
+    spw = symbols_per_word(bits)
+    bw = max(1, min(block_rows // spw, w))  # words per row block
+    w_pad = (-w) % bw
+    n_chunks = (w + w_pad) // bw
+    rows_pc = bw * spw
+    n_padded = n_chunks * rows_pc
+
+    packed_c = jnp.pad(packed, ((0, 0), (0, w_pad)))
+    packed_c = packed_c.reshape(f, n_chunks, bw).transpose(1, 0, 2)
+    gh_c = jnp.pad(gh, ((0, n_padded - n_rows), (0, 0))).reshape(n_chunks, rows_pc, 2)
+    # Padding rows (both word-alignment and block padding) go to the dump
+    # slot n_nodes, exactly like inactive rows.
+    pos_c = jnp.pad(
+        jnp.minimum(positions, n_nodes).astype(jnp.int32),
+        (0, n_padded - n_rows),
+        constant_values=n_nodes,
+    ).reshape(n_chunks, rows_pc)
+
+    shifts = (jnp.arange(spw, dtype=jnp.uint32) * bits)[None, None, :]
+    mask = jnp.uint32((1 << bits) - 1)
+    fidx = jnp.arange(f, dtype=jnp.int32)[None, :]
+
+    def body(flat, chunk):
+        words, g, p = chunk
+        b = ((words[:, :, None] >> shifts) & mask).reshape(f, rows_pc)
+        b = b.T.astype(jnp.int32)  # (rows_pc, f) — the only dense tile
+        idx = (p[:, None] * f + fidx) * max_bins + b
+        g_rep = jnp.broadcast_to(g[:, None, :], (rows_pc, f, 2)).reshape(-1, 2)
+        return flat.at[idx.reshape(-1)].add(g_rep, mode="drop"), None
+
+    flat = jnp.zeros(((n_nodes + 1) * f * max_bins, 2), jnp.float32)
+    flat, _ = jax.lax.scan(body, flat, (packed_c, gh_c, pos_c))
+    return flat.reshape(n_nodes + 1, f, max_bins, 2)[:n_nodes]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_nodes", "max_bins", "bits", "block_rows")
+)
+def build_histograms_packed_rows(
+    packed: jax.Array,  # (f, n_words) uint32 bit-packed bins
+    gh_sel: jax.Array,  # (m, 2) float32, pre-gathered for the selected rows
+    pos_sel: jax.Array,  # (m,) int32 node ids, n_nodes = dump/padding slot
+    row_ids: jax.Array,  # (m,) int32 original row ids (>= n_rows = padding)
+    n_nodes: int,
+    max_bins: int,
+    bits: int,
+    block_rows: int = 65536,
+) -> jax.Array:
+    """Histogram over a *compacted row subset* straight from packed words.
+
+    The workhorse of the histogram-subtraction trick (DESIGN.md §7.5): the
+    caller compacts the rows of each level's smaller children into row_ids
+    and gets their histogram at subset cost; sibling histograms come from
+    parent - subset. Rows are fetched with one word gather + shift/mask per
+    (row, feature) — the dense matrix never exists, and the dense tile is
+    bounded by block_rows.
+    """
+    f, w = packed.shape
+    spw = symbols_per_word(bits)
+    m = row_ids.shape[0]
+    bs = max(1, min(block_rows, m))
+    pad = (-m) % bs
+    n_chunks = (m + pad) // bs
+
+    rid = jnp.minimum(jnp.pad(row_ids, (0, pad)), w * spw - 1)
+    pos_p = jnp.pad(
+        jnp.minimum(pos_sel, n_nodes).astype(jnp.int32),
+        (0, pad),
+        constant_values=n_nodes,
+    )
+    gh_p = jnp.pad(gh_sel, ((0, pad), (0, 0)))
+    rid_c = rid.reshape(n_chunks, bs)
+    pos_c = pos_p.reshape(n_chunks, bs)
+    gh_c = gh_p.reshape(n_chunks, bs, 2)
+
+    mask = jnp.uint32((1 << bits) - 1)
+    fidx = jnp.arange(f, dtype=jnp.int32)[None, :]
+
+    def body(flat, chunk):
+        r, p, g = chunk
+        words = packed[:, r // spw]  # (f, bs) word gather
+        shift = ((r % spw).astype(jnp.uint32) * jnp.uint32(bits))[None, :]
+        b = ((words >> shift) & mask).T.astype(jnp.int32)  # (bs, f)
+        idx = (p[:, None] * f + fidx) * max_bins + b
+        g_rep = jnp.broadcast_to(g[:, None, :], (bs, f, 2)).reshape(-1, 2)
+        return flat.at[idx.reshape(-1)].add(g_rep, mode="drop"), None
+
+    flat = jnp.zeros(((n_nodes + 1) * f * max_bins, 2), jnp.float32)
+    flat, _ = jax.lax.scan(body, flat, (rid_c, pos_c, gh_c))
     return flat.reshape(n_nodes + 1, f, max_bins, 2)[:n_nodes]
 
 

@@ -10,8 +10,12 @@ positions[i] = arena node id of row i, or -1 once the row rests in a leaf.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+
+from repro.core import compress as C
 
 
 @jax.jit
@@ -30,6 +34,34 @@ def update_positions(
 
     f = feature[pos]
     b = jnp.take_along_axis(bins, f[:, None], axis=1)[:, 0]
+    is_missing = b == missing_bin
+    go_left = jnp.where(is_missing, default_left[pos], b <= split_bin[pos])
+
+    child = jnp.where(go_left, 2 * pos + 1, 2 * pos + 2)
+    return jnp.where(splits_here, child, -1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("missing_bin", "bits"))
+def update_positions_packed(
+    packed: jax.Array,  # (f, n_words) uint32 bit-packed bins
+    positions: jax.Array,  # (n,) int32 arena node ids, -1 = inactive
+    split_mask: jax.Array,  # (n_arena,) bool — nodes that split this level
+    feature: jax.Array,  # (n_arena,) int32
+    split_bin: jax.Array,  # (n_arena,) int32
+    default_left: jax.Array,  # (n_arena,) bool
+    missing_bin: int,
+    bits: int,
+) -> jax.Array:
+    """update_positions on the bit-packed matrix: the split-feature bin of
+    each row is extracted on the fly (one word gather + shift/mask per row),
+    so routing touches n_rows/spw-word columns instead of a dense (n, f)
+    matrix — the dense bins never exist."""
+    pos = jnp.maximum(positions, 0)
+    active = positions >= 0
+    splits_here = split_mask[pos] & active
+
+    f = feature[pos]
+    b = C.gather_feature_bins(packed, bits, f)
     is_missing = b == missing_bin
     go_left = jnp.where(is_missing, default_left[pos], b <= split_bin[pos])
 

@@ -20,6 +20,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import compress as C
 from repro.core.tree import Tree
 
 
@@ -92,6 +93,45 @@ def _traverse(tree_arrays, x_row_lookup, max_depth: int) -> jax.Array:
     return leaf_value[node]
 
 
+def traverse_tree_binned(
+    feature, split_bin, default_left, leaf_value, is_leaf,
+    bins: jax.Array, missing_bin: int, max_depth: int,
+) -> jax.Array:
+    """Leaf outputs (n_rows,) of ONE tree arena over dense quantised rows.
+
+    Used directly by the boosting round step for incremental margin updates
+    (no single-tree Ensemble needs to be constructed)."""
+    nr = bins.shape[0]
+
+    class Lookup:
+        n_rows = nr
+
+        def __call__(self, f, node):
+            b = jnp.take_along_axis(bins, f[:, None], axis=1)[:, 0]
+            return b <= split_bin[node], b == missing_bin
+
+    return _traverse((feature, default_left, leaf_value, is_leaf), Lookup(), max_depth)
+
+
+def traverse_tree_packed(
+    feature, split_bin, default_left, leaf_value, is_leaf,
+    packed: jax.Array, bits: int, n_rows: int, missing_bin: int, max_depth: int,
+) -> jax.Array:
+    """traverse_tree_binned on the bit-packed matrix: each level gathers one
+    uint32 word per row and extracts the node's split-feature bin with a
+    shift/mask — the dense (n, f) bins matrix never exists."""
+    nr = n_rows
+
+    class Lookup:
+        n_rows = nr
+
+        def __call__(self, f, node):
+            b = C.gather_feature_bins(packed, bits, f)
+            return b <= split_bin[node], b == missing_bin
+
+    return _traverse((feature, default_left, leaf_value, is_leaf), Lookup(), max_depth)
+
+
 @functools.partial(jax.jit, static_argnames=("missing_bin", "max_depth"))
 def predict_binned(
     ens: Ensemble, bins: jax.Array, missing_bin: int, max_depth: int
@@ -101,16 +141,9 @@ def predict_binned(
 
     def one_tree(carry, t):
         feature, split_bin, default_left, leaf_value, is_leaf = t
-
-        class Lookup:
-            n_rows = bins.shape[0]
-
-            def __call__(self, f, node):
-                b = jnp.take_along_axis(bins, f[:, None], axis=1)[:, 0]
-                return b <= split_bin[node], b == missing_bin
-
-        return carry, _traverse(
-            (feature, default_left, leaf_value, is_leaf), Lookup(), max_depth
+        return carry, traverse_tree_binned(
+            feature, split_bin, default_left, leaf_value, is_leaf,
+            bins, missing_bin, max_depth,
         )
 
     _, leaves = jax.lax.scan(
@@ -118,6 +151,30 @@ def predict_binned(
         None,
         (ens.feature, ens.split_bin, ens.default_left, ens.leaf_value, ens.is_leaf),
     )  # (n_trees, n_rows)
+    return _fold_classes(leaves, ens, n_rows)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "n_rows", "missing_bin", "max_depth")
+)
+def predict_binned_packed(
+    ens: Ensemble, packed: jax.Array, bits: int, n_rows: int,
+    missing_bin: int, max_depth: int,
+) -> jax.Array:
+    """predict_binned straight from the bit-packed matrix (DESIGN.md §2)."""
+
+    def one_tree(carry, t):
+        feature, split_bin, default_left, leaf_value, is_leaf = t
+        return carry, traverse_tree_packed(
+            feature, split_bin, default_left, leaf_value, is_leaf,
+            packed, bits, n_rows, missing_bin, max_depth,
+        )
+
+    _, leaves = jax.lax.scan(
+        one_tree,
+        None,
+        (ens.feature, ens.split_bin, ens.default_left, ens.leaf_value, ens.is_leaf),
+    )
     return _fold_classes(leaves, ens, n_rows)
 
 

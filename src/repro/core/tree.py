@@ -26,6 +26,7 @@ from typing import NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core import compress as C
 from repro.core import histogram as H
 from repro.core import partition as P
 from repro.core import split as S
@@ -56,7 +57,7 @@ def level_offset(level: int) -> int:
 
 
 def grow_tree(
-    bins: jax.Array,  # (n, f) int32 quantised rows (this shard's rows)
+    bins: jax.Array | C.PackedBins,  # (n, f) int32 rows OR the packed matrix
     gh: jax.Array,  # (n, 2) float32
     cuts: jax.Array,  # (f, n_cuts) float32
     max_depth: int,
@@ -68,17 +69,43 @@ def grow_tree(
     extra_axes: Sequence[str] = (),
     feature_axis: str | None = None,
     hist_builder=None,  # optional kernel-backed builder (kernels.ops)
+    hist_block_rows: int = 65536,  # packed fallback's dense-tile bound
+    hist_subtraction: bool = True,  # smaller-child build + sibling = parent - child
 ) -> Tree:
-    """When `feature_axis` is set (beyond-paper mode, DESIGN.md §3): `bins`
+    """When `bins` is a compress.PackedBins, the tree grows *packed-native*
+    (DESIGN.md §2): histograms are built straight from the uint32 words
+    (Pallas kernel or the row-block-scan XLA fallback) and row routing
+    extracts the split-feature column on the fly — the dense (n, f) bins
+    matrix is never materialised. A custom `hist_builder` receives whatever
+    representation grow_tree was given.
+
+    When `feature_axis` is set (beyond-paper mode, DESIGN.md §3): `bins`
     and `cuts` hold only this shard's feature slice; histograms stay
     feature-local (1/p of the paper's AllReduce bytes move over the wire),
     splits are evaluated feature-locally and the winner is chosen via an
     all-gather of tiny per-node best-split records; row routing for a split
     owned by another shard arrives via a psum'd route vector."""
-    n, f = bins.shape
+    packed_mode = isinstance(bins, C.PackedBins)
+    if packed_mode:
+        if feature_axis is not None:
+            raise NotImplementedError(
+                "feature-sharded growth requires dense bins (unpack per shard)"
+            )
+        n, f = bins.n_rows, bins.n_features
+    else:
+        n, f = bins.shape
     na = arena_size(max_depth)
     missing_bin = max_bins - 1
-    build = hist_builder or H.build_histograms
+    if hist_builder is not None:
+        build = hist_builder
+    elif packed_mode:
+        def build(pb, gh_, pos_, n_nodes_, max_bins_):
+            return H.build_histograms_packed(
+                pb.packed, gh_, pos_, n_nodes_, max_bins_,
+                pb.bits, pb.n_rows, block_rows=hist_block_rows,
+            )
+    else:
+        build = H.build_histograms
 
     feature = jnp.zeros(na, jnp.int32)
     split_bin = jnp.zeros(na, jnp.int32)
@@ -97,6 +124,19 @@ def grow_tree(
     # lossguide leaf budget: a tree starts as 1 leaf; each split adds 1.
     budget = jnp.asarray(max(max_leaves - 1, 0) if growth == "lossguide" else na)
 
+    # Histogram-subtraction trick (DESIGN.md §7.5): below the root, build
+    # histograms only for each parent's smaller child (by instance count)
+    # over a compacted n//2 row buffer, and derive the sibling as
+    # parent_hist - child_hist. Needs single-shard rows and the default
+    # builders (a kernel builder keeps full per-level builds).
+    use_subtraction = (
+        hist_subtraction
+        and hist_builder is None
+        and axis_name is None
+        and feature_axis is None
+    )
+    hist_prev = None
+
     for level in range(max_depth):
         off = level_offset(level)
         n_nodes = 2**level
@@ -107,10 +147,17 @@ def grow_tree(
             positions - off,
             n_nodes,
         ).astype(jnp.int32)
-        hist = build(bins, gh, local, n_nodes, max_bins)
-        # --- AllReduceHistograms (paper: NCCL; here: psum) ---------------
-        if axis_name is not None:
-            hist = jax.lax.psum(hist, (axis_name, *extra_axes))
+        if use_subtraction and level > 0:
+            hist = _histograms_by_subtraction(
+                bins, gh, local, hist_prev, n_nodes, max_bins,
+                hist_block_rows,
+            )
+        else:
+            hist = build(bins, gh, local, n_nodes, max_bins)
+            # --- AllReduceHistograms (paper: NCCL; here: psum) -----------
+            if axis_name is not None:
+                hist = jax.lax.psum(hist, (axis_name, *extra_axes))
+        hist_prev = hist
 
         # --- EvaluateSplit (prefix-sum scan over bins) -------------------
         parent = jax.lax.dynamic_slice_in_dim(node_sum, off, n_nodes)
@@ -153,7 +200,12 @@ def grow_tree(
         full_feature = jnp.zeros(na, jnp.int32).at[idx].set(feature[idx])
         full_bin = jnp.zeros(na, jnp.int32).at[idx].set(split_bin[idx])
         full_dl = jnp.zeros(na, bool).at[idx].set(default_left[idx])
-        if feature_axis is None:
+        if packed_mode:
+            positions = P.update_positions_packed(
+                bins.packed, positions, split_mask, full_feature, full_bin,
+                full_dl, missing_bin, bins.bits,
+            )
+        elif feature_axis is None:
             positions = P.update_positions(
                 bins, positions, split_mask, full_feature, full_bin, full_dl,
                 missing_bin,
@@ -195,6 +247,65 @@ def grow_tree(
         is_leaf=is_leaf,
         gain=gain_arr,
     )
+
+
+def _histograms_by_subtraction(
+    bins: jax.Array | C.PackedBins,
+    gh: jax.Array,
+    local: jax.Array,  # (n,) level-local child index, n_nodes = inactive
+    hist_prev: jax.Array,  # (n_nodes/2, f, max_bins, 2) parents' full hist
+    n_nodes: int,
+    max_bins: int,
+    hist_block_rows: int,
+) -> jax.Array:
+    """Level histogram via the subtraction trick (DESIGN.md §7.5).
+
+    Per parent, only the smaller child (by instance count) is histogrammed;
+    its sibling is parent - child. Since sum_p min(left_p, right_p) <=
+    floor(n/2), a static n//2 compaction buffer always suffices — the
+    scatter work of every level below the root is halved, which is the
+    dominant cost of a boosting round on scatter-bound backends.
+    """
+    packed_mode = isinstance(bins, C.PackedBins)
+    n = gh.shape[0]
+    n_par = n_nodes // 2
+    m = n // 2
+
+    # Instance counts per child -> smaller-child bit per parent (ties: left).
+    cnt = jnp.zeros(n_nodes + 1, jnp.int32).at[local].add(1)
+    small_bit = (cnt[1:n_nodes:2] < cnt[0:n_nodes:2]).astype(jnp.int32)
+
+    is_active = local < n_nodes
+    par = jnp.minimum(local >> 1, n_par - 1)
+    sel = is_active & ((local & 1) == small_bit[par])
+
+    # Compact selected row ids into the n//2 buffer (sentinel n = padding).
+    order = jnp.cumsum(sel) - 1
+    buf = jnp.full(m, n, jnp.int32).at[
+        jnp.where(sel, order, m)
+    ].set(jnp.arange(n, dtype=jnp.int32), mode="drop")
+    parent_ext = jnp.concatenate(
+        [jnp.where(sel, par, n_par).astype(jnp.int32),
+         jnp.full((1,), n_par, jnp.int32)]
+    )
+    pos_c = parent_ext[jnp.minimum(buf, n)]
+    gh_c = gh[jnp.minimum(buf, n - 1)]
+
+    if packed_mode:
+        hist_small = H.build_histograms_packed_rows(
+            bins.packed, gh_c, pos_c, buf, n_par, max_bins, bins.bits,
+            block_rows=hist_block_rows,
+        )
+    else:
+        bins_c = bins[jnp.minimum(buf, n - 1)]
+        hist_small = H.build_histograms(bins_c, gh_c, pos_c, n_par, max_bins)
+
+    other = hist_prev - hist_small
+    built_left = (small_bit == 0)[:, None, None, None]
+    left = jnp.where(built_left, hist_small, other)
+    right = jnp.where(built_left, other, hist_small)
+    f = hist_prev.shape[1]
+    return jnp.stack([left, right], axis=1).reshape(n_nodes, f, max_bins, 2)
 
 
 def _combine_feature_shards(sp: S.Splits, f_local: int, feature_axis: str) -> S.Splits:

@@ -1,0 +1,37 @@
+"""Version-tolerant wrappers for jax APIs that moved between releases.
+
+The repo targets current jax, but several deployment images pin older
+releases (e.g. 0.4.x lacks jax.shard_map / jax.sharding.AxisType /
+jax.set_mesh). Multi-device code routes through these shims so the same
+source runs on both; everything degrades to the oldest supported
+spelling, never to a behaviour change.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """jax.shard_map (new) or jax.experimental.shard_map.shard_map (old),
+    with per-output replication checking disabled under either name."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False,
+    )
+
+
+def make_mesh(axis_shapes, axis_names):
+    """jax.make_mesh, passing axis_types only where supported."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            axis_shapes, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names),
+        )
+    return jax.make_mesh(axis_shapes, axis_names)

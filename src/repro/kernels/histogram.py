@@ -9,10 +9,13 @@ is recast as a dense **one-hot x gradient matmul on the MXU**:
                           = onehot.T @ gh        (contraction over rows)
 
 The quantised matrix arrives *compressed* (paper §2.2): `bits`-wide bin ids
-packed into uint32 words, column-major per feature. The kernel unpacks with
-VPU shift/mask ops in VMEM — the paper's "runtime bitwise unpacking", which
-costs a few vector ops and buys >=4x HBM traffic reduction on the dominant
-input stream.
+packed into uint32 words, column-major per feature. In the compressed-native
+training path (DESIGN.md §2) these are the training matrix's own resident
+words, handed over untouched via ops.build_histograms_kernel_packed — no
+unpack/repack round trip anywhere between quantisation and this kernel. The
+kernel unpacks with VPU shift/mask ops in VMEM — the paper's "runtime
+bitwise unpacking", which costs a few vector ops and buys >=4x HBM traffic
+reduction on the dominant input stream.
 
 Blocking (defaults; VMEM budget in parentheses for bits=8):
   grid = (node_blocks, feature_blocks, row_blocks)   row axis innermost

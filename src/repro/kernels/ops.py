@@ -1,8 +1,14 @@
 """jit'd public wrappers for the Pallas kernels.
 
-`build_histograms_kernel` matches core.histogram.build_histograms'
-signature so it can slot into grow_tree(hist_builder=...) — this is what
-BoosterConfig(use_kernel_histograms=True) routes through.
+Two hist_builder entry points for grow_tree(hist_builder=...):
+
+* `build_histograms_kernel_packed` — the compressed-native path
+  (BoosterConfig(use_kernel_histograms=True, compress_matrix=True)): the
+  Pallas kernel consumes the training matrix's packed uint32 words
+  directly, no unpack/repack round trip anywhere (DESIGN.md §2).
+* `build_histograms_kernel` — dense-input compatibility path
+  (compress_matrix=False): packs once so the kernel still exercises its
+  unpack-in-VMEM path; only sees uncompressed workloads.
 """
 from __future__ import annotations
 
@@ -22,9 +28,21 @@ def histogram_packed_op(packed, gh, positions, n_nodes: int, max_bins: int, bits
     return histogram_packed(packed, gh, positions, n_nodes, max_bins, bits)
 
 
+def build_histograms_kernel_packed(
+    data: C.PackedBins,
+    gh: jax.Array,
+    positions: jax.Array,
+    n_nodes: int,
+    max_bins: int,
+) -> jax.Array:
+    """Packed-native drop-in for core.histogram.build_histograms_packed:
+    feeds the training matrix's packed words straight to the Pallas kernel."""
+    return histogram_packed_op(data.packed, gh, positions, n_nodes, max_bins, data.bits)
+
+
 @functools.partial(jax.jit, static_argnames=("n_nodes", "max_bins"))
 def build_histograms_kernel(
-    bins: jax.Array,  # (n, f) int32 (already unpacked upstream)
+    bins: jax.Array,  # (n, f) int32 dense rows (compress_matrix=False path)
     gh: jax.Array,
     positions: jax.Array,
     n_nodes: int,
@@ -32,7 +50,7 @@ def build_histograms_kernel(
 ) -> jax.Array:
     """Drop-in for core.histogram.build_histograms via the Pallas kernel.
 
-    Re-packs the bins (cheap, fused by XLA) so the kernel exercises the
+    Packs the dense bins (cheap, fused by XLA) so the kernel exercises the
     same unpack-in-VMEM path it runs on TPU.
     """
     bits = C.bits_needed(max_bins - 1)

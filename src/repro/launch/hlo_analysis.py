@@ -103,15 +103,26 @@ def parse_hlo(text: str) -> dict[str, ComputationStats]:
             if bm and cm2:
                 cur.whiles.append((bm.group(1), cm2.group(1)))
 
-        # dot ops: flops = 2 * prod(result dims) * contracted size
-        dm = re.search(r"\bdot\(\s*%?([\w.\-]+),\s*%?([\w.\-]+)\)", rhs)
+        # dot ops: flops = 2 * prod(result dims) * contracted size. Operands
+        # may be bare (`dot(%a, %b)`, newer XLA) or typed
+        # (`dot(f32[4,64]{1,0} %a, ...)`, older XLA text) — handle both.
+        dm = re.search(r"\bdot\(([^)]*)\)", rhs)
         if dm and res_shapes:
-            lhs_name = dm.group(1)
+            args = dm.group(1)
+            opnames = re.findall(r"%([\w.\-]+)", args)
+            if not opnames:
+                opnames = [a.strip() for a in args.split(",") if a.strip()]
+            lhs_name = opnames[0] if opnames else ""
             lcd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
             k = 1
             lhs_shapes = shapes.get(lhs_name)
-            if lcd and lhs_shapes:
-                dims = lhs_shapes[0][1]
+            if lcd is not None:
+                if lhs_shapes:
+                    dims = lhs_shapes[0][1]
+                else:
+                    # typed operand carries its own shape inline
+                    inline = _parse_shape(args)
+                    dims = inline[0][1] if inline else []
                 for di in (int(x) for x in lcd.group(1).split(",") if x):
                     if di < len(dims):
                         k *= dims[di]
@@ -120,7 +131,7 @@ def parse_hlo(text: str) -> dict[str, ComputationStats]:
                 res_elems *= d
             cur.dot_flops += 2.0 * res_elems * k
             operand_bytes = sum(
-                _nbytes(shapes.get(dm.group(i), [])) for i in (1, 2)
+                _nbytes(shapes.get(nm, [])) for nm in opnames[:2]
             )
             cur.dot_bytes += _nbytes(res_shapes) + operand_bytes
 

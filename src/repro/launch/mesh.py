@@ -12,13 +12,13 @@ from __future__ import annotations
 
 import jax
 
+from repro import jaxcompat
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return jaxcompat.make_mesh(shape, axes)
 
 
 def batch_axes(mesh: jax.sharding.Mesh):

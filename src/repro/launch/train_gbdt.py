@@ -63,8 +63,8 @@ def main():
     t0 = time.perf_counter()
     if args.devices > 1:
         n_keep = (len(xt) // args.devices) * args.devices
-        mesh = jax.make_mesh((args.devices,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro import jaxcompat
+        mesh = jaxcompat.make_mesh((args.devices,), ("data",))
         ens, margins, hist = train_distributed(xt[:n_keep], yt[:n_keep], cfg, mesh,
                                                verbose_every=max(args.rounds // 5, 1))
     else:

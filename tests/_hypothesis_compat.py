@@ -1,0 +1,22 @@
+"""Shared shim: property tests degrade to skips on minimal installs.
+
+Import `given, settings, st` from here instead of hypothesis directly —
+when hypothesis is absent, @given-decorated tests become pytest skips
+while the plain tests in the same module keep running.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    import pytest as _pytest
+
+    def given(*_a, **_k):
+        return lambda fn: _pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    class _MissingStrategies:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _MissingStrategies()

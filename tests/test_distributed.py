@@ -37,8 +37,8 @@ def test_row_sharded_equals_single_device():
         cfg = BoosterConfig(n_rounds=4, max_depth=3,
                             objective="binary:logistic", max_bins=32)
         st = train(x, y, cfg)
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.jaxcompat import make_mesh
+        mesh = make_mesh((8,), ("data",))
         ens, _, _ = train_distributed(x, y, cfg, mesh)
         assert bool(jnp.all(st.ensemble.feature == ens.feature))
         assert bool(jnp.all(st.ensemble.split_bin == ens.split_bin))
@@ -64,14 +64,14 @@ def test_feature_sharded_equals_single_device():
         bins = Q.quantize(jnp.asarray(x), cuts)
         p = jax.nn.sigmoid(jnp.zeros(n)); gh = jnp.stack([p - y, p*(1-p)], -1)
         ref = T.grow_tree(bins, gh, cuts, 4, 32)
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
-        fn = jax.jit(jax.shard_map(
+        from repro.jaxcompat import make_mesh, shard_map
+        mesh = make_mesh((4, 2), ("data", "model"))
+        fn = jax.jit(shard_map(
             lambda b, g, c: T.grow_tree(b, g, c, 4, 32, axis_name="data",
                                         feature_axis="model"),
             mesh=mesh,
             in_specs=(P("data", "model"), P("data", None), P("model", None)),
-            out_specs=P(), check_vma=False))
+            out_specs=P()))
         tr = fn(bins, gh, cuts)
         assert bool(jnp.all(ref.feature == tr.feature))
         assert bool(jnp.all(ref.split_bin == tr.split_bin))
@@ -84,10 +84,10 @@ def test_feature_sharded_equals_single_device():
 def test_hlo_analyzer_matches_analytic():
     out = _run("""
         import jax, jax.numpy as jnp
-        from jax.sharding import PartitionSpec as P
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.jaxcompat import make_mesh
         from repro.launch.hlo_analysis import analyze
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         D, L, B = 64, 4, 8
         def fwd(x, ws):
             def body(c, w): return jnp.tanh(c @ w), None
@@ -95,9 +95,10 @@ def test_hlo_analyzer_matches_analytic():
             return jnp.sum(y)
         xs = jax.ShapeDtypeStruct((B, D), jnp.float32)
         ws = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
-        with jax.set_mesh(mesh):
-            compiled = jax.jit(fwd, in_shardings=(P("data", None),
-                P(None, None, "model"))).lower(xs, ws).compile()
+        compiled = jax.jit(fwd, in_shardings=(
+            NamedSharding(mesh, P("data", None)),
+            NamedSharding(mesh, P(None, None, "model")),
+        )).lower(xs, ws).compile()
         res = analyze(compiled.as_text())
         # per-device: L * (B/2) * D * (D/4) * 2
         assert res["dot_flops_per_device"] == L * (B // 2) * D * (D // 4) * 2, res

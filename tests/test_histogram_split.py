@@ -1,7 +1,7 @@
 """Paper §2.3: histogram build + split evaluation correctness."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import histogram as H
 from repro.core import split as S

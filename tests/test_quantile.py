@@ -1,7 +1,7 @@
 """Paper §2.1: feature quantile generation."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import quantile as Q
 
