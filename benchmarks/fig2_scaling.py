@@ -22,18 +22,19 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _SCRIPT = """
 import time, json
 import numpy as np, jax, jax.numpy as jnp
-from repro.core import BoosterConfig
-from repro.core.distributed import train_distributed
+from repro.core import Booster, BoosterConfig, DeviceDMatrix
 from repro.data import make_dataset
+from repro.jaxcompat import make_mesh
 
 p = {p}
 x, y, spec = make_dataset("airline", n_rows={rows})
 cfg = BoosterConfig(n_rounds={rounds}, max_depth=6, max_bins=256,
                     objective=spec.objective)
-mesh = jax.make_mesh((p,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((p,), ("data",))
+dtrain = DeviceDMatrix(x, label=y)
 t0 = time.perf_counter()
-ens, margins, _ = train_distributed(x, y, cfg, mesh)
-jax.block_until_ready(margins)
+bst = Booster(cfg).fit(dtrain, mesh=mesh)
+jax.block_until_ready(bst.margins)
 dt = time.perf_counter() - t0
 print(json.dumps(dict(p=p, time_s=dt, rows_per_device=len(x)//p)))
 """

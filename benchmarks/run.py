@@ -39,7 +39,12 @@ def main() -> None:
             kernels.main()
         elif sec == "pipeline":
             from benchmarks import pipeline
-            pipeline.main([])  # defaults; don't re-parse run.py's argv
+            # Reduced size (pipeline.main's own defaults are the 1M-row
+            # acceptance run), and write to /tmp so the committed
+            # BENCH_pipeline.json artifact of record is never clobbered.
+            pipeline.main(["--rows", str(max(args.rows, 20_000)),
+                           "--features", "20",
+                           "--out", "/tmp/BENCH_pipeline.json"])
         elif sec == "ablations":
             from benchmarks import ablations
             ablations.main()

@@ -1,6 +1,7 @@
 """End-to-end driver (the paper's large-scale scenario, reduced for CPU):
 airline-shaped data (13 features, binary), 200 boosting rounds, multi-
-device row sharding with AllReduce histogram combination (Algorithm 1).
+device row sharding with AllReduce histogram combination (Algorithm 1) as a
+strategy behind the same Booster.fit signature.
 
 Run single-device:
     PYTHONPATH=src python examples/airline_e2e.py
@@ -25,31 +26,31 @@ if args.devices > 1 and "xla_force_host_platform_device_count" not in os.environ
     os.execv(sys.executable, [sys.executable] + sys.argv)
 
 import time
-import jax
-import jax.numpy as jnp
 import numpy as np
-from repro.core import BoosterConfig, train, predict_proba
-from repro.core.distributed import train_distributed
+from repro.core import Booster, DeviceDMatrix
 from repro.data import make_dataset
 
 x, y, spec = make_dataset("airline", n_rows=args.rows)
 n_tr = int(0.9 * args.rows)
-cfg = BoosterConfig(n_rounds=args.rounds, max_depth=6, max_bins=256,
-                    objective=spec.objective)
-t0 = time.perf_counter()
-if args.devices > 1:
-    mesh = jax.make_mesh((args.devices,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
-    keep = (n_tr // args.devices) * args.devices
-    ens, margins, _ = train_distributed(x[:keep], y[:keep], cfg, mesh,
-                                        verbose_every=50)
-else:
-    st = train(x[:n_tr], y[:n_tr], cfg, verbose_every=50,
-               callback=lambda r, rec: print(rec, flush=True))
-    ens = st.ensemble
-dt = time.perf_counter() - t0
+n_tr = (n_tr // args.devices) * args.devices  # shard-divisible (no-op at 1)
 
-p = np.asarray(predict_proba(ens, x[n_tr:], cfg.max_depth, cfg.objective))
+mesh = None
+if args.devices > 1:
+    from repro.jaxcompat import make_mesh
+    mesh = make_mesh((args.devices,), ("data",))
+
+t0 = time.perf_counter()
+dtrain = DeviceDMatrix(x[:n_tr], label=y[:n_tr])
+t_build = time.perf_counter() - t0
+
+bst = Booster(n_rounds=args.rounds, max_depth=6, max_bins=256,
+              objective=spec.objective)
+t0 = time.perf_counter()
+bst.fit(dtrain, verbose_every=50, mesh=mesh,
+        callback=lambda r, rec: print(rec, flush=True))
+t_fit = time.perf_counter() - t0
+
+p = np.asarray(bst.predict(x[n_tr:]))
 acc = float(np.mean((p > 0.5) == y[n_tr:]))
 print(f"rows={args.rows} rounds={args.rounds} devices={args.devices} "
-      f"time={dt:.1f}s valid_accuracy={acc:.4f}")
+      f"dmatrix={t_build:.1f}s fit={t_fit:.1f}s valid_accuracy={acc:.4f}")

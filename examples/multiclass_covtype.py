@@ -1,21 +1,31 @@
 """Multiclass (covtype-shaped, 7 classes) — the paper's Table 2 scenario
 where the GPU competitors struggled (cat-gpu N/A). Softmax gradients are
 evaluated on-device (beyond-paper: the 2018 paper computed multiclass
-gradients on CPU).
+gradients on CPU). The saved Booster is self-describing: loading it back
+needs no max_depth / objective / n_classes.
 
     PYTHONPATH=src python examples/multiclass_covtype.py
 """
 import numpy as np
-from repro.core import BoosterConfig, train, predict_proba
+from repro.core import Booster, DeviceDMatrix
 from repro.data import make_dataset
 
 x, y, spec = make_dataset("covtype", n_rows=20_000)
 n_tr = 16_000
-cfg = BoosterConfig(n_rounds=20, max_depth=6, max_bins=128,
-                    objective="multi:softmax", n_classes=spec.n_classes)
-st = train(x[:n_tr], y[:n_tr], cfg, verbose_every=5,
-           callback=lambda r, rec: print(rec, flush=True))
-pred = np.asarray(predict_proba(st.ensemble, x[n_tr:], cfg.max_depth,
-                                "multi:softmax"))
+dtrain = DeviceDMatrix(x[:n_tr], label=y[:n_tr], max_bins=128)
+dvalid = DeviceDMatrix(x[n_tr:], label=y[n_tr:], ref=dtrain)
+
+bst = Booster(n_rounds=20, max_depth=6, max_bins=128,
+              objective="multi:softmax", n_classes=spec.n_classes)
+bst.fit(dtrain, evals=[(dvalid, "valid")], verbose_every=5,
+        callback=lambda r, rec: print(rec, flush=True))
+
+pred = np.asarray(bst.predict(x[n_tr:]))  # class ids, no extra args
 print("valid accuracy:", float(np.mean(pred == y[n_tr:])))
-print(f"{st.ensemble.n_trees} trees ({cfg.n_rounds} rounds x {spec.n_classes} classes)")
+print(f"{bst.ensemble.n_trees} trees "
+      f"({bst.n_rounds_trained} rounds x {spec.n_classes} classes)")
+
+bst.save("/tmp/covtype_booster.msgpack")
+reloaded = Booster.load("/tmp/covtype_booster.msgpack")
+assert np.array_equal(pred, np.asarray(reloaded.predict(x[n_tr:])))
+print("self-describing checkpoint roundtrip OK")

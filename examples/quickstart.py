@@ -1,12 +1,11 @@
-"""Quickstart: train the paper's GBDT on a binary task, evaluate, save.
+"""Quickstart: the two-noun API — DeviceDMatrix (quantise + compress once)
+and Booster (fit / predict / save / load, self-describing).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import BoosterConfig, train, predict_proba
-from repro.checkpoint import save_ensemble, load_ensemble
+from repro.core import Booster, DeviceDMatrix
 
 # --- data: 20k rows, 20 features, nonlinear signal + 5% missing ---------
 rng = np.random.default_rng(0)
@@ -16,24 +15,27 @@ y = ((x[:, 0] * x[:, 1] + np.sin(2 * x[:, 2]) + x[:, 3] > 0.2)).astype(np.float3
 x[rng.random(x.shape) < 0.05] = np.nan
 xt, yt, xv, yv = x[:16_000], y[:16_000], x[16_000:], y[16_000:]
 
-# --- train (Figure 1 pipeline: quantise -> compress -> boost) -----------
-cfg = BoosterConfig(
-    n_rounds=60, max_depth=6, learning_rate=0.3, max_bins=256,
-    objective="binary:logistic",
-)
-state = train(xt, yt, cfg, eval_set=(xv, yv), verbose_every=20,
-              callback=lambda r, rec: print(rec))
+# --- quantise + compress ONCE (Figure 1's left boxes) --------------------
+dtrain = DeviceDMatrix(xt, label=yt)           # own quantile cuts
+dvalid = DeviceDMatrix(xv, label=yv, ref=dtrain)  # shares dtrain's cuts
+print(dtrain, "->", f"{dtrain.compression_ratio():.1f}x smaller than fp32")
 
-print(f"compressed matrix: {state.matrix.bits}-bit, "
-      f"{state.matrix.compression_ratio():.1f}x smaller than fp32")
+# --- fit: per-round eval metrics computed INSIDE the training scan -------
+bst = Booster(n_rounds=60, max_depth=6, learning_rate=0.3,
+              objective="binary:logistic")
+bst.fit(dtrain, evals=[(dvalid, "valid")], verbose_every=20,
+        callback=lambda r, rec: print(rec))
 
-# --- evaluate ------------------------------------------------------------
-p = np.asarray(predict_proba(state.ensemble, xv, cfg.max_depth, cfg.objective))
+# --- predict: numpy in, no max_depth / objective arguments ---------------
+p = np.asarray(bst.predict(xv))
 print("valid accuracy:", float(np.mean((p > 0.5) == yv)))
 
-# --- save / load ----------------------------------------------------------
-save_ensemble("/tmp/quickstart_ens.msgpack", state.ensemble)
-ens = load_ensemble("/tmp/quickstart_ens.msgpack")
-p2 = np.asarray(predict_proba(ens, xv, cfg.max_depth, cfg.objective))
-assert np.allclose(p, p2)
-print("checkpoint roundtrip OK")
+# --- the DeviceDMatrix is reusable: continue training, no re-quantise ----
+bst.update(dtrain, 20)
+print("continued to", bst.n_rounds_trained, "rounds:", bst.eval(dvalid, "valid"))
+
+# --- save / load: the checkpoint is self-describing ----------------------
+bst.save("/tmp/quickstart_booster.msgpack")
+p2 = np.asarray(Booster.load("/tmp/quickstart_booster.msgpack").predict(xv))
+assert np.array_equal(np.asarray(bst.predict(xv)), p2)
+print("checkpoint roundtrip OK (bit-identical predictions)")

@@ -1,5 +1,20 @@
 """Checkpointing: msgpack-serialised pytrees (params, optimizer state,
-GBDT ensembles). No external deps beyond msgpack + numpy."""
-from repro.checkpoint.io import load_pytree, save_pytree, save_ensemble, load_ensemble
+GBDT ensembles, self-describing Booster checkpoints). No external deps
+beyond msgpack + numpy."""
+from repro.checkpoint.io import (
+    load_booster,
+    load_ensemble,
+    load_pytree,
+    save_booster,
+    save_ensemble,
+    save_pytree,
+)
 
-__all__ = ["save_pytree", "load_pytree", "save_ensemble", "load_ensemble"]
+__all__ = [
+    "save_pytree",
+    "load_pytree",
+    "save_ensemble",
+    "load_ensemble",
+    "save_booster",
+    "load_booster",
+]

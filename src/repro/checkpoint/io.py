@@ -91,3 +91,72 @@ def load_ensemble(path: str):
 
     d = load_pytree(path)
     return Ensemble(**d["fields"], n_classes=d["n_classes"], base_score=d["base_score"])
+
+
+# --- self-describing Booster checkpoints -----------------------------------
+
+BOOSTER_FORMAT = "repro.booster"
+BOOSTER_VERSION = 1
+
+
+def save_booster(path: str, bst) -> None:
+    """Versioned checkpoint of a fitted Booster: config + cut points + base
+    score + trees + training record. Loading needs NO caller-supplied
+    max_depth / objective / n_classes — the model describes itself."""
+    import dataclasses
+
+    from repro.core.predict import _ENSEMBLE_ARRAY_FIELDS
+
+    payload = {
+        "format": BOOSTER_FORMAT,
+        "version": BOOSTER_VERSION,
+        "config": dataclasses.asdict(bst.cfg),
+        "cuts": bst.cuts,
+        "base_score": float(bst.base_score),
+        "best_iteration": bst.best_iteration,
+        "best_score": bst.best_score,
+        "n_rounds_trained": int(bst.n_rounds_trained),
+        "history": bst.history,
+        "ensemble": {
+            "fields": {k: getattr(bst.ensemble, k)
+                       for k in _ENSEMBLE_ARRAY_FIELDS},
+            "n_classes": bst.ensemble.n_classes,
+        },
+    }
+    save_pytree(path, payload)
+
+
+def load_booster(path: str):
+    import dataclasses
+
+    from repro.core.booster import Booster, BoosterConfig
+    from repro.core.predict import Ensemble
+
+    d = load_pytree(path)
+    if d.get("format") != BOOSTER_FORMAT:
+        raise ValueError(
+            f"{path} is not a {BOOSTER_FORMAT} checkpoint "
+            f"(format={d.get('format')!r})"
+        )
+    if d.get("version") != BOOSTER_VERSION:
+        raise ValueError(
+            f"unsupported {BOOSTER_FORMAT} checkpoint version "
+            f"{d.get('version')!r} (this build reads {BOOSTER_VERSION})"
+        )
+    known = {f.name for f in dataclasses.fields(BoosterConfig)}
+    cfg = BoosterConfig(
+        **{k: v for k, v in d["config"].items() if k in known}
+    )
+    bst = Booster(cfg)
+    bst.cuts = d["cuts"]
+    bst.base_score = d["base_score"]
+    bst.best_iteration = d["best_iteration"]
+    bst.best_score = d["best_score"]
+    bst.n_rounds_trained = d["n_rounds_trained"]
+    bst.history = d["history"]
+    bst.ensemble = Ensemble(
+        **d["ensemble"]["fields"],
+        n_classes=d["ensemble"]["n_classes"],
+        base_score=d["base_score"],
+    )
+    return bst

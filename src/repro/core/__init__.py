@@ -1,27 +1,36 @@
 """Core: the paper's contribution — GPU(-style) gradient boosting in JAX.
 
+Public API (XGBoost's two nouns): `DeviceDMatrix` (quantise + compress once,
+reuse forever) and `Booster` (fit / update / eval / predict / save / load).
+
 Pipeline (paper Figure 1): quantile generation -> data compression ->
 gradient evaluation -> histogram tree construction (AllReduce across
 devices) -> prediction, all on-device.
 """
 # NOTE: function re-exports must not shadow submodule names (`compress`,
 # `predict` stay module-only; use predict_proba / compress_matrix aliases).
-from repro.core.booster import BoosterConfig, TrainState, predict_margins, train
+from repro.core.booster import Booster, BoosterConfig, TrainState
+from repro.core.booster import predict_margins, train
 from repro.core.booster import predict as predict_proba
 from repro.core.compress import CompressedMatrix, PackedBins, pack, unpack
 from repro.core.compress import compress as compress_matrix
+from repro.core.dmatrix import DeviceDMatrix
 from repro.core.quantile import compute_cuts, quantize
 from repro.core.split import SplitParams
 from repro.core.tree import Tree, grow_tree
 from repro.core.predict import (
     Ensemble,
+    concat_ensembles,
     predict_binned,
     predict_binned_packed,
     predict_raw,
+    truncate_rounds,
 )
 
 __all__ = [
+    "Booster",
     "BoosterConfig",
+    "DeviceDMatrix",
     "TrainState",
     "train",
     "predict_proba",
@@ -37,6 +46,8 @@ __all__ = [
     "Tree",
     "grow_tree",
     "Ensemble",
+    "concat_ensembles",
+    "truncate_rounds",
     "predict_binned",
     "predict_binned_packed",
     "predict_raw",

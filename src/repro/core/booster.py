@@ -1,32 +1,50 @@
-"""Gradient boosting driver — the Figure 1 pipeline, end-to-end on device.
+"""Gradient boosting — the Figure 1 pipeline behind a two-noun public API.
 
-The entire training run is ONE compiled program: a jax.lax.scan over
-boosting rounds whose ys-stack is the preallocated (n_rounds * k, arena)
-ensemble arena. Per round (all phases on-accelerator, as in the paper):
-  predict (incremental margins) -> gradient evaluation -> quantised-histogram
-  tree construction -> margin update.
-There is no per-round Python dispatch and no end-of-training concatenate —
-scan writes each round's trees into its output buffer in place.
+The API is organised around XGBoost's two nouns (Chen & Guestrin 2016):
 
-Feature quantisation + compression happen once up front (Figure 1's left
-boxes). With compress_matrix=True the bit-packed CompressedMatrix is the
-*only* training-set representation from then on (paper §2.2, DESIGN.md §2):
-histograms are built from the packed words (Pallas kernel or the row-block
-XLA fallback), row repartitioning and training-set prediction extract the
-needed feature column from the words on the fly. The dense (n, f) int32
-bins array is never materialised again after quantisation. Validation runs
-on raw thresholds (predict_raw).
+  * `DeviceDMatrix` (dmatrix.py) — quantise + compress ONCE, reuse forever.
+  * `Booster` — the single entry point for `fit(dtrain, evals=[...])`,
+    `update(dtrain, n_rounds)` (warm-start continued training),
+    `predict(x | DeviceDMatrix)`, `eval(dmat)`, `save`/`load`.
+
+The model is self-describing: a `Booster` checkpoint carries its config,
+cut points, base score and best_iteration, so `Booster.load(path).predict(x)`
+needs no caller-supplied `max_depth` / `objective` / `n_classes`.
+
+Training is ONE compiled program: a jax.lax.scan over boosting rounds whose
+ys-stack is the preallocated (n_rounds * k, arena) ensemble arena. Per round
+(all phases on-accelerator, as in the paper): predict (incremental margins)
+-> gradient evaluation -> quantised-histogram tree construction -> margin
+update. Evaluation sets ride INSIDE the scan: each eval set is a
+`DeviceDMatrix` quantised with the training cuts, its margins are maintained
+incrementally next to the training margins, and per-round metrics come out
+as a scan ys-stack — no per-round host round trips. With
+`early_stopping_rounds=e` the scan runs in compiled chunks of e rounds with
+one host-side check per chunk (overtraining bounded by < 2e rounds), and the
+stored ensemble is truncated to `best_iteration + 1` rounds.
+
+Feature quantisation + compression happen once, at DeviceDMatrix
+construction (Figure 1's left boxes). With compress_matrix=True the
+bit-packed words are the *only* training-set representation (paper §2.2,
+DESIGN.md §2): histograms are built from the packed words, row
+repartitioning and training-set prediction extract the needed feature column
+from the words on the fly. The dense (n, f) int32 bins array is never
+materialised again after quantisation.
 
 Multiclass trains n_classes trees per round on softmax gradients (round-robin
-class layout, XGBoost's scheme). Margins are maintained incrementally — each
-new tree's leaf outputs are added — rather than re-predicting the whole
-ensemble per round, matching the real implementation.
+class layout, XGBoost's scheme). The multi-device path (distributed.py) is a
+strategy behind the same `Booster.fit(dtrain, mesh=...)` signature and
+returns the identical object.
+
+The old `train()` / `predict()` functions survive as thin deprecated shims
+over this API.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Any, Callable
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +56,7 @@ from repro.core import quantile as Q
 from repro.core import split as S
 from repro.core import tree as T
 from repro.core import predict as PR
+from repro.core.dmatrix import DeviceDMatrix, cuts_equal
 
 
 @dataclass(frozen=True)
@@ -62,17 +81,9 @@ class BoosterConfig:
         return S.SplitParams(self.reg_lambda, self.gamma, self.min_child_weight)
 
 
-@dataclass
-class TrainState:
-    ensemble: PR.Ensemble
-    margins: jax.Array  # (n, n_outputs) training margins
-    matrix: C.CompressedMatrix
-    history: list[dict] = field(default_factory=list)
-
-
 def _tree_margin_delta(cfg: BoosterConfig, tr: T.Tree, data) -> jax.Array:
-    """One tree's leaf outputs over all training rows, straight from the
-    training representation (packed or dense) — no Ensemble construction."""
+    """One tree's leaf outputs over all rows, straight from the quantised
+    representation (packed or dense) — no Ensemble construction."""
     mb = cfg.max_bins - 1
     if isinstance(data, C.PackedBins):
         return PR.traverse_tree_packed(
@@ -85,13 +96,27 @@ def _tree_margin_delta(cfg: BoosterConfig, tr: T.Tree, data) -> jax.Array:
     )
 
 
-def _make_round_step(cfg: BoosterConfig, obj: O.Objective, cuts: jax.Array,
-                     hist_builder=None):
+def _apply_stacked_trees(cfg: BoosterConfig, stacked: T.Tree, data,
+                         margins: jax.Array) -> jax.Array:
+    """Add one round's k stacked trees (unscaled leaves, leading axis k) to
+    margins — used for eval-set margins inside the scan and in the
+    distributed per-round loop."""
+    k = stacked.feature.shape[0]
+    for c in range(k):
+        tr = jax.tree.map(lambda a: a[c], stacked)
+        delta = _tree_margin_delta(cfg, tr, data)
+        margins = margins.at[:, c].add(cfg.learning_rate * delta)
+    return margins
+
+
+def _round_step_fn(cfg: BoosterConfig, obj: O.Objective, hist_builder=None):
     """One boosting round: gradients -> K trees -> margins. Pure (not jit'd
-    on its own) so it can be the body of the training scan."""
+    on its own) so it can be the body of the training scan. `cuts` is an
+    argument, not a closure, so compiled train functions can be cached by
+    static config alone and reused across DeviceDMatrices."""
     k = obj.n_outputs(cfg.n_classes)
 
-    def round_step(data, margins, y, extra):
+    def round_step(data, margins, y, extra, cuts):
         gh_all = obj.grad(margins, y, **extra)  # (n, k, 2)
         trees = []
         new_margins = margins
@@ -118,29 +143,454 @@ def _make_round_step(cfg: BoosterConfig, obj: O.Objective, cuts: jax.Array,
     return round_step
 
 
+def _make_round_step(cfg: BoosterConfig, obj: O.Objective, cuts: jax.Array,
+                     hist_builder=None):
+    """Round step with `cuts` bound (the jaxpr-discipline tests and phase
+    benchmarks inspect this closed form)."""
+    step = _round_step_fn(cfg, obj, hist_builder)
+
+    def round_step(data, margins, y, extra):
+        return step(data, margins, y, extra, cuts)
+
+    return round_step
+
+
+# Compiled train functions, keyed by static config only (cuts/data are traced
+# arguments). Refitting — same or different DeviceDMatrix — reuses the
+# compiled program as long as shapes match, so the quantise-once API isn't
+# eaten by per-fit recompilation.
+_TRAIN_FN_CACHE: dict = {}
+
+
 def _make_train_fn(cfg: BoosterConfig, obj: O.Objective, cuts: jax.Array,
-                   hist_builder, track_metric: bool):
-    """The whole training run as one jit: scan over rounds. Returns
-    (final_margins, stacked_trees (n_rounds, k, arena...), metrics (n_rounds,))."""
-    round_step = _make_round_step(cfg, obj, cuts, hist_builder)
+                   hist_builder, track_metric: bool, n_rounds: int | None = None):
+    """The whole training run as one jit: scan over rounds.
 
-    @jax.jit
-    def train_fn(data, margins0, y, extra):
-        def body(margins, _):
-            stacked, new_margins = round_step(data, margins, y, extra)
-            metric = (
-                obj.metric(new_margins, y).astype(jnp.float32)
-                if track_metric
-                else jnp.float32(0.0)
+    Returns a function
+      (data, margins0, y, extra, eval_data, eval_margins0, eval_y) ->
+      (final_margins, stacked_trees (n_rounds, k, arena...),
+       train_metrics (n_rounds,), final_eval_margins, eval_metrics tuple)
+
+    Eval sets ride inside the scan: eval_data is a tuple of PackedBins
+    (quantised with the TRAINING cuts), their margins are carried next to the
+    training margins and each round's metric lands in a ys-stack — per-round
+    eval history with zero host round trips.
+    """
+    length = cfg.n_rounds if n_rounds is None else n_rounds
+    key = (cfg, obj.name, hist_builder, track_metric, length)
+    jitted = _TRAIN_FN_CACHE.get(key)
+    if jitted is None:
+        round_step = _round_step_fn(cfg, obj, hist_builder)
+
+        @jax.jit
+        def train_fn(cuts, data, margins0, y, extra, eval_data=(),
+                     eval_margins0=(), eval_y=()):
+            def body(carry, _):
+                margins, ev = carry
+                stacked, new_margins = round_step(data, margins, y, extra,
+                                                  cuts)
+                new_ev, ev_metrics = [], []
+                for pb, em, ey in zip(eval_data, ev, eval_y):
+                    em = _apply_stacked_trees(cfg, stacked, pb, em)
+                    new_ev.append(em)
+                    ev_metrics.append(obj.metric(em, ey).astype(jnp.float32))
+                metric = (
+                    obj.metric(new_margins, y).astype(jnp.float32)
+                    if track_metric
+                    else jnp.float32(0.0)
+                )
+                return (new_margins, tuple(new_ev)), (stacked, metric,
+                                                      tuple(ev_metrics))
+
+            (margins, ev), (all_trees, metrics, ev_metrics) = jax.lax.scan(
+                body, (margins0, tuple(eval_margins0)), None, length=length
             )
-            return new_margins, (stacked, metric)
+            return margins, all_trees, metrics, ev, ev_metrics
 
-        margins, (all_trees, metrics) = jax.lax.scan(
-            body, margins0, None, length=cfg.n_rounds
+        jitted = _TRAIN_FN_CACHE[key] = train_fn
+    return functools.partial(jitted, cuts)
+
+
+def _scale_leaves(ens: PR.Ensemble, eta: float) -> PR.Ensemble:
+    """Bake the learning rate into stored leaf values (margins during
+    training already used eta; the stored ensemble must match)."""
+    return ens._replace(leaf_value=ens.leaf_value * eta)
+
+
+class Booster:
+    """Self-describing gradient-boosted model (XGBoost's `Booster` noun).
+
+    Construct with a `BoosterConfig` (or keyword overrides), then:
+
+        bst = Booster(n_rounds=100, objective="binary:logistic")
+        bst.fit(dtrain, evals=[(dvalid, "valid")], early_stopping_rounds=10)
+        p = bst.predict(x_new)          # numpy / jax array / DeviceDMatrix
+        bst.save(path); Booster.load(path).predict(x_new)  # no extra args
+
+    After fit: `ensemble` (stacked tree arenas), `history` (per-round eval
+    records), `best_iteration`/`best_score` (when early stopping ran),
+    `n_rounds_trained`. `update(dtrain, n)` continues training by re-entering
+    the scan with the existing margins.
+    """
+
+    def __init__(self, cfg: BoosterConfig | None = None, **params):
+        if cfg is None:
+            cfg = BoosterConfig(**params)
+        elif params:
+            cfg = dataclasses.replace(cfg, **params)
+        self.cfg = cfg
+        self.ensemble: PR.Ensemble | None = None
+        self.cuts: jax.Array | None = None
+        self.base_score: float = 0.0
+        self.history: list[dict] = []
+        self.best_iteration: int | None = None
+        self.best_score: float | None = None
+        self.n_rounds_trained: int = 0
+        self._margins: jax.Array | None = None  # training margins cache
+        self._train_dmat: DeviceDMatrix | None = None  # cache key for _margins
+
+    # --- small surface -----------------------------------------------------
+    @property
+    def obj(self) -> O.Objective:
+        return O.OBJECTIVES[self.cfg.objective]
+
+    @property
+    def margins(self) -> jax.Array | None:
+        """Training margins of the last fit/update (TrainState compat)."""
+        return self._margins
+
+    @property
+    def matrix(self) -> C.CompressedMatrix | None:
+        """Compressed matrix of the last training set (TrainState compat)."""
+        return None if self._train_dmat is None else self._train_dmat.matrix
+
+    def num_boosted_rounds(self) -> int:
+        return self.n_rounds_trained
+
+    def _require_fitted(self):
+        if self.ensemble is None:
+            raise RuntimeError("Booster is not fitted yet — call fit() first")
+
+    # --- training ----------------------------------------------------------
+    def fit(
+        self,
+        dtrain: DeviceDMatrix,
+        evals: Sequence = (),
+        *,
+        early_stopping_rounds: int | None = None,
+        verbose_every: int = 0,
+        callback: Callable[[int, dict], None] | None = None,
+        mesh=None,
+        data_axes: Sequence[str] = ("data",),
+    ) -> "Booster":
+        """Train cfg.n_rounds rounds from scratch on a DeviceDMatrix.
+
+        evals: sequence of (DeviceDMatrix, name) pairs (or bare matrices)
+          built with `ref=dtrain`; metrics are computed per round inside the
+          compiled scan. With `early_stopping_rounds`, the LAST eval set
+          drives stopping and the ensemble is truncated to best_iteration+1.
+        mesh: optional jax Mesh — rows are sharded over `data_axes` and
+          histograms combined with psum (paper Algorithm 1); same Booster out.
+        """
+        self.ensemble = None
+        self.history = []
+        self.best_iteration = None
+        self.best_score = None
+        self.n_rounds_trained = 0
+        self._margins = None
+        self._train_dmat = None
+        if dtrain.label is None:
+            raise ValueError("dtrain must be constructed with label= to fit")
+        self.cuts = dtrain.cuts
+        self.base_score = float(self.obj.init_base_score(dtrain.label))
+        self._run_rounds(dtrain, self.cfg.n_rounds, evals,
+                         early_stopping_rounds, verbose_every, callback,
+                         mesh, data_axes)
+        return self
+
+    def update(
+        self,
+        dtrain: DeviceDMatrix,
+        n_rounds: int,
+        evals: Sequence = (),
+        *,
+        early_stopping_rounds: int | None = None,
+        verbose_every: int = 0,
+        callback: Callable[[int, dict], None] | None = None,
+        mesh=None,
+        data_axes: Sequence[str] = ("data",),
+    ) -> "Booster":
+        """Continue training for n_rounds more rounds (warm start).
+
+        Re-enters the scan with the existing margins: if `dtrain` is the same
+        DeviceDMatrix the booster last trained on, the cached margins are
+        reused and the continuation is bit-identical to a single longer fit;
+        otherwise margins are rebuilt by on-device binned prediction.
+        """
+        self._require_fitted()
+        if dtrain.label is None:
+            raise ValueError("dtrain must be constructed with label= to update")
+        if not self._cuts_match(dtrain.cuts):
+            raise ValueError(
+                "dtrain was quantised with different cuts than this booster; "
+                "build it with ref= the original training matrix"
+            )
+        self._run_rounds(dtrain, n_rounds, evals, early_stopping_rounds,
+                         verbose_every, callback, mesh, data_axes)
+        return self
+
+    def _cuts_match(self, cuts: jax.Array) -> bool:
+        return cuts_equal(self.cuts, cuts)
+
+    def _initial_margins(self, dmat: DeviceDMatrix) -> jax.Array:
+        """Margins to (re-)enter training with: base score if unfitted, else
+        on-device binned prediction of the current ensemble."""
+        k = self.obj.n_outputs(self.cfg.n_classes)
+        if self.ensemble is None:
+            return jnp.full((dmat.n_rows, k), self.base_score, jnp.float32)
+        return PR.predict_binned_packed(
+            self.ensemble, dmat.matrix.packed, dmat.bits, dmat.n_rows,
+            self.cfg.max_bins - 1, self.cfg.max_depth,
         )
-        return margins, all_trees, metrics
 
-    return train_fn
+    def _normalise_evals(self, evals, dtrain):
+        out = []
+        for i, e in enumerate(evals):
+            d, name = e if isinstance(e, (tuple, list)) else (e, f"eval{i}")
+            if not isinstance(d, DeviceDMatrix):
+                raise TypeError(
+                    "evals entries must be DeviceDMatrix (or (DeviceDMatrix, "
+                    f"name)), got {type(d)}; build with ref=dtrain"
+                )
+            if d.label is None:
+                raise ValueError(f"eval set '{name}' has no label")
+            if not dtrain.same_cuts(d):
+                raise ValueError(
+                    f"eval set '{name}' was quantised with different cuts; "
+                    "build it with DeviceDMatrix(x, label=y, ref=dtrain)"
+                )
+            out.append((d, name))
+        return out
+
+    def _run_rounds(self, dtrain, n_rounds, evals, early_stopping_rounds,
+                    verbose_every, callback, mesh, data_axes):
+        if n_rounds <= 0:
+            raise ValueError(f"n_rounds must be positive, got {n_rounds}")
+        cfg, obj = self.cfg, self.obj
+        if early_stopping_rounds and not evals:
+            raise ValueError(
+                "early_stopping_rounds requires at least one eval set "
+                "(pass evals=[(DeviceDMatrix(..., ref=dtrain), name)])"
+            )
+        if dtrain.max_bins != cfg.max_bins:
+            raise ValueError(
+                f"DeviceDMatrix was quantised with max_bins={dtrain.max_bins} "
+                f"but this booster expects max_bins={cfg.max_bins}; build the "
+                "matrix with the same max_bins (bin-space thresholds and the "
+                "reserved missing bin must agree)"
+            )
+        evals = self._normalise_evals(evals, dtrain)
+        record_every = verbose_every or (1 if (callback or evals) else 0)
+        track_metric = record_every > 0
+
+        y = dtrain.label
+        if self._train_dmat is dtrain and self._margins is not None:
+            margins = self._margins  # exact continuation on the same matrix
+        else:
+            margins = self._initial_margins(dtrain)
+        eval_pbs = tuple(d.packed_bins() for d, _ in evals)
+        eval_ys = tuple(d.label for d, _ in evals)
+        eval_margins = tuple(self._initial_margins(d) for d, _ in evals)
+
+        if mesh is not None:
+            if dtrain.group_ids is not None:
+                raise NotImplementedError(
+                    "group_ids (rank:pairwise) is single-device only"
+                )
+            from repro.core import distributed as D
+
+            run_chunk = D.make_chunk_runner(
+                cfg, obj, dtrain, mesh, data_axes, eval_pbs, eval_ys,
+                track_metric,
+            )
+        else:
+            extra = (
+                {"group_ids": dtrain.group_ids}
+                if dtrain.group_ids is not None else {}
+            )
+            data = (
+                dtrain.packed_bins() if cfg.compress_matrix
+                else dtrain.matrix.unpack()
+            )
+            hist_builder = None
+            if cfg.use_kernel_histograms:
+                from repro.kernels import ops as KO
+
+                hist_builder = (
+                    KO.build_histograms_kernel_packed
+                    if cfg.compress_matrix
+                    else KO.build_histograms_kernel
+                )
+            fns: dict[int, Callable] = {}
+
+            def run_chunk(length, margins, eval_margins):
+                fn = fns.get(length)
+                if fn is None:
+                    fn = fns[length] = _make_train_fn(
+                        cfg, obj, self.cuts, hist_builder, track_metric,
+                        n_rounds=length,
+                    )
+                return fn(data, margins, y, extra, eval_pbs, eval_margins,
+                          eval_ys)
+
+        # Early stopping runs the scan in compiled chunks of e rounds with
+        # one host read per chunk (never per round); otherwise one chunk.
+        es_on = bool(early_stopping_rounds) and bool(evals)
+        chunk = min(early_stopping_rounds, n_rounds) if es_on else n_rounds
+        trees_chunks, metric_chunks, ev_metric_chunks = [], [], []
+        trained = 0
+        es_history: list[float] = []
+        best_round: int | None = None
+        stopped = False
+        while trained < n_rounds and not stopped:
+            length = min(chunk, n_rounds - trained)
+            margins, all_trees, metrics, eval_margins, ev_metrics = run_chunk(
+                length, margins, eval_margins
+            )
+            trees_chunks.append(all_trees)
+            metric_chunks.append(metrics)
+            ev_metric_chunks.append(ev_metrics)
+            trained += length
+            if es_on:
+                # The LAST eval set drives stopping (XGBoost convention).
+                es_history.extend(np.asarray(ev_metrics[-1]).tolist())
+                arr = np.asarray(es_history)
+                best_round = int(np.argmax(arr) if obj.maximize
+                                 else np.argmin(arr))
+                if (len(arr) - 1 - best_round) >= early_stopping_rounds:
+                    stopped = True
+        jax.block_until_ready(margins)
+
+        rounds_before = self.n_rounds_trained
+        if len(trees_chunks) == 1:
+            all_trees = trees_chunks[0]
+        else:
+            all_trees = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *trees_chunks
+            )
+        keep_rounds = best_round + 1 if stopped else trained
+
+        # The scan's ys-stack IS the ensemble arena: (rounds, k, arena)
+        # fields reshaped to XGBoost's round-robin (rounds * k, arena)
+        # layout — no per-round host round trips, no concatenate per round.
+        k = obj.n_outputs(cfg.n_classes)
+        arena = all_trees.feature.shape[-1]
+        new = PR.Ensemble(
+            feature=all_trees.feature.reshape(-1, arena),
+            split_bin=all_trees.split_bin.reshape(-1, arena),
+            threshold=all_trees.threshold.reshape(-1, arena),
+            default_left=all_trees.default_left.reshape(-1, arena),
+            leaf_value=all_trees.leaf_value.reshape(-1, arena),
+            is_leaf=all_trees.is_leaf.reshape(-1, arena),
+            n_classes=k,
+            base_score=self.base_score,
+        )
+        new = _scale_leaves(new, cfg.learning_rate)
+        if keep_rounds != trained:  # early stopped: keep best_iteration + 1
+            new = PR.truncate_rounds(new, keep_rounds)
+        self.ensemble = (
+            new if self.ensemble is None
+            else PR.concat_ensembles(self.ensemble, new)
+        )
+        self.n_rounds_trained = rounds_before + keep_rounds
+        if es_on:
+            self.best_iteration = rounds_before + best_round
+            self.best_score = float(es_history[best_round])
+        if keep_rounds == trained:
+            self._margins = margins
+            self._train_dmat = dtrain
+        else:  # ensemble truncated; cached margins would be stale
+            self._margins = None
+            self._train_dmat = None
+
+        # History: honest per-round records (metrics computed in-scan).
+        if record_every > 0:
+            metrics_host = (
+                np.concatenate([np.asarray(m) for m in metric_chunks])
+                if track_metric else None
+            )
+            ev_host = [
+                np.concatenate([np.asarray(c[i]) for c in ev_metric_chunks])
+                for i in range(len(evals))
+            ]
+            for r in range(trained):
+                if r % record_every and r != trained - 1:
+                    continue
+                rec: dict[str, Any] = {"round": rounds_before + r}
+                if metrics_host is not None:
+                    rec[f"train_{obj.metric_name}"] = float(metrics_host[r])
+                for (d, name), vals in zip(evals, ev_host):
+                    rec[f"{name}_{obj.metric_name}"] = float(vals[r])
+                self.history.append(rec)
+                if callback:
+                    callback(rounds_before + r, rec)
+
+    # --- inference ---------------------------------------------------------
+    def predict_margins(self, data) -> jax.Array:
+        """Raw margins (n_rows, n_outputs). `data` may be a numpy array, a
+        jax array (one float32 conversion, done here and nowhere else) or a
+        DeviceDMatrix (bin-space traversal on the packed words — exact, since
+        thresholds are cut values and quantisation is searchsorted-left)."""
+        self._require_fitted()
+        if isinstance(data, DeviceDMatrix):
+            if not self._cuts_match(data.cuts):
+                raise ValueError(
+                    "DeviceDMatrix was quantised with different cuts than "
+                    "this booster; build it with ref= the training matrix"
+                )
+            return PR.predict_binned_packed(
+                self.ensemble, data.matrix.packed, data.bits, data.n_rows,
+                self.cfg.max_bins - 1, self.cfg.max_depth,
+            )
+        x = jnp.asarray(data, jnp.float32)
+        return PR.predict_raw(self.ensemble, x, self.cfg.max_depth)
+
+    def predict(self, data, output_margin: bool = False) -> jax.Array:
+        """Transformed predictions (probabilities / values / class ids) —
+        the model knows its own objective, depth and class count."""
+        m = self.predict_margins(data)
+        return m if output_margin else self.obj.transform(m)
+
+    def eval(self, dmat: DeviceDMatrix, name: str = "eval") -> dict:
+        """One-shot metric on a labelled DeviceDMatrix."""
+        self._require_fitted()
+        if dmat.label is None:
+            raise ValueError("eval requires a labelled DeviceDMatrix")
+        m = self.predict_margins(dmat)
+        return {
+            f"{name}_{self.obj.metric_name}":
+                float(self.obj.metric(m, dmat.label))
+        }
+
+    # --- persistence -------------------------------------------------------
+    def save(self, path: str) -> None:
+        """Self-describing checkpoint (config + cuts + base score + trees)
+        via the msgpack layer, with a versioned metadata header."""
+        self._require_fitted()
+        from repro.checkpoint import io as CIO
+
+        CIO.save_booster(path, self)
+
+    @classmethod
+    def load(cls, path: str) -> "Booster":
+        from repro.checkpoint import io as CIO
+
+        return CIO.load_booster(path)
+
+
+# Deprecated alias: the old TrainState (ensemble/margins/matrix/history
+# attribute surface) is now the Booster itself.
+TrainState = Booster
 
 
 def train(
@@ -151,102 +601,31 @@ def train(
     group_ids: np.ndarray | None = None,
     verbose_every: int = 0,
     callback: Callable[[int, dict], None] | None = None,
-) -> TrainState:
-    obj = O.OBJECTIVES[cfg.objective]
-    x = jnp.asarray(x, jnp.float32)
-    y = jnp.asarray(y, jnp.float32)
-    n = x.shape[0]
-    k = obj.n_outputs(cfg.n_classes)
+) -> Booster:
+    """Deprecated one-shot shim over DeviceDMatrix + Booster.fit.
 
-    # --- Figure 1: generate feature quantiles + data compression ---------
-    cuts = Q.compute_cuts(x, cfg.max_bins)
-    bins = Q.quantize(x, cuts)
-    matrix = C.compress(bins, cuts, cfg.max_bins)
-    del x  # the raw matrix is not needed for training anymore
-
-    base = obj.init_base_score(y)
-    margins = jnp.full((n, k), base, jnp.float32)
-    extra = {"group_ids": jnp.asarray(group_ids)} if group_ids is not None else {}
-
-    if cfg.compress_matrix:
-        data = matrix.as_packed_bins()
-        del bins  # packed words are the training representation from here on
-    else:
-        data = bins
-
-    hist_builder = None
-    if cfg.use_kernel_histograms:
-        from repro.kernels import ops as KO
-
-        hist_builder = (
-            KO.build_histograms_kernel_packed
-            if cfg.compress_matrix
-            else KO.build_histograms_kernel
-        )
-
-    # Record cadence: verbose_every if set, else every round when only a
-    # callback wants records. The whole run is one compiled program, so
-    # records are emitted post-hoc and share the fit's wall clock.
-    record_every = verbose_every or (1 if callback else 0)
-    track_metric = record_every > 0
-    train_fn = _make_train_fn(cfg, obj, cuts, hist_builder, track_metric)
-
-    t0 = time.perf_counter()
-    margins, all_trees, metrics = train_fn(data, margins, y, extra)
-    jax.block_until_ready(margins)
-    elapsed = time.perf_counter() - t0
-
-    history: list[dict] = []
-    if track_metric:
-        metrics_host = np.asarray(metrics)
-        for r in range(cfg.n_rounds):
-            if r % record_every == 0 or r == cfg.n_rounds - 1:
-                rec = {
-                    "round": r,
-                    f"train_{obj.metric_name}": float(metrics_host[r]),
-                    "elapsed_s": elapsed,  # whole-fit wall clock (one program)
-                }
-                history.append(rec)
-                if callback:
-                    callback(r, rec)
-
-    # The scan's ys-stack IS the ensemble arena: (n_rounds, k, arena) fields
-    # reshaped to XGBoost's round-robin (n_rounds * k, arena) layout — no
-    # concatenate, no per-round host round trips.
-    arena = all_trees.feature.shape[-1]
-    ens = PR.Ensemble(
-        feature=all_trees.feature.reshape(-1, arena),
-        split_bin=all_trees.split_bin.reshape(-1, arena),
-        threshold=all_trees.threshold.reshape(-1, arena),
-        default_left=all_trees.default_left.reshape(-1, arena),
-        leaf_value=all_trees.leaf_value.reshape(-1, arena),
-        is_leaf=all_trees.is_leaf.reshape(-1, arena),
-        n_classes=k,
-        base_score=base,
-    )
-    ens = _scale_leaves(ens, cfg.learning_rate)
-    state = TrainState(ensemble=ens, margins=margins, matrix=matrix, history=history)
-
+    Re-quantises x on every call — build a DeviceDMatrix once and call
+    `Booster.fit` to amortise that. `eval_set` is routed through the in-scan
+    eval path, so history records are honest per-round entries.
+    """
+    dtrain = DeviceDMatrix(x, label=y, group_ids=group_ids,
+                           max_bins=cfg.max_bins)
+    evals = []
     if eval_set is not None:
         xv, yv = eval_set
-        mv = predict_margins(state.ensemble, jnp.asarray(xv, jnp.float32), cfg.max_depth)
-        state.history.append(
-            {"round": cfg.n_rounds - 1,
-             f"valid_{obj.metric_name}": float(obj.metric(mv, jnp.asarray(yv, jnp.float32)))}
-        )
-    return state
+        evals.append((DeviceDMatrix(xv, label=yv, ref=dtrain), "valid"))
+    return Booster(cfg).fit(dtrain, evals=evals, verbose_every=verbose_every,
+                            callback=callback)
 
 
-def _scale_leaves(ens: PR.Ensemble, eta: float) -> PR.Ensemble:
-    """Bake the learning rate into stored leaf values (margins during
-    training already used eta; the stored ensemble must match)."""
-    return ens._replace(leaf_value=ens.leaf_value * eta)
+def predict_margins(ens: PR.Ensemble, x, max_depth: int) -> jax.Array:
+    """Deprecated shim: raw-threshold margins. The single float32 conversion
+    lives here (predict() does not convert again)."""
+    return PR.predict_raw(ens, jnp.asarray(x, jnp.float32), max_depth)
 
 
-def predict_margins(ens: PR.Ensemble, x: jax.Array, max_depth: int) -> jax.Array:
-    return PR.predict_raw(ens, x, max_depth)
-
-
-def predict(ens: PR.Ensemble, x: jax.Array, max_depth: int, objective: str) -> jax.Array:
+def predict(ens: PR.Ensemble, x, max_depth: int, objective: str) -> jax.Array:
+    """Deprecated shim: prefer Booster.predict (no per-call max_depth /
+    objective — the model describes itself)."""
     obj = O.OBJECTIVES[objective]
-    return obj.transform(predict_margins(ens, jnp.asarray(x, jnp.float32), max_depth))
+    return obj.transform(predict_margins(ens, x, max_depth))

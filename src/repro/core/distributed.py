@@ -25,16 +25,20 @@ from jax.sharding import PartitionSpec as P
 from repro import jaxcompat
 from repro.core import compress as C
 from repro.core import objectives as O
-from repro.core import quantile as Q
-from repro.core import split as S
 from repro.core import tree as T
 from repro.core import predict as PR
+
+
+# Compiled per-round shard_map programs and eval-margin updaters, keyed by
+# static config (cuts/data are traced arguments) — mirrors
+# booster._TRAIN_FN_CACHE so refits with mesh= skip recompilation too.
+_ROUND_FN_CACHE: dict = {}
+_APPLY_EVAL_CACHE: dict = {}
 
 
 def make_distributed_round(
     cfg,
     obj: O.Objective,
-    cuts: jax.Array,
     mesh: jax.sharding.Mesh,
     data_axes: Sequence[str] = ("data",),
     n_rows_per_shard: int | None = None,
@@ -43,13 +47,18 @@ def make_distributed_round(
     """Returns a jit'd per-round function over row-sharded data.
 
     Inputs to the returned fn: bins_or_packed row-sharded over data_axes,
-    margins/y row-sharded, replicated tree output.
+    margins/y row-sharded, cuts replicated; replicated tree output. Cached
+    by static config so repeated fits reuse the compiled program.
     """
+    key = (cfg, obj.name, mesh, tuple(data_axes), n_rows_per_shard, bits)
+    cached = _ROUND_FN_CACHE.get(key)
+    if cached is not None:
+        return cached
     k = obj.n_outputs(cfg.n_classes)
     mb = cfg.max_bins - 1
     axis0, extra = data_axes[0], tuple(data_axes[1:])
 
-    def round_body(data, margins, y):
+    def round_body(data, margins, y, cuts):
         if cfg.compress_matrix:
             # Packed-native: each shard's words ARE its training matrix —
             # no per-round unpack, no dense (n, f) bins (DESIGN.md §2).
@@ -99,10 +108,116 @@ def make_distributed_round(
     shard_fn = jaxcompat.shard_map(
         round_body,
         mesh=mesh,
-        in_specs=(data_spec, row_spec, row_spec),
+        in_specs=(data_spec, row_spec, row_spec, P()),
         out_specs=(P(), row_spec),
     )
-    return jax.jit(shard_fn)
+    fn = _ROUND_FN_CACHE[key] = jax.jit(shard_fn)
+    return fn
+
+
+def make_chunk_runner(
+    cfg,
+    obj: O.Objective,
+    dmat,
+    mesh: jax.sharding.Mesh,
+    data_axes: Sequence[str],
+    eval_pbs: tuple = (),
+    eval_ys: tuple = (),
+    track_metric: bool = False,
+):
+    """The multi-device strategy behind Booster.fit(dtrain, mesh=...).
+
+    Shards the DeviceDMatrix's rows over the data axes (re-packing the words
+    per shard so each shard decodes independently), then exposes the same
+    chunk interface as the single-device scan:
+
+        run(length, margins, eval_margins) ->
+            (margins, stacked_trees (length, k, arena...),
+             train_metrics (length,), eval_margins, eval_metrics tuple)
+
+    The per-round loop dispatches one shard_map'd program per round (one
+    psum per tree level, Algorithm 1); eval-set margins are maintained
+    incrementally on replicated eval data, and metric values stay on device
+    until the Booster reads them at chunk granularity.
+    """
+    n = dmat.n_rows
+    n_shards = 1
+    for a in data_axes:
+        n_shards *= mesh.shape[a]
+    if n % n_shards != 0:
+        raise ValueError(
+            f"n_rows={n} must be divisible by the {n_shards} data shards "
+            "(truncate or pad upstream)"
+        )
+    cuts = dmat.cuts
+    if cfg.compress_matrix:
+        # Re-pack per shard so each shard's words decode independently.
+        # Cached on the DeviceDMatrix: the dense-bins transient (the matrix
+        # DESIGN.md §2 bans from steady state) exists once per shard count,
+        # not once per fit.
+        bits = dmat.bits
+        n_per = n // n_shards
+        data = dmat._shard_pack_cache.get(n_shards)
+        if data is None:
+            bins = dmat.matrix.unpack()
+            packed_shards = [
+                C.pack(bins[i * n_per : (i + 1) * n_per], bits)
+                for i in range(n_shards)
+            ]
+            data = jnp.concatenate(packed_shards, axis=1)  # (F, n_shards*W)
+            dmat._shard_pack_cache[n_shards] = data
+    else:
+        data = dmat.matrix.unpack()
+        bits, n_per = None, None
+
+    axes = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+    row_sharding = jax.NamedSharding(mesh, P(axes))
+    data_sharding = jax.NamedSharding(
+        mesh, P(None, axes) if cfg.compress_matrix else P(axes, None)
+    )
+    y = jax.device_put(dmat.label, row_sharding)
+    data = jax.device_put(data, data_sharding)
+    round_fn = make_distributed_round(
+        cfg, obj, mesh, data_axes, n_rows_per_shard=n_per, bits=bits
+    )
+
+    from repro.core import booster as B  # lazy: avoid import cycle
+
+    apply_eval = _APPLY_EVAL_CACHE.get(cfg)
+    if apply_eval is None:
+        apply_eval = _APPLY_EVAL_CACHE[cfg] = jax.jit(
+            lambda stacked, pb, m, _cfg=cfg:
+                B._apply_stacked_trees(_cfg, stacked, pb, m)
+        )
+
+    def run(length, margins, eval_margins):
+        margins = jax.device_put(margins, row_sharding)
+        trees, tr_metrics, ev_rows = [], [], []
+        for _ in range(length):
+            stacked, margins = round_fn(data, margins, y, cuts)
+            trees.append(stacked)
+            eval_margins = tuple(
+                apply_eval(stacked, pb, em)
+                for pb, em in zip(eval_pbs, eval_margins)
+            )
+            if track_metric:
+                tr_metrics.append(obj.metric(margins, y).astype(jnp.float32))
+            ev_rows.append(tuple(
+                obj.metric(em, ey).astype(jnp.float32)
+                for em, ey in zip(eval_margins, eval_ys)
+            ))
+        all_trees = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+        metrics = (
+            jnp.stack(tr_metrics) if track_metric
+            else jnp.zeros(length, jnp.float32)
+        )
+        ev_metrics = tuple(
+            jnp.stack([row[i] for row in ev_rows])
+            for i in range(len(eval_pbs))
+        )
+        return margins, all_trees, metrics, eval_margins, ev_metrics
+
+    return run
 
 
 def train_distributed(
@@ -113,67 +228,13 @@ def train_distributed(
     data_axes: Sequence[str] = ("data",),
     verbose_every: int = 0,
 ):
-    """End-to-end distributed boosting. x, y are global arrays; rows must be
-    divisible by the product of data-axis sizes (pad upstream)."""
-    obj = O.OBJECTIVES[cfg.objective]
-    x = jnp.asarray(x, jnp.float32)
-    y = jnp.asarray(y, jnp.float32)
-    n = x.shape[0]
-    k = obj.n_outputs(cfg.n_classes)
-    n_shards = 1
-    for a in data_axes:
-        n_shards *= mesh.shape[a]
-    assert n % n_shards == 0, (n, n_shards)
+    """Deprecated shim: quantises x and runs Booster.fit(dtrain, mesh=mesh).
 
-    cuts = Q.compute_cuts(x, cfg.max_bins)
-    bins = Q.quantize(x, cuts)
+    Returns the same Booster object as single-device training (the old
+    (ensemble, margins, history) tuple is reachable as attributes)."""
+    from repro.core.booster import Booster
+    from repro.core.dmatrix import DeviceDMatrix
 
-    if cfg.compress_matrix:
-        # Pack per-shard so each shard's words decode independently.
-        per = n // n_shards
-        packed_shards = [
-            C.pack(bins[i * per : (i + 1) * per], C.bits_needed(cfg.max_bins - 1))
-            for i in range(n_shards)
-        ]
-        data = jnp.concatenate(packed_shards, axis=1)  # (F, n_shards*W)
-        bits = C.bits_needed(cfg.max_bins - 1)
-        n_per = per
-    else:
-        data = bins
-        bits, n_per = None, None
-
-    axes = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
-    row_sharding = jax.NamedSharding(mesh, P(axes))
-    data_sharding = jax.NamedSharding(
-        mesh, P(None, axes) if cfg.compress_matrix else P(axes, None)
-    )
-    base = obj.init_base_score(y)
-    margins = jax.device_put(jnp.full((n, k), base, jnp.float32), row_sharding)
-    y = jax.device_put(y, row_sharding)
-    data = jax.device_put(data, data_sharding)
-
-    round_fn = make_distributed_round(
-        cfg, obj, cuts, mesh, data_axes, n_rows_per_shard=n_per, bits=bits
-    )
-
-    trees, history = [], []
-    for r in range(cfg.n_rounds):
-        stacked, margins = round_fn(data, margins, y)
-        trees.append(stacked)
-        if verbose_every and r % verbose_every == 0:
-            history.append(
-                {"round": r, f"train_{obj.metric_name}": float(obj.metric(margins, y))}
-            )
-
-    all_trees = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *trees)
-    ens = PR.Ensemble(
-        feature=all_trees.feature,
-        split_bin=all_trees.split_bin,
-        threshold=all_trees.threshold,
-        default_left=all_trees.default_left,
-        leaf_value=all_trees.leaf_value * cfg.learning_rate,
-        is_leaf=all_trees.is_leaf,
-        n_classes=k,
-        base_score=base,
-    )
-    return ens, margins, history
+    dtrain = DeviceDMatrix(x, label=y, max_bins=cfg.max_bins)
+    return Booster(cfg).fit(dtrain, verbose_every=verbose_every, mesh=mesh,
+                            data_axes=data_axes)

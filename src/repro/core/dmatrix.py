@@ -1,0 +1,135 @@
+"""DeviceDMatrix — the quantised, compressed training matrix as a first-class
+user-facing object (paper Figure 1, left boxes; XGBoost's `DMatrix` noun).
+
+Construction runs the paper's preprocessing pipeline ONCE on device:
+quantile generation (`compute_cuts`) -> quantisation (`quantize`) ->
+bit-packed compression (`compress`). The resulting object is the durable
+on-device artifact: it can be reused across any number of `Booster.fit` /
+`Booster.update` calls without re-quantising, and it is the only training-set
+representation the booster ever sees (the raw float matrix can be freed by
+the caller immediately after construction).
+
+Evaluation sets must share the training matrix's cut points so that
+bin-space tree traversal agrees exactly with raw-threshold traversal
+(threshold == cuts[feature, split_bin] and `quantize` uses
+searchsorted-left, so `x <= threshold  <=>  bin <= split_bin`). Build them
+with `ref=`, mirroring XGBoost's `QuantileDMatrix(..., ref=dtrain)`:
+
+    dtrain = DeviceDMatrix(x_train, label=y_train)
+    dvalid = DeviceDMatrix(x_valid, label=y_valid, ref=dtrain)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compress as C
+from repro.core import quantile as Q
+
+
+def cuts_equal(a: jax.Array | None, b: jax.Array | None) -> bool:
+    """Identity-or-value equality of two cut-point arrays — the single
+    definition used by both DeviceDMatrix and Booster validation."""
+    if a is b:
+        return True
+    if a is None or b is None:
+        return False
+    return a.shape == b.shape and bool(jnp.all(a == b))
+
+
+class DeviceDMatrix:
+    """Device-resident quantised + compressed data matrix.
+
+    Args:
+      x: (n_rows, n_features) float array (numpy or jax), NaN = missing.
+      label: optional (n_rows,) targets; required for `Booster.fit`.
+      group_ids: optional (n_rows,) int query-group ids (rank:pairwise).
+      max_bins: total bins per feature incl. the reserved missing bin.
+      ref: another DeviceDMatrix whose cut points (and max_bins) to reuse —
+        required for evaluation sets so bin-space traversal is exact.
+    """
+
+    def __init__(
+        self,
+        x,
+        label=None,
+        *,
+        group_ids=None,
+        max_bins: int = Q.DEFAULT_MAX_BINS,
+        ref: "DeviceDMatrix | None" = None,
+    ):
+        x = jnp.asarray(x, jnp.float32)
+        if x.ndim != 2:
+            raise ValueError(f"x must be 2-D (n_rows, n_features), got {x.shape}")
+        if ref is not None:
+            cuts = ref.cuts
+            max_bins = ref.max_bins
+            if x.shape[1] != ref.n_features:
+                raise ValueError(
+                    f"ref has {ref.n_features} features, x has {x.shape[1]}"
+                )
+        else:
+            cuts = Q.compute_cuts(x, max_bins)
+        bins = Q.quantize(x, cuts)
+        self.matrix: C.CompressedMatrix = C.compress(bins, cuts, max_bins)
+        self.label = None if label is None else jnp.asarray(label, jnp.float32)
+        self.group_ids = (
+            None if group_ids is None else jnp.asarray(group_ids, jnp.int32)
+        )
+        # Per-shard re-packings built by the distributed strategy, keyed by
+        # shard count — paid once per (matrix, mesh size), not per fit.
+        self._shard_pack_cache: dict = {}
+        if self.label is not None and self.label.shape[0] != self.n_rows:
+            raise ValueError(
+                f"label has {self.label.shape[0]} rows, x has {self.n_rows}"
+            )
+
+    # --- surface -----------------------------------------------------------
+    @property
+    def cuts(self) -> jax.Array:
+        return self.matrix.cuts
+
+    @property
+    def max_bins(self) -> int:
+        return self.matrix.max_bins
+
+    @property
+    def bits(self) -> int:
+        return self.matrix.bits
+
+    @property
+    def n_rows(self) -> int:
+        return self.matrix.n_rows
+
+    @property
+    def n_features(self) -> int:
+        return self.matrix.n_features
+
+    @property
+    def nbytes(self) -> int:
+        """Device bytes held: packed words + cut points + labels/groups."""
+        total = self.matrix.nbytes_compressed() + int(np.prod(self.cuts.shape)) * 4
+        if self.label is not None:
+            total += self.label.shape[0] * 4
+        if self.group_ids is not None:
+            total += self.group_ids.shape[0] * 4
+        return total
+
+    def packed_bins(self) -> C.PackedBins:
+        """The traced (jit-flowable) view consumed by the training scan."""
+        return self.matrix.as_packed_bins()
+
+    def compression_ratio(self) -> float:
+        return self.matrix.compression_ratio()
+
+    def same_cuts(self, other: "DeviceDMatrix") -> bool:
+        return cuts_equal(self.cuts, other.cuts)
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (
+            f"DeviceDMatrix({self.n_rows}x{self.n_features}, "
+            f"{self.bits}-bit, max_bins={self.max_bins}, "
+            f"{self.nbytes / 1e6:.2f} MB"
+            f"{', labelled' if self.label is not None else ''})"
+        )

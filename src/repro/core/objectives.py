@@ -30,6 +30,7 @@ class Objective(NamedTuple):
     transform: Callable  # margins -> predictions
     metric_name: str
     metric: Callable  # (margins, y) -> scalar
+    maximize: bool = True  # metric direction (early stopping / best_iteration)
 
 
 def _sq_grad(margins, y, **_):
@@ -50,6 +51,7 @@ squared_error = Objective(
     transform=lambda m: m[:, 0],
     metric_name="rmse",
     metric=_sq_metric,
+    maximize=False,
 )
 
 

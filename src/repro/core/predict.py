@@ -73,6 +73,35 @@ def stack_trees(trees: list[Tree], n_classes: int = 1, base_score: float = 0.0) 
     )
 
 
+_ENSEMBLE_ARRAY_FIELDS = (
+    "feature", "split_bin", "threshold", "default_left", "leaf_value", "is_leaf"
+)
+
+
+def concat_ensembles(a: Ensemble, b: Ensemble) -> Ensemble:
+    """Append b's trees after a's (continued training). Static metadata must
+    agree — the two halves describe one model."""
+    if a.n_classes != b.n_classes or a.base_score != b.base_score:
+        raise ValueError("cannot concatenate ensembles with different metadata")
+    if a.feature.shape[1] != b.feature.shape[1]:
+        raise ValueError("cannot concatenate ensembles with different arenas")
+    return Ensemble(
+        **{f: jnp.concatenate([getattr(a, f), getattr(b, f)], axis=0)
+           for f in _ENSEMBLE_ARRAY_FIELDS},
+        n_classes=a.n_classes,
+        base_score=a.base_score,
+    )
+
+
+def truncate_rounds(ens: Ensemble, n_rounds: int) -> Ensemble:
+    """Keep only the first n_rounds boosting rounds (n_rounds * n_classes
+    trees, round-robin layout) — used by early stopping."""
+    keep = n_rounds * ens.n_classes
+    return ens._replace(
+        **{f: getattr(ens, f)[:keep] for f in _ENSEMBLE_ARRAY_FIELDS}
+    )
+
+
 def _traverse(tree_arrays, x_row_lookup, max_depth: int) -> jax.Array:
     """Level-wise traversal for one stacked tree over all rows at once.
 

@@ -19,6 +19,7 @@ cannot match the real data.
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass
 
 import numpy as np
@@ -77,7 +78,11 @@ def make_dataset(
     spec = DATASETS[name]
     n = n_rows or spec.n_rows
     f = spec.n_features
-    rng = np.random.default_rng(seed + hash(name) % 2**31)
+    # zlib.crc32, not hash(): Python string hashing is randomised per
+    # process, which would make every process generate different "datasets"
+    # (and cross-process comparisons — e.g. single- vs multi-device CLI
+    # runs — silently incomparable).
+    rng = np.random.default_rng(seed + zlib.crc32(name.encode()) % 2**31)
 
     x = rng.standard_normal((n, f), dtype=np.float32)
     # Learnable structure: sparse linear signal + pairwise interactions.

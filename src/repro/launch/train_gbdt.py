@@ -1,8 +1,10 @@
-"""GBDT training driver — the paper's own end-to-end pipeline (Figure 1).
+"""GBDT training driver — the paper's own end-to-end pipeline (Figure 1)
+behind the two-noun API: DeviceDMatrix (quantise once) + Booster.fit.
 
 Single-device by default; --devices N uses N virtual host devices and the
-shard_map/psum distributed builder (Algorithm 1's multi-GPU path; set
-XLA_FLAGS by re-exec so the flag precedes jax init).
+shard_map/psum distributed strategy behind the same Booster.fit signature
+(Algorithm 1's multi-GPU path; set XLA_FLAGS by re-exec so the flag precedes
+jax init). Both paths produce the same Booster object.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train_gbdt --dataset higgs \
@@ -30,6 +32,8 @@ def main():
     ap.add_argument("--devices", type=int, default=1)
     ap.add_argument("--use-kernel", action="store_true",
                     help="route histograms through the Pallas kernel")
+    ap.add_argument("--early-stopping", type=int, default=0,
+                    help="stop when the valid metric stalls for N rounds")
     ap.add_argument("--checkpoint", default="")
     args = ap.parse_args()
 
@@ -39,17 +43,12 @@ def main():
         )
         os.execv(sys.executable, [sys.executable, "-m", "repro.launch.train_gbdt", *sys.argv[1:]])
 
-    import jax
-    import numpy as np
-    from repro.core import BoosterConfig, train
-    from repro.core.booster import predict_margins
-    from repro.core import objectives as O
-    from repro.core.distributed import train_distributed
+    from repro.core import Booster, BoosterConfig, DeviceDMatrix
     from repro.data import make_dataset
 
     x, y, spec = make_dataset(args.dataset, n_rows=args.rows)
     n_tr = int(0.8 * len(x))
-    xt, yt, xv, yv = x[:n_tr], y[:n_tr], x[n_tr:], y[n_tr:]
+    n_tr = (n_tr // args.devices) * args.devices  # shard-divisible (no-op at 1)
     cfg = BoosterConfig(
         n_rounds=args.rounds,
         max_depth=args.max_depth,
@@ -60,30 +59,36 @@ def main():
         growth=args.growth,
         use_kernel_histograms=args.use_kernel,
     )
+
     t0 = time.perf_counter()
+    dtrain = DeviceDMatrix(x[:n_tr], label=y[:n_tr], max_bins=args.max_bins)
+    dval = DeviceDMatrix(x[n_tr:], label=y[n_tr:], ref=dtrain)
+    t_build = time.perf_counter() - t0
+
+    mesh = None
     if args.devices > 1:
-        n_keep = (len(xt) // args.devices) * args.devices
         from repro import jaxcompat
         mesh = jaxcompat.make_mesh((args.devices,), ("data",))
-        ens, margins, hist = train_distributed(xt[:n_keep], yt[:n_keep], cfg, mesh,
-                                               verbose_every=max(args.rounds // 5, 1))
-    else:
-        st = train(xt, yt, cfg, verbose_every=max(args.rounds // 5, 1),
-                   callback=lambda r, rec: print(rec, flush=True))
-        ens, hist = st.ensemble, st.history
-    elapsed = time.perf_counter() - t0
 
-    obj = O.OBJECTIVES[spec.objective]
-    import jax.numpy as jnp
-    mv = predict_margins(ens, jnp.asarray(xv), cfg.max_depth)
-    metric = float(obj.metric(mv, jnp.asarray(yv)))
-    print(f"dataset={args.dataset} rows={args.rows} rounds={args.rounds} "
-          f"devices={args.devices} time={elapsed:.1f}s "
-          f"valid_{obj.metric_name}={metric:.4f}")
+    t0 = time.perf_counter()
+    bst = Booster(cfg).fit(
+        dtrain,
+        evals=[(dval, "valid")],
+        early_stopping_rounds=args.early_stopping or None,
+        verbose_every=max(args.rounds // 5, 1),
+        callback=lambda r, rec: print(rec, flush=True),
+        mesh=mesh,
+    )
+    t_fit = time.perf_counter() - t0
+
+    metric_name, metric = next(iter(bst.eval(dval, "valid").items()))
+    print(f"dataset={args.dataset} rows={args.rows} "
+          f"rounds={bst.n_rounds_trained} devices={args.devices} "
+          f"dmatrix={t_build:.1f}s fit={t_fit:.1f}s "
+          f"{metric_name}={metric:.4f}")
     if args.checkpoint:
-        from repro.checkpoint import save_ensemble
-        save_ensemble(args.checkpoint, ens)
-        print("saved ensemble to", args.checkpoint)
+        bst.save(args.checkpoint)
+        print("saved booster to", args.checkpoint)
 
 
 if __name__ == "__main__":

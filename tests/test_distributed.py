@@ -26,9 +26,11 @@ def _run(script: str):
 
 
 def test_row_sharded_equals_single_device():
+    """The distributed path is a strategy behind Booster.fit(mesh=...):
+    same DeviceDMatrix in, same Booster object out, identical trees."""
     out = _run("""
         import numpy as np, jax, jax.numpy as jnp
-        from repro.core import train, BoosterConfig
+        from repro.core import Booster, BoosterConfig, DeviceDMatrix
         from repro.core.distributed import train_distributed
         rng = np.random.default_rng(2)
         n, f = 1024, 6
@@ -36,14 +38,20 @@ def test_row_sharded_equals_single_device():
         y = (x @ rng.normal(size=f) > 0).astype(np.float32)
         cfg = BoosterConfig(n_rounds=4, max_depth=3,
                             objective="binary:logistic", max_bins=32)
-        st = train(x, y, cfg)
+        dtrain = DeviceDMatrix(x, label=y, max_bins=cfg.max_bins)
+        st = Booster(cfg).fit(dtrain)
         from repro.jaxcompat import make_mesh
         mesh = make_mesh((8,), ("data",))
-        ens, _, _ = train_distributed(x, y, cfg, mesh)
+        bst = Booster(cfg).fit(dtrain, mesh=mesh)
+        assert type(bst) is type(st)  # identical object shape out
+        ens = bst.ensemble
         assert bool(jnp.all(st.ensemble.feature == ens.feature))
         assert bool(jnp.all(st.ensemble.split_bin == ens.split_bin))
         d = float(jnp.max(jnp.abs(st.ensemble.leaf_value - ens.leaf_value)))
         assert d < 1e-4, d
+        # deprecated one-shot shim returns the same Booster type
+        legacy = train_distributed(x, y, cfg, mesh)
+        assert bool(jnp.all(legacy.ensemble.feature == ens.feature))
         print("ROW-SHARDED-OK")
     """)
     assert "ROW-SHARDED-OK" in out
