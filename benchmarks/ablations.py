@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import BoosterConfig, predict_margins, train
+from repro.core import metrics as M
 from repro.core import objectives as O
 from repro.data import make_dataset
 
@@ -22,7 +23,7 @@ def run(rows: int = 8000, rounds: int = 30):
     x, y, spec = make_dataset("higgs", n_rows=rows)
     n_tr = int(0.8 * rows)
     xt, yt, xv, yv = x[:n_tr], y[:n_tr], x[n_tr:], y[n_tr:]
-    obj = O.OBJECTIVES[spec.objective]
+    metric = M.get_metric(O.get_objective(spec.objective).default_metric)
     out = []
 
     def fit(cfg, tag):
@@ -30,7 +31,7 @@ def run(rows: int = 8000, rounds: int = 30):
         st = train(xt, yt, cfg)
         dt = time.perf_counter() - t0
         mv = predict_margins(st.ensemble, jnp.asarray(xv), cfg.max_depth)
-        acc = float(obj.metric(mv, jnp.asarray(yv)))
+        acc = float(metric.fn(mv, jnp.asarray(yv)))
         out.append((tag, dt, acc, st.matrix.bits))
 
     # growth strategy at equal leaf budget (depth 5 = up to 32 leaves vs

@@ -1,6 +1,6 @@
 """Figure 1 pipeline benchmark + compressed-vs-dense round-loop comparison.
 
-Two parts, both emitted into BENCH_pipeline.json so the perf trajectory is
+Three parts, all emitted into BENCH_pipeline.json so the perf trajectory is
 tracked across PRs (EXPERIMENTS.md §Perf):
 
 1. Phase split — where a boosting round spends its time (quantise,
@@ -12,6 +12,12 @@ tracked across PRs (EXPERIMENTS.md §Perf):
    re-creates the pre-compressed-native behaviour: per-round Python
    dispatch, full-matrix unpack at the top of every round, dense
    histogram/partition/prediction, and an end-of-training concatenate.
+
+3. Objectives — per-round wall-clock of the compiled scan for EVERY
+   built-in objective (with its default metric tracked in-scan), so a
+   regression in any objective's grad/metric path shows up in the perf
+   trajectory. rank:pairwise rows are capped (its gradient is O(n^2) in
+   the group mask by design).
 
 Acceptance tracking: the packed path must be >= 1.5x faster per round at
 1M x 50 synthetic rows on CPU (ISSUE 1).
@@ -30,6 +36,7 @@ from repro.core import Booster, DeviceDMatrix
 from repro.core import booster as B
 from repro.core import compress as C
 from repro.core import histogram as H
+from repro.core import metrics as M
 from repro.core import objectives as O
 from repro.core import predict as PR
 from repro.core import quantile as Q
@@ -162,7 +169,7 @@ def round_loop(xj, yj, max_bins, max_depth, n_rounds):
     t_seed = time.perf_counter() - t0
 
     # --- scan-compiled packed-native path ---------------------------------
-    train_fn = B._make_train_fn(cfg, obj, cuts, None, track_metric=False)
+    train_fn = B._make_train_fn(cfg, obj, cuts, None, (), track_metric=False)
     out = train_fn(pb, margins0, yj, {})  # compile
     jax.block_until_ready(out)
     t0 = time.perf_counter()
@@ -184,6 +191,70 @@ def round_loop(xj, yj, max_bins, max_depth, n_rounds):
         "packed_transient_unpack_bytes_per_round": 0,
         "compression_ratio_vs_fp32": matrix.compression_ratio(),
     }
+
+
+RANK_ROWS_CAP = 4096  # rank:pairwise gradients are O(n^2) in the pair mask
+OBJ_ROWS_CAP = 100_000  # keep the 7-objective sweep tractable at 1M-row runs
+
+
+def objectives_split(xj, max_bins, max_depth, n_rounds):
+    """Per-round time of the compiled scan per built-in objective, each
+    with its default eval metric tracked in-scan — the grad + metric hot
+    path of every objective lands in the perf trajectory."""
+    rng = np.random.default_rng(1)
+    out = {}
+    packed = {}  # quantise ONCE per row cap, not once per objective
+    for cap in {min(OBJ_ROWS_CAP, xj.shape[0]),
+                min(RANK_ROWS_CAP, xj.shape[0])}:
+        xr = xj[:cap]
+        cuts = Q.compute_cuts(xr, max_bins)
+        packed[cap] = (
+            xr, cuts,
+            C.compress(Q.quantize(xr, cuts), cuts, max_bins).as_packed_bins(),
+        )
+    for name in sorted(O.OBJECTIVES):
+        obj = O.OBJECTIVES[name]
+        cap = min(RANK_ROWS_CAP if name == "rank:pairwise" else OBJ_ROWS_CAP,
+                  xj.shape[0])
+        xr, cuts, pb = packed[cap]
+        n = xr.shape[0]
+        n_classes = 3 if name == "multi:softmax" else 1
+        if name == "multi:softmax":
+            y = rng.integers(0, n_classes, size=n)
+        elif name == "binary:logistic":
+            y = rng.random(n) < 0.5
+        elif name == "count:poisson":
+            y = rng.poisson(2.0, size=n)
+        elif name == "rank:pairwise":
+            y = rng.integers(0, 5, size=n)
+        else:
+            y = rng.standard_normal(n)
+        yj = jnp.asarray(y.astype(np.float32))
+        extra = {"quantile_alpha": 0.5}
+        if name == "rank:pairwise":
+            extra["group_ids"] = jnp.asarray(
+                (np.arange(n) // 16).astype(np.int32))
+        cfg = B.BoosterConfig(
+            n_rounds=n_rounds, max_depth=max_depth, max_bins=max_bins,
+            objective=name, n_classes=n_classes,
+        )
+        k = obj.n_outputs(n_classes)
+        margins0 = jnp.zeros((n, k), jnp.float32)
+        metric = M.get_metric(obj.default_metric)
+        train_fn = B._make_train_fn(cfg, obj, cuts, None, (metric,),
+                                    track_metric=True)
+        warm = train_fn(pb, margins0, yj, extra)  # compile
+        jax.block_until_ready(warm)
+        t0 = time.perf_counter()
+        res = train_fn(pb, margins0, yj, extra)
+        jax.block_until_ready(res)
+        out[name] = {
+            "per_round_s": (time.perf_counter() - t0) / n_rounds,
+            "rows": n,
+            "trees_per_round": k,
+            "metric": metric.name,
+        }
+    return out
 
 
 def api_split(xj, yj, max_bins, max_depth, n_rounds):
@@ -226,6 +297,7 @@ def run(rows, features, max_bins, max_depth, n_rounds):
         "phases": phase_split(xj, yj, max_bins, max_depth),
         "api": api_split(xj, yj, max_bins, max_depth, n_rounds),
         "round_loop": round_loop(xj, yj, max_bins, max_depth, n_rounds),
+        "objectives": objectives_split(xj, max_bins, max_depth, n_rounds),
     }
     return result
 
@@ -248,6 +320,8 @@ def main(argv=None):
         print(f"{k},{v}")
     for k, v in r["round_loop"].items():
         print(f"{k},{v}")
+    for k, v in r["objectives"].items():
+        print(f"objective_{k}_per_round_s,{v['per_round_s']:.4f}")
     with open(args.out, "w") as f:
         json.dump(r, f, indent=2)
     print(f"wrote {args.out}")

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import BoosterConfig, predict_margins, train
+from repro.core import metrics as M
 from repro.core import objectives as O
 from repro.data import DATASETS, make_dataset
 from benchmarks.baselines import train_numpy
@@ -22,8 +23,8 @@ ROUNDS = 40  # paper uses 500; scaled for 1-core CPU
 
 
 def _metric(spec, margins, y):
-    obj = O.OBJECTIVES[spec.objective]
-    return obj.metric_name, float(obj.metric(jnp.asarray(margins), jnp.asarray(y)))
+    m = M.get_metric(O.get_objective(spec.objective).default_metric)
+    return m.name, float(m.fn(jnp.asarray(margins), jnp.asarray(y)))
 
 
 def run(rows: int = DEFAULT_ROWS, rounds: int = ROUNDS, datasets=None,

@@ -102,11 +102,29 @@ BOOSTER_VERSION = 1
 def save_booster(path: str, bst) -> None:
     """Versioned checkpoint of a fitted Booster: config + cut points + base
     score + trees + training record. Loading needs NO caller-supplied
-    max_depth / objective / n_classes — the model describes itself."""
+    max_depth / objective / n_classes — the model describes itself.
+
+    Objectives are stored BY REGISTRY NAME: a model trained with a custom
+    objective round-trips iff that objective was added with
+    `objectives.register_objective` (in the saving process here, and in
+    the loading process at load time). A bare callable passed via
+    `fit(obj=...)` without registration is rejected with a ValueError —
+    there is nothing durable to write for an anonymous Python function.
+    """
     import dataclasses
 
+    from repro.core import objectives as O
     from repro.core.predict import _ENSEMBLE_ARRAY_FIELDS
 
+    obj = bst.obj
+    if O.OBJECTIVES.get(obj.name) is not obj:
+        raise ValueError(
+            f"objective {obj.name!r} is not in the objective registry; a "
+            "bare callable passed via fit(obj=...) cannot be checkpointed "
+            "by name. Register it first with "
+            "objectives.register_objective(name, grad, ...) and pass the "
+            "registered objective (or its name) to fit."
+        )
     payload = {
         "format": BOOSTER_FORMAT,
         "version": BOOSTER_VERSION,
@@ -147,6 +165,16 @@ def load_booster(path: str):
     cfg = BoosterConfig(
         **{k: v for k, v in d["config"].items() if k in known}
     )
+    from repro.core import objectives as O
+
+    if cfg.objective not in O.OBJECTIVES:
+        raise ValueError(
+            f"checkpoint {path} was trained with objective "
+            f"{cfg.objective!r}, which is not in this process's objective "
+            "registry. Custom objectives must be re-registered before "
+            "loading: objectives.register_objective"
+            f"({cfg.objective!r}, grad, ...)"
+        )
     bst = Booster(cfg)
     bst.cuts = d["cuts"]
     bst.base_score = d["base_score"]

@@ -8,13 +8,20 @@ gradient evaluation -> histogram tree construction (AllReduce across
 devices) -> prediction, all on-device.
 """
 # NOTE: function re-exports must not shadow submodule names (`compress`,
-# `predict` stay module-only; use predict_proba / compress_matrix aliases).
+# `predict`, `metrics`, `objectives` stay module-only; use predict_proba /
+# compress_matrix aliases).
 from repro.core.booster import Booster, BoosterConfig, TrainState
 from repro.core.booster import predict_margins, train
 from repro.core.booster import predict as predict_proba
 from repro.core.compress import CompressedMatrix, PackedBins, pack, unpack
 from repro.core.compress import compress as compress_matrix
 from repro.core.dmatrix import DeviceDMatrix
+from repro.core.metrics import Metric, get_metric, register_metric
+from repro.core.objectives import (
+    Objective,
+    get_objective,
+    register_objective,
+)
 from repro.core.quantile import compute_cuts, quantize
 from repro.core.split import SplitParams
 from repro.core.tree import Tree, grow_tree
@@ -31,6 +38,12 @@ __all__ = [
     "Booster",
     "BoosterConfig",
     "DeviceDMatrix",
+    "Metric",
+    "Objective",
+    "get_metric",
+    "get_objective",
+    "register_metric",
+    "register_objective",
     "TrainState",
     "train",
     "predict_proba",

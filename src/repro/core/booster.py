@@ -17,11 +17,19 @@ ys-stack is the preallocated (n_rounds * k, arena) ensemble arena. Per round
 -> gradient evaluation -> quantised-histogram tree construction -> margin
 update. Evaluation sets ride INSIDE the scan: each eval set is a
 `DeviceDMatrix` quantised with the training cuts, its margins are maintained
-incrementally next to the training margins, and per-round metrics come out
-as a scan ys-stack — no per-round host round trips. With
-`early_stopping_rounds=e` the scan runs in compiled chunks of e rounds with
-one host-side check per chunk (overtraining bounded by < 2e rounds), and the
-stored ensemble is truncated to `best_iteration + 1` rounds.
+incrementally next to the training margins, and EVERY requested eval metric
+(`fit(eval_metric=[...], custom_metric=...)`) comes out as a scan ys-stack
+entry — no per-round host round trips. With `early_stopping_rounds=e` the
+scan runs in compiled chunks of e rounds with one host-side check per chunk
+(overtraining bounded by < 2e rounds), stopping on the LAST metric of the
+LAST eval set in that metric's declared direction, and the stored ensemble
+is truncated to `best_iteration + 1` rounds.
+
+Objectives and metrics are pluggable registries (DESIGN.md §10):
+`fit(obj=...)` traces custom `(margins, y) -> (g, h)` callables straight
+into the scan, and the compiled-fn cache is keyed by the resolved
+Objective/Metric objects, so repeat fits with the same plugins reuse the
+compiled program.
 
 Feature quantisation + compression happen once, at DeviceDMatrix
 construction (Figure 1's left boxes). With compress_matrix=True the
@@ -51,6 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compress as C
+from repro.core import metrics as M
 from repro.core import objectives as O
 from repro.core import quantile as Q
 from repro.core import split as S
@@ -70,6 +79,7 @@ class BoosterConfig:
     min_child_weight: float = 1.0
     objective: str = "reg:squarederror"
     n_classes: int = 1
+    quantile_alpha: float = 0.5  # reg:quantile pinball target
     growth: str = "depthwise"  # or "lossguide"
     max_leaves: int = 0  # lossguide budget (0 = 2^max_depth)
     use_kernel_histograms: bool = False  # route through the Pallas kernel path
@@ -155,57 +165,65 @@ def _make_round_step(cfg: BoosterConfig, obj: O.Objective, cuts: jax.Array,
     return round_step
 
 
-# Compiled train functions, keyed by static config only (cuts/data are traced
-# arguments). Refitting — same or different DeviceDMatrix — reuses the
+# Compiled train functions, keyed by static config + objective + metric
+# tuple (cuts/data are traced arguments). Objective and Metric are hashable
+# NamedTuples and registry lookups return singletons — a refit with the same
+# config, same (possibly custom) objective and same eval metrics reuses the
 # compiled program as long as shapes match, so the quantise-once API isn't
-# eaten by per-fit recompilation.
+# eaten by per-fit recompilation (DESIGN.md §10).
 _TRAIN_FN_CACHE: dict = {}
 
 
 def _make_train_fn(cfg: BoosterConfig, obj: O.Objective, cuts: jax.Array,
-                   hist_builder, track_metric: bool, n_rounds: int | None = None):
+                   hist_builder, metrics: tuple, track_metric: bool,
+                   n_rounds: int | None = None):
     """The whole training run as one jit: scan over rounds.
 
     Returns a function
-      (data, margins0, y, extra, eval_data, eval_margins0, eval_y) ->
+      (data, margins0, y, extra, eval_data, eval_margins0, eval_y,
+       eval_extra) ->
       (final_margins, stacked_trees (n_rounds, k, arena...),
-       train_metrics (n_rounds,), final_eval_margins, eval_metrics tuple)
+       train_metrics tuple-per-metric of (n_rounds,), final_eval_margins,
+       eval_metrics tuple-per-set of tuple-per-metric of (n_rounds,))
 
     Eval sets ride inside the scan: eval_data is a tuple of PackedBins
-    (quantised with the TRAINING cuts), their margins are carried next to the
-    training margins and each round's metric lands in a ys-stack — per-round
-    eval history with zero host round trips.
+    (quantised with the TRAINING cuts), their margins are carried next to
+    the training margins, and EVERY requested metric of every eval set
+    lands in its own ys-stack entry — multi-metric per-round history with
+    zero host round trips.
     """
     length = cfg.n_rounds if n_rounds is None else n_rounds
-    key = (cfg, obj.name, hist_builder, track_metric, length)
+    key = (cfg, obj, hist_builder, metrics, track_metric, length)
     jitted = _TRAIN_FN_CACHE.get(key)
     if jitted is None:
         round_step = _round_step_fn(cfg, obj, hist_builder)
 
         @jax.jit
         def train_fn(cuts, data, margins0, y, extra, eval_data=(),
-                     eval_margins0=(), eval_y=()):
+                     eval_margins0=(), eval_y=(), eval_extra=()):
             def body(carry, _):
                 margins, ev = carry
                 stacked, new_margins = round_step(data, margins, y, extra,
                                                   cuts)
                 new_ev, ev_metrics = [], []
-                for pb, em, ey in zip(eval_data, ev, eval_y):
+                for pb, em, ey, ex in zip(eval_data, ev, eval_y, eval_extra):
                     em = _apply_stacked_trees(cfg, stacked, pb, em)
                     new_ev.append(em)
-                    ev_metrics.append(obj.metric(em, ey).astype(jnp.float32))
-                metric = (
-                    obj.metric(new_margins, y).astype(jnp.float32)
-                    if track_metric
-                    else jnp.float32(0.0)
-                )
-                return (new_margins, tuple(new_ev)), (stacked, metric,
+                    ev_metrics.append(tuple(
+                        m.fn(em, ey, **ex).astype(jnp.float32)
+                        for m in metrics
+                    ))
+                tr_metrics = tuple(
+                    m.fn(new_margins, y, **extra).astype(jnp.float32)
+                    for m in metrics
+                ) if track_metric else ()
+                return (new_margins, tuple(new_ev)), (stacked, tr_metrics,
                                                       tuple(ev_metrics))
 
-            (margins, ev), (all_trees, metrics, ev_metrics) = jax.lax.scan(
+            (margins, ev), (all_trees, tr_metrics, ev_metrics) = jax.lax.scan(
                 body, (margins0, tuple(eval_margins0)), None, length=length
             )
-            return margins, all_trees, metrics, ev, ev_metrics
+            return margins, all_trees, tr_metrics, ev, ev_metrics
 
         jitted = _TRAIN_FN_CACHE[key] = train_fn
     return functools.partial(jitted, cuts)
@@ -227,10 +245,18 @@ class Booster:
         p = bst.predict(x_new)          # numpy / jax array / DeviceDMatrix
         bst.save(path); Booster.load(path).predict(x_new)  # no extra args
 
+    Both the objective and the eval metrics are pluggable (DESIGN.md §10):
+    `fit(obj=...)` accepts a registry name, an `objectives.register_objective`
+    result, or a bare `(margins, y) -> (g, h)` callable traced straight into
+    the compiled scan; `fit(eval_metric=[...], custom_metric=...)` evaluates
+    any number of metrics per round inside the scan, and early stopping is
+    keyed to the LAST metric of the LAST eval set with the direction taken
+    from that metric's `maximize` flag (XGBoost's convention).
+
     After fit: `ensemble` (stacked tree arenas), `history` (per-round eval
-    records), `best_iteration`/`best_score` (when early stopping ran),
-    `n_rounds_trained`. `update(dtrain, n)` continues training by re-entering
-    the scan with the existing margins.
+    records keyed `{set}_{metric}`), `best_iteration`/`best_score` (when
+    early stopping ran), `n_rounds_trained`. `update(dtrain, n)` continues
+    training by re-entering the scan with the existing margins.
     """
 
     def __init__(self, cfg: BoosterConfig | None = None, **params):
@@ -246,13 +272,17 @@ class Booster:
         self.best_iteration: int | None = None
         self.best_score: float | None = None
         self.n_rounds_trained: int = 0
+        self._obj: O.Objective | None = None  # fit(obj=...) override
+        self._metrics: tuple[M.Metric, ...] | None = None
         self._margins: jax.Array | None = None  # training margins cache
         self._train_dmat: DeviceDMatrix | None = None  # cache key for _margins
 
     # --- small surface -----------------------------------------------------
     @property
     def obj(self) -> O.Objective:
-        return O.OBJECTIVES[self.cfg.objective]
+        if self._obj is not None and self._obj.name == self.cfg.objective:
+            return self._obj
+        return O.get_objective(self.cfg.objective)
 
     @property
     def margins(self) -> jax.Array | None:
@@ -272,11 +302,37 @@ class Booster:
             raise RuntimeError("Booster is not fitted yet — call fit() first")
 
     # --- training ----------------------------------------------------------
+    def _resolve_metrics(self, eval_metric, custom_metric
+                         ) -> tuple[M.Metric, ...]:
+        """eval_metric: one spec or a sequence of specs (registry names,
+        Metric objects, callables, (name, fn[, maximize]) tuples);
+        custom_metric: a single extra spec appended LAST, so with early
+        stopping it drives the stop (XGBoost's custom_metric semantics).
+        Defaults to the objective's metric."""
+        metrics = M.resolve_metrics(eval_metric)
+        if custom_metric is not None:
+            metrics = metrics + (M.get_metric(custom_metric),)
+        if not metrics:
+            metrics = (M.get_metric(self.obj.default_metric),)
+        return metrics
+
+    def _dataset_extra(self, dmat: DeviceDMatrix) -> dict:
+        """Keywords forwarded to grad/metric fns for one dataset: config
+        scalars (traced, so e.g. quantile_alpha changes don't recompile)
+        plus the dataset's query groups when present."""
+        extra = dict(O.config_kwargs(self.cfg))
+        if dmat.group_ids is not None:
+            extra["group_ids"] = dmat.group_ids
+        return extra
+
     def fit(
         self,
         dtrain: DeviceDMatrix,
         evals: Sequence = (),
         *,
+        obj=None,
+        eval_metric=None,
+        custom_metric=None,
         early_stopping_rounds: int | None = None,
         verbose_every: int = 0,
         callback: Callable[[int, dict], None] | None = None,
@@ -287,8 +343,17 @@ class Booster:
 
         evals: sequence of (DeviceDMatrix, name) pairs (or bare matrices)
           built with `ref=dtrain`; metrics are computed per round inside the
-          compiled scan. With `early_stopping_rounds`, the LAST eval set
-          drives stopping and the ensemble is truncated to best_iteration+1.
+          compiled scan. With `early_stopping_rounds`, the LAST metric of
+          the LAST eval set drives stopping (direction = that metric's
+          `maximize`) and the ensemble is truncated to best_iteration+1.
+        obj: override cfg.objective — a registry name, an Objective (e.g.
+          from objectives.register_objective), or a bare callable
+          `(margins, y) -> (g, h)` traced into the compiled scan.
+        eval_metric: metric spec or list of specs (names like "rmse"/"auc"/
+          "ndcg@10", Metric objects, callables) evaluated per round on every
+          eval set; defaults to the objective's default metric.
+        custom_metric: one extra metric spec (callable or (name, fn[,
+          maximize]) tuple), appended after eval_metric.
         mesh: optional jax Mesh — rows are sharded over `data_axes` and
           histograms combined with psum (paper Algorithm 1); same Booster out.
         """
@@ -299,10 +364,17 @@ class Booster:
         self.n_rounds_trained = 0
         self._margins = None
         self._train_dmat = None
+        if obj is not None:
+            resolved = O.as_objective(obj)
+            self._obj = resolved
+            self.cfg = dataclasses.replace(self.cfg, objective=resolved.name)
         if dtrain.label is None:
             raise ValueError("dtrain must be constructed with label= to fit")
+        self._metrics = self._resolve_metrics(eval_metric, custom_metric)
         self.cuts = dtrain.cuts
-        self.base_score = float(self.obj.init_base_score(dtrain.label))
+        self.base_score = float(self.obj.init_base_score(
+            dtrain.label, **O.config_kwargs(self.cfg)
+        ))
         self._run_rounds(dtrain, self.cfg.n_rounds, evals,
                          early_stopping_rounds, verbose_every, callback,
                          mesh, data_axes)
@@ -314,6 +386,8 @@ class Booster:
         n_rounds: int,
         evals: Sequence = (),
         *,
+        eval_metric=None,
+        custom_metric=None,
         early_stopping_rounds: int | None = None,
         verbose_every: int = 0,
         callback: Callable[[int, dict], None] | None = None,
@@ -325,7 +399,8 @@ class Booster:
         Re-enters the scan with the existing margins: if `dtrain` is the same
         DeviceDMatrix the booster last trained on, the cached margins are
         reused and the continuation is bit-identical to a single longer fit;
-        otherwise margins are rebuilt by on-device binned prediction.
+        otherwise margins are rebuilt by on-device binned prediction. The
+        objective is fixed at fit time; metrics may be changed per update.
         """
         self._require_fitted()
         if dtrain.label is None:
@@ -335,6 +410,9 @@ class Booster:
                 "dtrain was quantised with different cuts than this booster; "
                 "build it with ref= the original training matrix"
             )
+        if eval_metric is not None or custom_metric is not None \
+                or self._metrics is None:
+            self._metrics = self._resolve_metrics(eval_metric, custom_metric)
         self._run_rounds(dtrain, n_rounds, evals, early_stopping_rounds,
                          verbose_every, callback, mesh, data_axes)
         return self
@@ -392,14 +470,19 @@ class Booster:
         evals = self._normalise_evals(evals, dtrain)
         record_every = verbose_every or (1 if (callback or evals) else 0)
         track_metric = record_every > 0
+        if self._metrics is None:  # direct _run_rounds callers / legacy paths
+            self._metrics = self._resolve_metrics(None, None)
+        metrics = self._metrics if track_metric else ()
 
         y = dtrain.label
         if self._train_dmat is dtrain and self._margins is not None:
             margins = self._margins  # exact continuation on the same matrix
         else:
             margins = self._initial_margins(dtrain)
+        extra = self._dataset_extra(dtrain)
         eval_pbs = tuple(d.packed_bins() for d, _ in evals)
         eval_ys = tuple(d.label for d, _ in evals)
+        eval_extras = tuple(self._dataset_extra(d) for d, _ in evals)
         eval_margins = tuple(self._initial_margins(d) for d, _ in evals)
 
         if mesh is not None:
@@ -411,13 +494,9 @@ class Booster:
 
             run_chunk = D.make_chunk_runner(
                 cfg, obj, dtrain, mesh, data_axes, eval_pbs, eval_ys,
-                track_metric,
+                eval_extras, metrics, track_metric,
             )
         else:
-            extra = (
-                {"group_ids": dtrain.group_ids}
-                if dtrain.group_ids is not None else {}
-            )
             data = (
                 dtrain.packed_bins() if cfg.compress_matrix
                 else dtrain.matrix.unpack()
@@ -437,11 +516,11 @@ class Booster:
                 fn = fns.get(length)
                 if fn is None:
                     fn = fns[length] = _make_train_fn(
-                        cfg, obj, self.cuts, hist_builder, track_metric,
-                        n_rounds=length,
+                        cfg, obj, self.cuts, hist_builder, metrics,
+                        track_metric, n_rounds=length,
                     )
                 return fn(data, margins, y, extra, eval_pbs, eval_margins,
-                          eval_ys)
+                          eval_ys, eval_extras)
 
         # Early stopping runs the scan in compiled chunks of e rounds with
         # one host read per chunk (never per round); otherwise one chunk.
@@ -454,18 +533,19 @@ class Booster:
         stopped = False
         while trained < n_rounds and not stopped:
             length = min(chunk, n_rounds - trained)
-            margins, all_trees, metrics, eval_margins, ev_metrics = run_chunk(
-                length, margins, eval_margins
-            )
+            margins, all_trees, tr_metrics, eval_margins, ev_metrics = \
+                run_chunk(length, margins, eval_margins)
             trees_chunks.append(all_trees)
-            metric_chunks.append(metrics)
+            metric_chunks.append(tr_metrics)
             ev_metric_chunks.append(ev_metrics)
             trained += length
             if es_on:
-                # The LAST eval set drives stopping (XGBoost convention).
-                es_history.extend(np.asarray(ev_metrics[-1]).tolist())
+                # The LAST metric of the LAST eval set drives stopping, in
+                # the direction that METRIC declares (XGBoost convention;
+                # the objective itself carries no direction).
+                es_history.extend(np.asarray(ev_metrics[-1][-1]).tolist())
                 arr = np.asarray(es_history)
-                best_round = int(np.argmax(arr) if obj.maximize
+                best_round = int(np.argmax(arr) if metrics[-1].maximize
                                  else np.argmin(arr))
                 if (len(arr) - 1 - best_round) >= early_stopping_rounds:
                     stopped = True
@@ -513,24 +593,27 @@ class Booster:
             self._margins = None
             self._train_dmat = None
 
-        # History: honest per-round records (metrics computed in-scan).
+        # History: honest per-round records (ALL metrics computed in-scan).
         if record_every > 0:
-            metrics_host = (
-                np.concatenate([np.asarray(m) for m in metric_chunks])
-                if track_metric else None
-            )
+            tr_host = [
+                np.concatenate([np.asarray(c[j]) for c in metric_chunks])
+                for j in range(len(metrics))
+            ]
             ev_host = [
-                np.concatenate([np.asarray(c[i]) for c in ev_metric_chunks])
+                [np.concatenate([np.asarray(c[i][j])
+                                 for c in ev_metric_chunks])
+                 for j in range(len(metrics))]
                 for i in range(len(evals))
             ]
             for r in range(trained):
                 if r % record_every and r != trained - 1:
                     continue
                 rec: dict[str, Any] = {"round": rounds_before + r}
-                if metrics_host is not None:
-                    rec[f"train_{obj.metric_name}"] = float(metrics_host[r])
+                for j, m in enumerate(metrics):
+                    rec[f"train_{m.name}"] = float(tr_host[j][r])
                 for (d, name), vals in zip(evals, ev_host):
-                    rec[f"{name}_{obj.metric_name}"] = float(vals[r])
+                    for j, m in enumerate(metrics):
+                        rec[f"{name}_{m.name}"] = float(vals[j][r])
                 self.history.append(rec)
                 if callback:
                     callback(rounds_before + r, rec)
@@ -561,15 +644,25 @@ class Booster:
         m = self.predict_margins(data)
         return m if output_margin else self.obj.transform(m)
 
-    def eval(self, dmat: DeviceDMatrix, name: str = "eval") -> dict:
-        """One-shot metric on a labelled DeviceDMatrix."""
+    def eval(self, dmat: DeviceDMatrix, name: str = "eval",
+             metrics=None) -> dict:
+        """One-shot metrics on a labelled DeviceDMatrix.
+
+        metrics: optional spec or list of specs (as in fit's eval_metric);
+        defaults to the objective's default metric. Returns
+        {f"{name}_{metric}": value} for each metric.
+        """
         self._require_fitted()
         if dmat.label is None:
             raise ValueError("eval requires a labelled DeviceDMatrix")
-        m = self.predict_margins(dmat)
+        resolved = M.resolve_metrics(metrics) or (
+            M.get_metric(self.obj.default_metric),
+        )
+        margins = self.predict_margins(dmat)
+        extra = self._dataset_extra(dmat)
         return {
-            f"{name}_{self.obj.metric_name}":
-                float(self.obj.metric(m, dmat.label))
+            f"{name}_{m.name}": float(m.fn(margins, dmat.label, **extra))
+            for m in resolved
         }
 
     # --- persistence -------------------------------------------------------
@@ -627,5 +720,5 @@ def predict_margins(ens: PR.Ensemble, x, max_depth: int) -> jax.Array:
 def predict(ens: PR.Ensemble, x, max_depth: int, objective: str) -> jax.Array:
     """Deprecated shim: prefer Booster.predict (no per-call max_depth /
     objective — the model describes itself)."""
-    obj = O.OBJECTIVES[objective]
+    obj = O.get_objective(objective)
     return obj.transform(predict_margins(ens, x, max_depth))

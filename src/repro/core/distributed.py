@@ -50,13 +50,16 @@ def make_distributed_round(
     margins/y row-sharded, cuts replicated; replicated tree output. Cached
     by static config so repeated fits reuse the compiled program.
     """
-    key = (cfg, obj.name, mesh, tuple(data_axes), n_rows_per_shard, bits)
+    # Objective is a hashable NamedTuple; registry lookups return singletons,
+    # so registered (incl. custom-registered) objectives key stably.
+    key = (cfg, obj, mesh, tuple(data_axes), n_rows_per_shard, bits)
     cached = _ROUND_FN_CACHE.get(key)
     if cached is not None:
         return cached
     k = obj.n_outputs(cfg.n_classes)
     mb = cfg.max_bins - 1
     axis0, extra = data_axes[0], tuple(data_axes[1:])
+    cfg_kw = O.config_kwargs(cfg)  # static under shard_map (cfg keys cache)
 
     def round_body(data, margins, y, cuts):
         if cfg.compress_matrix:
@@ -65,7 +68,7 @@ def make_distributed_round(
             rep = C.PackedBins(packed=data, bits=bits, n_rows=n_rows_per_shard)
         else:
             rep = data
-        gh_all = obj.grad(margins, y)
+        gh_all = obj.grad(margins, y, **cfg_kw)
         trees = []
         new_margins = margins
         for c in range(k):
@@ -123,6 +126,8 @@ def make_chunk_runner(
     data_axes: Sequence[str],
     eval_pbs: tuple = (),
     eval_ys: tuple = (),
+    eval_extras: tuple = (),
+    metrics: tuple = (),
     track_metric: bool = False,
 ):
     """The multi-device strategy behind Booster.fit(dtrain, mesh=...).
@@ -133,12 +138,15 @@ def make_chunk_runner(
 
         run(length, margins, eval_margins) ->
             (margins, stacked_trees (length, k, arena...),
-             train_metrics (length,), eval_margins, eval_metrics tuple)
+             train_metrics tuple-per-metric of (length,), eval_margins,
+             eval_metrics tuple-per-set of tuple-per-metric of (length,))
 
     The per-round loop dispatches one shard_map'd program per round (one
     psum per tree level, Algorithm 1); eval-set margins are maintained
-    incrementally on replicated eval data, and metric values stay on device
-    until the Booster reads them at chunk granularity.
+    incrementally on replicated eval data, and every requested metric is
+    evaluated per round with values staying on device until the Booster
+    reads them at chunk granularity — the same multi-metric stack as the
+    single-device scan.
     """
     n = dmat.n_rows
     n_shards = 1
@@ -190,9 +198,11 @@ def make_chunk_runner(
                 B._apply_stacked_trees(_cfg, stacked, pb, m)
         )
 
+    train_kw = O.config_kwargs(cfg)  # group_ids is single-device only
+
     def run(length, margins, eval_margins):
         margins = jax.device_put(margins, row_sharding)
-        trees, tr_metrics, ev_rows = [], [], []
+        trees, tr_rows, ev_rows = [], [], []
         for _ in range(length):
             stacked, margins = round_fn(data, margins, y, cuts)
             trees.append(stacked)
@@ -201,21 +211,25 @@ def make_chunk_runner(
                 for pb, em in zip(eval_pbs, eval_margins)
             )
             if track_metric:
-                tr_metrics.append(obj.metric(margins, y).astype(jnp.float32))
+                tr_rows.append(tuple(
+                    m.fn(margins, y, **train_kw).astype(jnp.float32)
+                    for m in metrics
+                ))
             ev_rows.append(tuple(
-                obj.metric(em, ey).astype(jnp.float32)
-                for em, ey in zip(eval_margins, eval_ys)
+                tuple(m.fn(em, ey, **ex).astype(jnp.float32) for m in metrics)
+                for em, ey, ex in zip(eval_margins, eval_ys, eval_extras)
             ))
         all_trees = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
-        metrics = (
-            jnp.stack(tr_metrics) if track_metric
-            else jnp.zeros(length, jnp.float32)
-        )
+        tr_metrics = tuple(
+            jnp.stack([row[j] for row in tr_rows])
+            for j in range(len(metrics))
+        ) if track_metric else ()
         ev_metrics = tuple(
-            jnp.stack([row[i] for row in ev_rows])
+            tuple(jnp.stack([row[i][j] for row in ev_rows])
+                  for j in range(len(metrics)))
             for i in range(len(eval_pbs))
         )
-        return margins, all_trees, metrics, eval_margins, ev_metrics
+        return margins, all_trees, tr_metrics, eval_margins, ev_metrics
 
     return run
 

@@ -4,6 +4,7 @@ import numpy as np
 import pytest
 
 from repro.core import BoosterConfig, train, predict_proba, predict_margins
+from repro.core import get_metric
 from repro.core import objectives as O
 
 
@@ -99,8 +100,12 @@ def test_rank_pairwise(rng):
                         max_bins=32)
     st = train(x, rel, cfg, group_ids=gids)
     m = predict_margins(st.ensemble, jnp.asarray(x), 3)
-    acc = float(O.pairwise_rank.metric(m, jnp.asarray(rel)))
+    pairwise_acc = get_metric("pairwise_acc")
+    acc = float(pairwise_acc.fn(m, jnp.asarray(rel)))
     assert acc > 0.75, acc
+    ndcg = get_metric("ndcg@5")
+    nd = float(ndcg.fn(m, jnp.asarray(rel), group_ids=jnp.asarray(gids)))
+    assert nd > 0.8, nd
 
 
 def test_eval_set(binary_data):

@@ -1,0 +1,198 @@
+"""The metric registry: values vs plain-numpy oracles, directions, the
+parameterised ndcg@k family, and plugin resolution (DESIGN.md §10)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import metrics as M
+
+
+def _val(name, margins, y, **extra):
+    m = M.get_metric(name)
+    return float(m.fn(jnp.asarray(margins), jnp.asarray(y), **extra))
+
+
+@pytest.fixture()
+def binary(rng):
+    n = 200
+    margins = rng.normal(size=(n, 1)).astype(np.float32)
+    y = (rng.random(n) < 0.5).astype(np.float32)
+    return margins, y
+
+
+def test_regression_metrics_match_numpy(rng):
+    n = 150
+    m = rng.normal(size=(n, 1)).astype(np.float32)
+    y = rng.normal(size=n).astype(np.float32)
+    assert _val("rmse", m, y) == pytest.approx(
+        np.sqrt(np.mean((m[:, 0] - y) ** 2)), rel=1e-5)
+    assert _val("mae", m, y) == pytest.approx(
+        np.mean(np.abs(m[:, 0] - y)), rel=1e-5)
+    r = m[:, 0] - y
+    assert _val("mphe", m, y) == pytest.approx(
+        np.mean(np.sqrt(1 + r * r) - 1), rel=1e-5)
+    a = 0.8
+    pin = np.mean(np.maximum(a * (y - m[:, 0]), (a - 1) * (y - m[:, 0])))
+    assert _val("quantile", m, y, quantile_alpha=a) == pytest.approx(
+        pin, rel=1e-5)
+
+
+def test_binary_metrics_match_numpy(binary):
+    m, y = binary
+    p = 1 / (1 + np.exp(-m[:, 0]))
+    ll = -np.mean(y * np.log(p) + (1 - y) * np.log(1 - p))
+    assert _val("logloss", m, y) == pytest.approx(ll, rel=1e-4)
+    acc = np.mean((m[:, 0] > 0) == (y > 0.5))
+    assert _val("accuracy", m, y) == pytest.approx(acc, rel=1e-6)
+    assert _val("error", m, y) == pytest.approx(1 - acc, abs=1e-6)
+
+
+def test_auc_matches_pair_counting_with_ties(rng):
+    """AUC oracle: fraction of (pos, neg) pairs ranked correctly, ties
+    counting half — the rank-sum implementation must agree exactly."""
+    n = 120
+    # Quantised scores force plenty of ties (tree margins tie the same way).
+    s = np.round(rng.normal(size=n) * 2) / 2
+    y = (rng.random(n) < 0.4).astype(np.float32)
+    pos, neg = s[y > 0.5], s[y <= 0.5]
+    wins = (pos[:, None] > neg[None, :]).sum()
+    ties = (pos[:, None] == neg[None, :]).sum()
+    want = (wins + 0.5 * ties) / (len(pos) * len(neg))
+    got = _val("auc", s[:, None].astype(np.float32), y)
+    assert got == pytest.approx(want, rel=1e-5)
+    assert M.METRICS["auc"].maximize is True
+
+
+def test_multiclass_metrics_match_numpy(rng):
+    n, k = 90, 4
+    m = rng.normal(size=(n, k)).astype(np.float32)
+    y = rng.integers(0, k, size=n).astype(np.float32)
+    pred = np.argmax(m, axis=1)
+    assert _val("merror", m, y) == pytest.approx(
+        np.mean(pred != y.astype(int)), abs=1e-6)
+    assert _val("accuracy", m, y) == pytest.approx(
+        np.mean(pred == y.astype(int)), abs=1e-6)
+    z = m - m.max(axis=1, keepdims=True)
+    logp = z - np.log(np.exp(z).sum(axis=1, keepdims=True))
+    want = -np.mean(logp[np.arange(n), y.astype(int)])
+    assert _val("mlogloss", m, y) == pytest.approx(want, rel=1e-4)
+
+
+def _ndcg_numpy(s, y, gids, k):
+    """Literal per-group reference: sort by score, DCG@k over 2^rel-1
+    gains, normalised by the ideal ordering."""
+    vals = []
+    for g in np.unique(gids):
+        sel = gids == g
+        sg, yg = s[sel], y[sel]
+        order = np.lexsort((np.arange(len(sg)), -sg))  # stable by -score
+        gains = 2.0 ** yg - 1.0
+        disc = 1.0 / np.log2(np.arange(len(sg)) + 2.0)
+        dcg = np.sum((gains[order] * disc)[:k])
+        ideal = np.lexsort((np.arange(len(yg)), -yg))
+        idcg = np.sum((gains[ideal] * disc)[:k])
+        vals.append(dcg / idcg if idcg > 0 else 1.0)
+    return float(np.mean(vals))
+
+
+@pytest.mark.parametrize("k", [1, 3, 8])
+def test_ndcg_matches_reference(rng, k):
+    n_groups, per = 12, 7
+    n = n_groups * per
+    s = rng.normal(size=n).astype(np.float32)
+    y = rng.integers(0, 4, size=n).astype(np.float32)
+    gids = np.repeat(np.arange(n_groups), per).astype(np.int32)
+    got = _val(f"ndcg@{k}", s[:, None], y, group_ids=jnp.asarray(gids))
+    want = _ndcg_numpy(s, y, gids, k)
+    assert got == pytest.approx(want, rel=1e-5)
+
+
+def test_ndcg_zero_idcg_group_scores_one(rng):
+    """A group with all-zero relevance has no ideal ordering; XGBoost's
+    convention (NDCG = 1) must hold instead of a 0/0 blowup."""
+    s = rng.normal(size=8).astype(np.float32)
+    y = np.zeros(8, np.float32)
+    y[4:] = np.array([3, 1, 0, 2], np.float32)  # second group informative
+    gids = np.repeat(np.arange(2), 4).astype(np.int32)
+    got = _val("ndcg@4", s[:, None], y, group_ids=jnp.asarray(gids))
+    want = _ndcg_numpy(s, y, gids, 4)  # reference also scores group0 as 1
+    assert got == pytest.approx(want, rel=1e-5)
+
+
+def test_ndcg_without_groups_is_single_query(rng):
+    n = 20
+    s = rng.normal(size=n).astype(np.float32)
+    y = rng.integers(0, 3, size=n).astype(np.float32)
+    got = _val("ndcg@5", s[:, None], y)
+    want = _ndcg_numpy(s, y, np.zeros(n, np.int32), 5)
+    assert got == pytest.approx(want, rel=1e-5)
+
+
+def test_get_metric_parametric_caching():
+    a = M.get_metric("ndcg@7")
+    b = M.get_metric("ndcg@7")
+    assert a is b and a.name == "ndcg@7" and a.maximize
+    with pytest.raises(ValueError, match="ndcg"):
+        M.get_metric("ndcg@0")
+    with pytest.raises(ValueError, match="unknown eval metric"):
+        M.get_metric("not_a_metric")
+
+
+def test_metric_directions():
+    """Satellite: direction lives on the METRIC. A new objective cannot
+    silently early-stop the wrong way anymore."""
+    for name in ("rmse", "mae", "logloss", "error", "merror", "mlogloss",
+                 "quantile", "mphe", "poisson-nloglik"):
+        assert M.METRICS[name].maximize is False, name
+    for name in ("accuracy", "auc", "pairwise_acc"):
+        assert M.METRICS[name].maximize is True, name
+    assert M.get_metric("ndcg@3").maximize is True
+
+
+def test_callable_and_tuple_specs_resolve_and_cache():
+    def half_mae(margins, y):
+        return 0.5 * jnp.mean(jnp.abs(margins[:, 0] - y))
+
+    a = M.get_metric(half_mae)
+    b = M.get_metric(half_mae)
+    assert a is b and a.name == "half_mae" and a.maximize is False
+    c = M.get_metric(("hm", half_mae, True))
+    assert c.name == "hm" and c.maximize is True
+    m = jnp.asarray([[1.0], [3.0]])
+    y = jnp.asarray([0.0, 0.0])
+    assert float(a.fn(m, y, group_ids=None)) == pytest.approx(1.0)
+
+
+def test_register_metric_rejects_duplicates():
+    with pytest.raises(ValueError, match="already registered"):
+        M.register_metric("rmse", lambda m, y: 0.0)
+
+
+def test_resolve_metrics_spec_forms():
+    """A bare (name, fn[, maximize]) tuple is ONE metric spec, not a
+    sequence of two; sequences mix all spec forms."""
+    def fn(margins, y):
+        return jnp.mean(margins[:, 0] - y)
+
+    assert M.resolve_metrics(None) == ()
+    (single,) = M.resolve_metrics("rmse")
+    assert single is M.METRICS["rmse"]
+    (bare,) = M.resolve_metrics(("pd", fn))
+    assert bare.name == "pd" and not bare.maximize
+    (bare_max,) = M.resolve_metrics(("pd", fn, True))
+    assert bare_max.maximize
+    pair = M.resolve_metrics(["rmse", ("pd", fn), fn])
+    assert [m.name for m in pair] == ["rmse", "pd", "fn"]
+
+
+def test_user_constructed_metric_gets_extra_adaptation():
+    """A hand-built Metric whose fn takes only (margins, y) must survive
+    the scan's **extra keywords, and resolve to a stable object so the
+    compiled-fn cache keys consistently."""
+    raw = M.Metric("mad", lambda m, y: jnp.mean(jnp.abs(m[:, 0] - y)))
+    a = M.get_metric(raw)
+    b = M.get_metric(raw)
+    assert a is b
+    val = a.fn(jnp.asarray([[1.0], [3.0]]), jnp.asarray([0.0, 0.0]),
+               quantile_alpha=0.5, group_ids=None)
+    assert float(val) == pytest.approx(2.0)

@@ -1,8 +1,17 @@
-"""§2.5 gradient evaluation: g/h must equal d/dm and d2/dm2 of the loss."""
+"""§2.5 gradient evaluation: g/h must equal d/dm and d2/dm2 of the loss.
+
+Plus the beyond-paper objectives (quantile / pseudo-Huber / Poisson) and
+the early-stopping direction regression (satellite of ISSUE 3): direction
+lives on the METRIC, so minimizing and maximizing metrics must both stop
+at their own optimum.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
+from repro.core import Booster, DeviceDMatrix
+from repro.core import metrics as M
 from repro.core import objectives as O
 
 
@@ -71,6 +80,157 @@ def test_hessians_positive(rng):
     n = 64
     m = rng.normal(size=(n, 1)).astype(np.float32)
     y = (rng.random(n) < 0.5).astype(np.float32)
-    for obj in (O.logistic, O.squared_error):
+    for obj in (O.logistic, O.squared_error, O.pseudohuber, O.poisson,
+                O.quantile):
         gh = np.asarray(obj.grad(jnp.asarray(m), jnp.asarray(y)))
-        assert np.all(gh[..., 1] > 0)
+        assert np.all(gh[..., 1] > 0), obj.name
+
+
+def test_quantile_gradients(rng):
+    """Pinball-loss subgradient away from the kink (|m - y| > eps)."""
+    n, alpha = 60, 0.8
+    m = rng.normal(size=(n, 1)).astype(np.float32)
+    y = rng.normal(size=n).astype(np.float32)
+    y = np.where(np.abs(m[:, 0] - y) < 0.05, y + 0.2, y)  # step off the kink
+
+    def loss(margins, yy):
+        err = yy - margins[:, 0]
+        return jnp.sum(jnp.maximum(alpha * err, (alpha - 1.0) * err))
+
+    gh = np.asarray(O.quantile.grad(jnp.asarray(m), jnp.asarray(y),
+                                    quantile_alpha=alpha))
+    g_auto = jax.grad(lambda mm: loss(mm, jnp.asarray(y)))(jnp.asarray(m))
+    np.testing.assert_allclose(gh[:, 0, 0], np.asarray(g_auto)[:, 0],
+                               atol=1e-5)
+    np.testing.assert_array_equal(gh[:, 0, 1], np.ones(n, np.float32))
+
+
+def test_pseudohuber_gradients(rng):
+    n = 50
+    m = rng.normal(size=(n, 1)).astype(np.float32) * 2
+    y = rng.normal(size=n).astype(np.float32)
+
+    def loss(margins, yy):
+        r = margins[:, 0] - yy
+        return jnp.sum(jnp.sqrt(1.0 + r * r) - 1.0)
+
+    _check_against_autodiff(O.pseudohuber, loss, m, y)
+    # hessian = exact second derivative (1 + r^2)^(-3/2)
+    gh = np.asarray(O.pseudohuber.grad(jnp.asarray(m), jnp.asarray(y)))
+    r = m[:, 0] - y
+    np.testing.assert_allclose(gh[:, 0, 1], (1 + r * r) ** -1.5, atol=1e-5)
+
+
+def test_poisson_gradients(rng):
+    n = 50
+    m = (rng.normal(size=(n, 1)) * 0.5).astype(np.float32)
+    y = rng.poisson(2.0, size=n).astype(np.float32)
+
+    def loss(margins, yy):
+        return jnp.sum(jnp.exp(margins[:, 0]) - yy * margins[:, 0])
+
+    _check_against_autodiff(O.poisson, loss, m, y)
+    # hessian is exp(m) inflated by exp(0.7) — XGBoost's max_delta_step
+    # guard for sparse counts, deliberately NOT the bare second derivative.
+    gh = np.asarray(O.poisson.grad(jnp.asarray(m), jnp.asarray(y)))
+    np.testing.assert_allclose(gh[:, 0, 1], np.exp(m[:, 0] + 0.7), rtol=1e-5)
+
+
+# --- end-to-end: beyond-paper objectives beat constant baselines -----------
+
+@pytest.fixture(scope="module")
+def feature_matrix():
+    rng = np.random.default_rng(31)
+    n, f = 1200, 5
+    x = rng.normal(size=(n, f)).astype(np.float32)
+    return rng, x
+
+
+def test_quantile_fit_beats_constant_baseline(feature_matrix):
+    """Acceptance: reg:quantile at alpha=0.9 must beat the best CONSTANT
+    prediction (the empirical 0.9-quantile) on pinball loss, and cover
+    roughly alpha of the data."""
+    rng, x = feature_matrix
+    n = x.shape[0]
+    w = rng.normal(size=x.shape[1])
+    y = (x @ w + (0.5 + np.abs(x[:, 0])) * rng.normal(size=n)).astype(
+        np.float32)
+    alpha = 0.9
+    dtrain = DeviceDMatrix(x, label=y, max_bins=64)
+    bst = Booster(n_rounds=40, max_depth=4, objective="reg:quantile",
+                  quantile_alpha=alpha, max_bins=64).fit(dtrain)
+    pred = np.asarray(bst.predict(x))
+
+    def pinball(p):
+        err = y - p
+        return float(np.mean(np.maximum(alpha * err, (alpha - 1) * err)))
+
+    model_loss = pinball(pred)
+    const_loss = pinball(np.quantile(y, alpha))  # best constant predictor
+    assert model_loss < 0.7 * const_loss, (model_loss, const_loss)
+    coverage = float(np.mean(y <= pred))
+    assert 0.82 < coverage < 0.98, coverage
+
+
+def test_poisson_fit_beats_constant_baseline(feature_matrix):
+    """Acceptance: count:poisson must beat the best constant rate (the
+    label mean) on held-in negative log-likelihood."""
+    rng, x = feature_matrix
+    n = x.shape[0]
+    lam = np.exp(0.6 * x[:, 0] - 0.4 * x[:, 1])
+    y = rng.poisson(lam).astype(np.float32)
+    dtrain = DeviceDMatrix(x, label=y, max_bins=64)
+    bst = Booster(n_rounds=30, max_depth=4, objective="count:poisson",
+                  max_bins=64).fit(dtrain)
+    nll = M.METRICS["poisson-nloglik"]
+    model_nll = float(nll.fn(bst.predict_margins(dtrain), jnp.asarray(y)))
+    const_margin = jnp.full((n, 1), np.log(y.mean()), jnp.float32)
+    const_nll = float(nll.fn(const_margin, jnp.asarray(y)))
+    assert model_nll < const_nll - 0.1, (model_nll, const_nll)
+    # predictions are rates (exp link): non-negative by construction
+    assert float(np.min(np.asarray(bst.predict(x)))) >= 0.0
+
+
+# --- early stopping direction lives on the metric (satellite) --------------
+
+@pytest.fixture(scope="module")
+def es_setup():
+    """Training data with real signal, eval labels pure noise: minimizing
+    metrics bottom out early, maximizing metrics peak early — in both
+    cases best_iteration must sit at that metric's own optimum."""
+    rng = np.random.default_rng(41)
+    n, f = 900, 6
+    x = rng.normal(size=(n, f)).astype(np.float32)
+    y = ((x @ rng.normal(size=f)) > 0).astype(np.float32)
+    dtrain = DeviceDMatrix(x[:700], label=y[:700], max_bins=32)
+    noise = (rng.random(200) < 0.5).astype(np.float32)
+    dval = DeviceDMatrix(x[700:], label=noise, ref=dtrain)
+    return dtrain, dval
+
+
+@pytest.mark.parametrize("metric,pick", [
+    ("logloss", np.argmin),
+    ("error", np.argmin),
+    ("auc", np.argmax),
+    ("accuracy", np.argmax),
+])
+def test_early_stopping_direction_follows_metric(es_setup, metric, pick):
+    dtrain, dval = es_setup
+    bst = Booster(n_rounds=40, max_depth=3, learning_rate=0.6,
+                  objective="binary:logistic", max_bins=32)
+    bst.fit(dtrain, evals=[(dval, "valid")], eval_metric=metric,
+            early_stopping_rounds=4)
+    series = [h[f"valid_{metric}"] for h in bst.history]
+    assert bst.best_iteration == int(pick(series)), (metric, series)
+    assert bst.best_score == pytest.approx(series[bst.best_iteration])
+    assert bst.n_rounds_trained == bst.best_iteration + 1  # truncated
+
+
+def test_objective_carries_no_direction():
+    """Satellite: the maximize footgun is gone from Objective — direction
+    is resolved through the metric registry only."""
+    assert not hasattr(O.squared_error, "maximize")
+    assert not hasattr(O.logistic, "metric")
+    assert not hasattr(O.logistic, "metric_name")
+    for obj in O.OBJECTIVES.values():
+        M.get_metric(obj.default_metric)  # every default resolves

@@ -1,0 +1,229 @@
+"""The objective/metric plugin path (DESIGN.md §10).
+
+Covers the ISSUE 3 acceptance surface: a hand-written objective callable
+passed via fit(obj=...) produces a bit-identical ensemble to the built-in,
+a custom objective plus several metrics all run inside ONE compiled fit
+(verified by Python-side trace counters — the functions execute once at
+trace time, not once per round), multi-metric fits emit {set}_{metric}
+history keys for every requested metric, and checkpointing resolves
+objectives by registry name with clear errors for anonymous callables.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Booster,
+    DeviceDMatrix,
+    register_objective,
+)
+from repro.core import booster as B
+from repro.core import objectives as O
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(17)
+    n, f = 900, 6
+    x = rng.normal(size=(n, f)).astype(np.float32)
+    w = rng.normal(size=f)
+    y = ((x @ w + 0.3 * rng.normal(size=n)) > 0).astype(np.float32)
+    xt, yt, xv, yv = x[:700], y[:700], x[700:], y[700:]
+    dtrain = DeviceDMatrix(xt, label=yt, max_bins=32)
+    dval = DeviceDMatrix(xv, label=yv, ref=dtrain)
+    return dtrain, dval
+
+
+def _hand_logistic(margins, y):
+    p = jax.nn.sigmoid(margins[:, 0])
+    return p - y, p * (1.0 - p)
+
+
+def _ensembles_identical(a, b):
+    assert bool(jnp.all(a.feature == b.feature))
+    assert bool(jnp.all(a.split_bin == b.split_bin))
+    assert bool(jnp.all(a.is_leaf == b.is_leaf))
+    np.testing.assert_array_equal(np.asarray(a.leaf_value),
+                                  np.asarray(b.leaf_value))
+
+
+def test_custom_objective_matches_builtin_bit_identical(data):
+    """Acceptance: fit(obj=callable) with the logistic gradients must equal
+    the built-in binary:logistic ensemble bit for bit."""
+    dtrain, _ = data
+    kw = dict(n_rounds=6, max_depth=3, max_bins=32)
+    b_custom = Booster(**kw).fit(dtrain, obj=_hand_logistic)
+    b_builtin = Booster(**kw, objective="binary:logistic").fit(dtrain)
+    _ensembles_identical(b_custom.ensemble, b_builtin.ensemble)
+    np.testing.assert_array_equal(np.asarray(b_custom.margins),
+                                  np.asarray(b_builtin.margins))
+
+
+def test_custom_obj_and_metrics_trace_into_one_compiled_fit(data):
+    """Acceptance: a custom objective and two simultaneous eval metrics run
+    INSIDE one compiled fit. The Python bodies execute only at trace time —
+    a per-round host dispatch would execute them n_rounds times."""
+    dtrain, dval = data
+    calls = {"grad": 0, "metric": 0}
+
+    def my_obj(margins, y):
+        calls["grad"] += 1
+        return _hand_logistic(margins, y)
+
+    def my_metric(margins, y):
+        calls["metric"] += 1
+        return jnp.mean(jnp.abs(jax.nn.sigmoid(margins[:, 0]) - y))
+
+    n_rounds = 10
+    bst = Booster(n_rounds=n_rounds, max_depth=3, max_bins=32)
+    bst.fit(dtrain, evals=[(dval, "valid")], obj=my_obj,
+            eval_metric=["logloss"], custom_metric=("pdist", my_metric))
+    # One trace of the scan body: grad runs once, the custom metric once for
+    # the train stack + once for the eval stack. Never once per round.
+    assert 1 <= calls["grad"] <= 2, calls
+    assert 1 <= calls["metric"] <= 4, calls
+    assert calls["grad"] < n_rounds and calls["metric"] < n_rounds
+
+    # Both requested metrics, per round, for train and eval set.
+    assert [h["round"] for h in bst.history] == list(range(n_rounds))
+    for key in ("train_logloss", "train_pdist", "valid_logloss",
+                "valid_pdist"):
+        assert all(key in h for h in bst.history), key
+
+    # Refit with the SAME callables hits the compiled-fn cache: the wrapped
+    # objective/metric resolve to identical registry objects, so no retrace.
+    before = dict(calls)
+    Booster(n_rounds=n_rounds, max_depth=3, max_bins=32).fit(
+        dtrain, evals=[(dval, "valid")], obj=my_obj,
+        eval_metric=["logloss"], custom_metric=("pdist", my_metric))
+    assert calls == before, (before, calls)
+
+
+def test_bare_tuple_and_metric_instance_specs_in_fit(data):
+    """eval_metric accepts a bare (name, fn) tuple (one metric, not two)
+    and a hand-built Metric whose fn ignores the scan's extra keywords."""
+    from repro.core import Metric
+
+    dtrain, dval = data
+
+    def spread(margins, y):
+        return jnp.max(margins[:, 0]) - jnp.min(margins[:, 0])
+
+    bst = Booster(n_rounds=3, max_depth=2, objective="binary:logistic",
+                  max_bins=32)
+    bst.fit(dtrain, evals=[(dval, "valid")], eval_metric=("spread", spread))
+    assert all("valid_spread" in h and "valid_rmse" not in h
+               for h in bst.history)
+
+    bst2 = Booster(n_rounds=3, max_depth=2, objective="binary:logistic",
+                   max_bins=32)
+    bst2.fit(dtrain, evals=[(dval, "valid")],
+             eval_metric=Metric("spread2", spread, maximize=True))
+    assert all("valid_spread2" in h for h in bst2.history)
+    post = bst2.eval(dval, "valid", metrics=("spread2", spread))
+    assert post["valid_spread2"] == pytest.approx(
+        bst2.history[-1]["valid_spread2"], rel=1e-5)
+
+
+def test_multi_metric_history_keys_for_every_metric(data):
+    dtrain, dval = data
+    bst = Booster(n_rounds=4, max_depth=3, objective="binary:logistic",
+                  max_bins=32)
+    bst.fit(dtrain, evals=[(dval, "valid")],
+            eval_metric=["logloss", "error", "auc"])
+    for h in bst.history:
+        for mname in ("logloss", "error", "auc"):
+            assert f"train_{mname}" in h and f"valid_{mname}" in h
+    # auc direction sanity: the model separates classes, so auc >> 0.5
+    assert bst.history[-1]["valid_auc"] > 0.8
+
+
+def test_in_scan_multi_metrics_match_posthoc_eval(data):
+    """Metrics computed inside the compiled scan agree with a post-hoc
+    Booster.eval of the same metric list (bin-space traversal is exact)."""
+    dtrain, dval = data
+    bst = Booster(n_rounds=5, max_depth=3, objective="binary:logistic",
+                  max_bins=32)
+    bst.fit(dtrain, evals=[(dval, "valid")], eval_metric=["logloss", "auc"])
+    post = bst.eval(dval, "valid", metrics=["logloss", "auc"])
+    assert bst.history[-1]["valid_logloss"] == pytest.approx(
+        post["valid_logloss"], rel=1e-5)
+    assert bst.history[-1]["valid_auc"] == pytest.approx(
+        post["valid_auc"], rel=1e-5)
+
+
+def test_registered_custom_objective_checkpoint_roundtrip(data, tmp_path):
+    """Satellite: a model trained with a REGISTERED custom objective saves
+    by name and loads bit-identically (objective resolved from the
+    registry at load time)."""
+    dtrain, _ = data
+    name = "test:logistic_plugin"
+    try:
+        obj = register_objective(
+            name, _hand_logistic,
+            transform=lambda m: jax.nn.sigmoid(m[:, 0]),
+            default_metric="accuracy",
+        )
+        bst = Booster(n_rounds=4, max_depth=3, max_bins=32).fit(dtrain,
+                                                                obj=obj)
+        path = str(tmp_path / "plugin.msgpack")
+        bst.save(path)
+        loaded = Booster.load(path)
+        assert loaded.cfg.objective == name
+        _ensembles_identical(bst.ensemble, loaded.ensemble)
+        x = np.asarray(dtrain.matrix.cuts[:, :1].T)  # any (1, f) probe
+        np.testing.assert_array_equal(np.asarray(bst.predict(x)),
+                                      np.asarray(loaded.predict(x)))
+    finally:
+        O.OBJECTIVES.pop(name, None)
+
+
+def test_unregistered_callable_save_raises_naming_the_fix(data, tmp_path):
+    dtrain, _ = data
+    bst = Booster(n_rounds=2, max_depth=2, max_bins=32).fit(
+        dtrain, obj=_hand_logistic)
+    with pytest.raises(ValueError, match="register_objective"):
+        bst.save(str(tmp_path / "nope.msgpack"))
+
+
+def test_load_unknown_objective_raises_naming_the_fix(data, tmp_path):
+    dtrain, _ = data
+    name = "test:ephemeral"
+    obj = register_objective(name, _hand_logistic)
+    try:
+        bst = Booster(n_rounds=2, max_depth=2, max_bins=32).fit(dtrain,
+                                                                obj=obj)
+        path = str(tmp_path / "eph.msgpack")
+        bst.save(path)
+    finally:
+        O.OBJECTIVES.pop(name, None)
+    with pytest.raises(ValueError, match="register_objective"):
+        Booster.load(path)
+
+
+def test_unknown_objective_name_lists_builtins():
+    with pytest.raises(ValueError, match="binary:logistic"):
+        Booster(objective="not:an_objective").obj
+
+
+def test_custom_objective_compile_cache_keyed_stably(data):
+    """The compiled-train-fn cache must key the SAME callable to the same
+    entry across fits (no per-fit recompile) and different callables to
+    different entries."""
+    dtrain, _ = data
+
+    def obj_a(margins, y):
+        return _hand_logistic(margins, y)
+
+    def obj_b(margins, y):
+        return margins[:, 0] - y, jnp.ones_like(y)
+
+    kw = dict(n_rounds=3, max_depth=2, max_bins=32)
+    B._TRAIN_FN_CACHE.clear()
+    Booster(**kw).fit(dtrain, obj=obj_a)
+    n1 = len(B._TRAIN_FN_CACHE)
+    Booster(**kw).fit(dtrain, obj=obj_a)  # same callable -> cache hit
+    assert len(B._TRAIN_FN_CACHE) == n1
+    Booster(**kw).fit(dtrain, obj=obj_b)  # different loss -> new entry
+    assert len(B._TRAIN_FN_CACHE) == n1 + 1

@@ -1,0 +1,163 @@
+"""The sklearn estimator facade (repro.sklearn).
+
+Params round-trip through get_params/set_params (with or without sklearn
+installed); estimators fit/predict/score over the compiled booster; and —
+when scikit-learn is available — GridSearchCV / cross_val_score drive the
+estimators out of the box (the ISSUE 3 acceptance smoke)."""
+import numpy as np
+import pytest
+
+from repro.sklearn import (
+    HAVE_SKLEARN,
+    XGBClassifier,
+    XGBRanker,
+    XGBRegressor,
+)
+
+needs_sklearn = pytest.mark.skipif(not HAVE_SKLEARN,
+                                   reason="scikit-learn not installed")
+
+
+@pytest.fixture(scope="module")
+def reg_data():
+    rng = np.random.default_rng(23)
+    n, f = 700, 6
+    x = rng.normal(size=(n, f)).astype(np.float32)
+    y = (x @ rng.normal(size=f) + 0.3 * x[:, 0] * x[:, 1]).astype(np.float32)
+    return x, y
+
+
+@pytest.fixture(scope="module")
+def cls_data(reg_data):
+    x, y = reg_data
+    return x, np.where(y > 0, "spam", "ham")  # string labels round-trip
+
+
+def test_get_set_params_roundtrip():
+    est = XGBRegressor(n_estimators=7, max_depth=3, quantile_alpha=0.8)
+    p = est.get_params()
+    assert p["n_estimators"] == 7 and p["quantile_alpha"] == 0.8
+    est.set_params(max_depth=5, learning_rate=0.1)
+    assert est.get_params()["max_depth"] == 5
+    with pytest.raises(ValueError, match="invalid parameter|Invalid parameter"):
+        est.set_params(not_a_param=1)
+    # a fresh estimator built from get_params is equivalent (clone contract)
+    est2 = XGBRegressor(**est.get_params())
+    assert est2.get_params() == est.get_params()
+
+
+def test_regressor_fit_predict_score(reg_data):
+    x, y = reg_data
+    reg = XGBRegressor(n_estimators=20, max_depth=4, max_bins=64)
+    assert reg.fit(x, y) is reg
+    assert reg.n_features_in_ == x.shape[1]
+    pred = reg.predict(x)
+    assert pred.shape == (len(y),)
+    assert reg.score(x, y) > 0.8  # R^2 on train
+
+    with pytest.raises(RuntimeError, match="not fitted"):
+        XGBRegressor().predict(x)
+
+
+def test_regressor_quantile_objective(reg_data):
+    x, y = reg_data
+    reg = XGBRegressor(n_estimators=20, max_depth=3, max_bins=32,
+                       objective="reg:quantile", quantile_alpha=0.9)
+    reg.fit(x, y)
+    cover = float(np.mean(y <= reg.predict(x)))
+    assert 0.8 < cover <= 1.0, cover  # predicts the upper quantile
+
+
+def test_classifier_binary_labels_proba_and_es(cls_data):
+    x, yc = cls_data
+    clf = XGBClassifier(n_estimators=30, max_depth=3, max_bins=32,
+                        eval_metric=["logloss", "auc"],
+                        early_stopping_rounds=5)
+    clf.fit(x[:500], yc[:500], eval_set=[(x[500:], yc[500:])])
+    assert list(clf.classes_) == ["ham", "spam"]
+    assert set(np.unique(clf.predict(x))) <= {"ham", "spam"}
+    proba = clf.predict_proba(x[:40])
+    assert proba.shape == (40, 2)
+    np.testing.assert_allclose(proba.sum(axis=1), 1.0, atol=1e-5)
+    assert clf.score(x, yc) > 0.85
+    # multi-metric per-round history flowed through; ES bookkeeping exposed
+    assert {"validation_0_logloss", "validation_0_auc"} <= set(
+        clf.evals_result_[-1])
+    assert clf.best_iteration_ is not None
+
+
+def test_classifier_rejects_unseen_eval_labels(cls_data):
+    x, yc = cls_data
+    clf = XGBClassifier(n_estimators=3, max_depth=2, max_bins=32)
+    bad = yc[500:].copy()
+    bad[0] = "zzz"  # class absent from the training targets
+    with pytest.raises(ValueError, match="unseen"):
+        clf.fit(x[:500], yc[:500], eval_set=[(x[500:], bad)])
+
+
+def test_classifier_multiclass(rng):
+    n, f, k = 600, 5, 3
+    centers = rng.normal(size=(k, f)) * 2.5
+    yi = rng.integers(0, k, size=n)
+    x = (centers[yi] + rng.normal(size=(n, f))).astype(np.float32)
+    labels = np.array([10, 20, 30])[yi]  # non-contiguous label values
+    clf = XGBClassifier(n_estimators=8, max_depth=3, max_bins=32)
+    clf.fit(x, labels)
+    assert list(clf.classes_) == [10, 20, 30]
+    proba = clf.predict_proba(x)
+    assert proba.shape == (n, k)
+    np.testing.assert_allclose(proba.sum(axis=1), 1.0, atol=1e-5)
+    assert clf.score(x, labels) > 0.9
+
+
+def test_ranker_qid_group_equivalent(rng):
+    n_groups, per = 25, 8
+    n = n_groups * per
+    x = rng.normal(size=(n, 5)).astype(np.float32)
+    rel = np.clip(np.round(x @ rng.normal(size=5) + 2), 0, 4).astype(
+        np.float32)
+    qid = np.repeat(np.arange(n_groups), per)
+    kw = dict(n_estimators=6, max_depth=3, max_bins=32)
+    a = XGBRanker(**kw).fit(x, rel, qid=qid)
+    b = XGBRanker(**kw).fit(x, rel, group=[per] * n_groups)
+    np.testing.assert_array_equal(a.predict(x), b.predict(x))
+    with pytest.raises(ValueError, match="exactly one"):
+        XGBRanker(**kw).fit(x, rel)
+    with pytest.raises(ValueError, match="exactly one"):
+        XGBRanker(**kw).fit(x, rel, qid=qid, group=[per] * n_groups)
+
+
+@needs_sklearn
+def test_gridsearchcv_smoke(cls_data):
+    """Acceptance: XGBClassifier survives a GridSearchCV run."""
+    from sklearn.model_selection import GridSearchCV
+
+    x, yc = cls_data
+    gs = GridSearchCV(
+        XGBClassifier(n_estimators=8, max_bins=32),
+        {"max_depth": [2, 3], "learning_rate": [0.3, 0.6]},
+        cv=2,
+    )
+    gs.fit(x, yc)
+    assert gs.best_score_ > 0.8
+    assert set(gs.best_params_) == {"max_depth", "learning_rate"}
+    assert gs.best_estimator_.score(x, yc) > 0.8
+
+
+@needs_sklearn
+def test_cross_val_score_regressor(reg_data):
+    from sklearn.model_selection import cross_val_score
+
+    x, y = reg_data
+    scores = cross_val_score(
+        XGBRegressor(n_estimators=10, max_depth=3, max_bins=32), x, y, cv=3)
+    assert scores.shape == (3,) and scores.mean() > 0.5
+
+
+@needs_sklearn
+def test_sklearn_clone_contract():
+    from sklearn.base import clone
+
+    est = XGBClassifier(n_estimators=5, max_depth=2, eval_metric=["auc"])
+    c = clone(est)
+    assert c.get_params() == est.get_params()
