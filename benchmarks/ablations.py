@@ -11,7 +11,6 @@ from __future__ import annotations
 import time
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import BoosterConfig, predict_margins, train
 from repro.core import metrics as M

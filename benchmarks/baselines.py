@@ -47,7 +47,6 @@ def _best_split_hist(x, g, h, idx, max_bins, cuts, bins, lam, mcw):
     parent = g_tot**2 / (h_tot + lam)
     for f in range(x.shape[1]):
         b = bins[idx, f]
-        miss = b == max_bins - 1
         gb = np.bincount(b, weights=g[idx], minlength=max_bins)
         hb = np.bincount(b, weights=h[idx], minlength=max_bins)
         gl = np.cumsum(gb[:-1])[:-1]

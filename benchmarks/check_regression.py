@@ -1,0 +1,71 @@
+"""CI perf regression guard over BENCH_pipeline.json.
+
+Compares selected per-round timings in a fresh benchmark run against a
+checked-in smoke baseline and fails (exit 1) when any metric regresses by
+more than --max-ratio. The generous default ratio absorbs runner-to-runner
+hardware variance while still catching order-of-magnitude regressions
+(e.g. the packed scan silently falling back to a dense per-round path, or
+the external-memory chunk loop re-quantising per round).
+
+Usage:
+    python benchmarks/check_regression.py /tmp/BENCH_pipeline.json \
+        benchmarks/smoke_baseline.json --max-ratio 2.5
+
+The baseline file maps dotted JSON paths to reference seconds:
+    {"metrics": {"round_loop.packed_scan_per_round_s": 0.123, ...}}
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def lookup(tree: dict, dotted: str):
+    node = tree
+    for part in dotted.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("bench", help="fresh BENCH_pipeline.json")
+    ap.add_argument("baseline", help="checked-in smoke baseline json")
+    ap.add_argument("--max-ratio", type=float, default=2.5)
+    args = ap.parse_args(argv)
+
+    with open(args.bench) as f:
+        bench = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    failures, checked = [], 0
+    for path, ref in baseline["metrics"].items():
+        value = lookup(bench, path)
+        if value is None:
+            failures.append(f"MISSING  {path}: not present in {args.bench}")
+            continue
+        checked += 1
+        ratio = value / ref
+        status = "OK" if ratio <= args.max_ratio else "REGRESSED"
+        print(
+            f"{status:9s} {path}: {value:.4f}s vs baseline {ref:.4f}s "
+            f"({ratio:.2f}x, limit {args.max_ratio}x)"
+        )
+        if ratio > args.max_ratio:
+            failures.append(
+                f"REGRESSED {path}: {value:.4f}s is {ratio:.2f}x the "
+                f"baseline {ref:.4f}s (limit {args.max_ratio}x)"
+            )
+    if not checked and not failures:
+        failures.append("baseline lists no metrics")
+    for line in failures:
+        print(line, file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,7 +9,6 @@
 """
 from __future__ import annotations
 
-import numpy as np
 import jax.numpy as jnp
 
 from repro.core import compress as C

@@ -19,8 +19,20 @@ tracked across PRs (EXPERIMENTS.md §Perf):
    trajectory. rank:pairwise rows are capped (its gradient is O(n^2) in
    the group mask by design).
 
+4. External memory — ExternalDMatrix build + training at a row count
+   BEYOND the largest single-shot config (default 4x, ISSUE 4): the data
+   is generated chunk by chunk and the flat float matrix never exists,
+   so this measures the streaming-sketch -> chunked-pack -> scan-over-
+   chunks pipeline end to end, plus a chunk-size sweep at the single-shot
+   size.
+
+`--sections` runs a subset (e.g. only external_memory) and MERGES the
+result into an existing --out file, so the artifact of record can be
+refreshed incrementally.
+
 Acceptance tracking: the packed path must be >= 1.5x faster per round at
-1M x 50 synthetic rows on CPU (ISSUE 1).
+1M x 50 synthetic rows on CPU (ISSUE 1); external_memory.rows must be
+>= 4x config.rows (ISSUE 4).
 """
 from __future__ import annotations
 
@@ -32,7 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Booster, DeviceDMatrix
+from repro.core import Booster, DeviceDMatrix, ExternalDMatrix
 from repro.core import booster as B
 from repro.core import compress as C
 from repro.core import histogram as H
@@ -286,19 +298,124 @@ def api_split(xj, yj, max_bins, max_depth, n_rounds):
     }
 
 
-def run(rows, features, max_bins, max_depth, n_rounds):
-    x, y = synthetic(rows, features)
-    xj, yj = jnp.asarray(x), jnp.asarray(y)
+def _external_batches(rows, features, chunk_rows, seed=0):
+    """Synthetic data generated CHUNK BY CHUNK: the flat float matrix never
+    exists anywhere (the point of the external-memory path). Labels come
+    from a fixed seeded weight vector so every chunk is consistent."""
+    wrng = np.random.default_rng(seed + 10_000)
+    w = np.zeros(features, np.float32)
+    k = max(3, features // 5)
+    w[:k] = wrng.standard_normal(k).astype(np.float32)
+    for i, start in enumerate(range(0, rows, chunk_rows)):
+        m = min(chunk_rows, rows - start)
+        rng = np.random.default_rng(seed + i)
+        x = rng.standard_normal((m, features), dtype=np.float32)
+        y = ((x @ w + 0.3 * rng.standard_normal(m)) > 0).astype(np.float32)
+        yield x, y
+
+
+def external_memory_split(rows, features, max_bins, max_depth, n_rounds,
+                          chunk_rows, single_shot_rows, sweep_rows=None):
+    """ExternalDMatrix build + fit at `rows` (beyond single-shot capacity:
+    >= 4x the largest single-shot config by default), plus a chunk-size
+    sweep at the single-shot size showing the paging-granularity
+    trade-off."""
+    t0 = time.perf_counter()
+    ext = ExternalDMatrix(
+        _external_batches(rows, features, chunk_rows),
+        chunk_rows=chunk_rows, max_bins=max_bins,
+    )
+    jax.block_until_ready(ext.packed_bins().packed)
+    t_build = time.perf_counter() - t0
+
+    def fit_once():
+        bst = Booster(n_rounds=n_rounds, max_depth=max_depth,
+                      max_bins=max_bins, objective="binary:logistic")
+        t0 = time.perf_counter()
+        bst.fit(ext)
+        jax.block_until_ready(bst.margins)
+        return time.perf_counter() - t0
+
+    t_fit_cold = fit_once()  # includes chunk-scan program compilation
+    t_fit = fit_once()  # steady state (compiled fn cached)
+
+    out = {
+        "rows": rows,
+        "features": features,
+        "chunk_rows": chunk_rows,
+        "n_chunks": ext.n_chunks,
+        "largest_single_shot_rows": single_shot_rows,
+        "rows_vs_single_shot": rows / single_shot_rows,
+        "dmatrix_build_s": t_build,
+        "fit_cold_s": t_fit_cold,
+        "fit_s": t_fit,
+        "per_round_s": t_fit / n_rounds,
+        "rows_per_sec": rows * n_rounds / t_fit,
+        "host_packed_bytes": ext.nbytes_host,
+        "device_stack_bytes": ext.nbytes_device,
+        # what the in-memory path would have needed transiently on device
+        "in_memory_transient_bytes_fp32_plus_bins": rows * features * 8,
+        "chunk_dense_transient_bytes": chunk_rows * features * 8,
+    }
+
+    sweep_rows = sweep_rows or single_shot_rows
+    sweep = {}
+    for cr in (max(sweep_rows // 32, 1024), max(sweep_rows // 8, 4096),
+               max(sweep_rows // 2, 16384)):
+        e = ExternalDMatrix(
+            _external_batches(sweep_rows, features, cr),
+            chunk_rows=cr, max_bins=max_bins,
+        )
+
+        def sweep_fit():
+            b = Booster(n_rounds=n_rounds, max_depth=max_depth,
+                        max_bins=max_bins, objective="binary:logistic")
+            t0 = time.perf_counter()
+            b.fit(e)
+            jax.block_until_ready(b.margins)
+            return time.perf_counter() - t0
+
+        sweep_fit()  # compile
+        sweep[str(cr)] = {
+            "n_chunks": e.n_chunks,
+            "per_round_s": sweep_fit() / n_rounds,
+        }
+    out["chunk_size_sweep"] = {"rows": sweep_rows, "configs": sweep}
+    return out
+
+
+SECTIONS = ("phases", "api", "round_loop", "objectives", "external_memory")
+
+
+def run(rows, features, max_bins, max_depth, n_rounds,
+        sections=SECTIONS, external_rows=None, chunk_rows=262_144):
     result = {
         "config": {
             "rows": rows, "features": features, "max_bins": max_bins,
             "max_depth": max_depth, "backend": jax.default_backend(),
         },
-        "phases": phase_split(xj, yj, max_bins, max_depth),
-        "api": api_split(xj, yj, max_bins, max_depth, n_rounds),
-        "round_loop": round_loop(xj, yj, max_bins, max_depth, n_rounds),
-        "objectives": objectives_split(xj, max_bins, max_depth, n_rounds),
     }
+    in_memory = [s for s in sections if s != "external_memory"]
+    if in_memory:
+        x, y = synthetic(rows, features)
+        xj, yj = jnp.asarray(x), jnp.asarray(y)
+        if "phases" in sections:
+            result["phases"] = phase_split(xj, yj, max_bins, max_depth)
+        if "api" in sections:
+            result["api"] = api_split(xj, yj, max_bins, max_depth, n_rounds)
+        if "round_loop" in sections:
+            result["round_loop"] = round_loop(xj, yj, max_bins, max_depth,
+                                              n_rounds)
+        if "objectives" in sections:
+            result["objectives"] = objectives_split(xj, max_bins, max_depth,
+                                                    n_rounds)
+        del xj, yj, x, y
+    if "external_memory" in sections:
+        ext_rows = external_rows or 4 * rows
+        result["external_memory"] = external_memory_split(
+            ext_rows, features, max_bins, max_depth, n_rounds,
+            min(chunk_rows, max(ext_rows // 3, 1)), rows,
+        )
     return result
 
 
@@ -310,18 +427,62 @@ def main(argv=None):
     ap.add_argument("--max-depth", type=int, default=6)
     ap.add_argument("--rounds", type=int, default=2)
     ap.add_argument("--out", type=str, default="BENCH_pipeline.json")
+    ap.add_argument("--sections", type=str, default="all",
+                    help="comma list of sections to run "
+                         f"({','.join(SECTIONS)}); others are kept from an "
+                         "existing --out file")
+    ap.add_argument("--external-rows", type=int, default=None,
+                    help="external_memory row count (default 4 * --rows)")
+    ap.add_argument("--chunk-rows", type=int, default=262_144,
+                    help="external_memory chunk size (clamped so the run "
+                         "always uses >= 3 chunks)")
     args = ap.parse_args(argv)
 
-    r = run(args.rows, args.features, args.max_bins, args.max_depth, args.rounds)
+    sections = (
+        SECTIONS if args.sections == "all"
+        else tuple(s.strip() for s in args.sections.split(","))
+    )
+    unknown = set(sections) - set(SECTIONS)
+    if unknown:
+        ap.error(f"unknown sections: {sorted(unknown)}")
+
+    r = run(args.rows, args.features, args.max_bins, args.max_depth,
+            args.rounds, sections=sections, external_rows=args.external_rows,
+            chunk_rows=args.chunk_rows)
+
+    # Partial runs refresh only their sections in the artifact of record.
+    # The top-level config describes the IN-MEMORY sections (external_memory
+    # self-describes its rows/features), so an external-only refresh must
+    # not clobber it with this run's --rows.
+    if set(sections) != set(SECTIONS):
+        try:
+            with open(args.out) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            merged = {}
+        cfg_new = r.pop("config")
+        in_memory_refreshed = any(s != "external_memory" for s in sections)
+        if "config" not in merged:
+            merged["config"] = cfg_new
+        elif in_memory_refreshed and merged["config"] != cfg_new:
+            print("warning: in-memory sections refreshed at a different "
+                  "config; updating config (sections kept from the old file "
+                  "may be stale)")
+            merged["config"] = cfg_new
+        merged.update(r)
+        r = merged
+
     print(f"# Pipeline ({args.rows}x{args.features}, depth {args.max_depth})")
-    for k, v in r["phases"].items():
+    for k, v in r.get("phases", {}).items():
         print(f"{k},{v:.2f}")
-    for k, v in r["api"].items():
+    for k, v in r.get("api", {}).items():
         print(f"{k},{v}")
-    for k, v in r["round_loop"].items():
+    for k, v in r.get("round_loop", {}).items():
         print(f"{k},{v}")
-    for k, v in r["objectives"].items():
+    for k, v in r.get("objectives", {}).items():
         print(f"objective_{k}_per_round_s,{v['per_round_s']:.4f}")
+    for k, v in r.get("external_memory", {}).items():
+        print(f"external_{k},{v}")
     with open(args.out, "w") as f:
         json.dump(r, f, indent=2)
     print(f"wrote {args.out}")

@@ -13,10 +13,17 @@ devices) -> prediction, all on-device.
 from repro.core.booster import Booster, BoosterConfig, TrainState
 from repro.core.booster import predict_margins, train
 from repro.core.booster import predict as predict_proba
-from repro.core.compress import CompressedMatrix, PackedBins, pack, unpack
+from repro.core.compress import (
+    ChunkedPackedBins,
+    CompressedMatrix,
+    PackedBins,
+    pack,
+    unpack,
+)
 from repro.core.compress import compress as compress_matrix
-from repro.core.dmatrix import DeviceDMatrix
+from repro.core.dmatrix import DeviceDMatrix, ExternalDMatrix
 from repro.core.metrics import Metric, get_metric, register_metric
+from repro.core.quantile import StreamingQuantileSketch
 from repro.core.objectives import (
     Objective,
     get_objective,
@@ -37,7 +44,10 @@ from repro.core.predict import (
 __all__ = [
     "Booster",
     "BoosterConfig",
+    "ChunkedPackedBins",
     "DeviceDMatrix",
+    "ExternalDMatrix",
+    "StreamingQuantileSketch",
     "Metric",
     "Objective",
     "get_metric",

@@ -65,7 +65,7 @@ from repro.core import quantile as Q
 from repro.core import split as S
 from repro.core import tree as T
 from repro.core import predict as PR
-from repro.core.dmatrix import DeviceDMatrix, cuts_equal
+from repro.core.dmatrix import DeviceDMatrix, ExternalDMatrix, cuts_equal
 
 
 @dataclass(frozen=True)
@@ -92,31 +92,53 @@ class BoosterConfig:
 
 
 def _tree_margin_delta(cfg: BoosterConfig, tr: T.Tree, data) -> jax.Array:
-    """One tree's leaf outputs over all rows, straight from the quantised
-    representation (packed or dense) — no Ensemble construction."""
+    """One tree's margin contribution (learning rate already applied) over
+    all rows, straight from the quantised representation (packed, chunked
+    or dense) — no Ensemble construction."""
     mb = cfg.max_bins - 1
-    if isinstance(data, C.PackedBins):
-        return PR.traverse_tree_packed(
+    if isinstance(data, C.ChunkedPackedBins):
+        delta = PR.traverse_tree_chunked(
+            tr.feature, tr.split_bin, tr.default_left, tr.leaf_value, tr.is_leaf,
+            data.packed, data.bits, data.chunk_rows, data.n_rows, mb,
+            cfg.max_depth,
+        )
+    elif isinstance(data, C.PackedBins):
+        delta = PR.traverse_tree_packed(
             tr.feature, tr.split_bin, tr.default_left, tr.leaf_value, tr.is_leaf,
             data.packed, data.bits, data.n_rows, mb, cfg.max_depth,
         )
-    return PR.traverse_tree_binned(
-        tr.feature, tr.split_bin, tr.default_left, tr.leaf_value, tr.is_leaf,
-        data, mb, cfg.max_depth,
-    )
+    else:
+        delta = PR.traverse_tree_binned(
+            tr.feature, tr.split_bin, tr.default_left, tr.leaf_value, tr.is_leaf,
+            data, mb, cfg.max_depth,
+        )
+    return cfg.learning_rate * delta
 
 
 def _apply_stacked_trees(cfg: BoosterConfig, stacked: T.Tree, data,
                          margins: jax.Array) -> jax.Array:
     """Add one round's k stacked trees (unscaled leaves, leading axis k) to
-    margins — used for eval-set margins inside the scan and in the
-    distributed per-round loop."""
+    margins — the training-set margin update of the round step, eval-set
+    margins inside the scan, and the distributed per-round loop all route
+    through here.
+
+    The update is ONE full-array add of an optimization_barrier'd update
+    stack (each margin column receives exactly one tree's contribution, so
+    this is elementwise-identical to per-class updates). The barrier is
+    load-bearing for external memory: without it XLA may contract
+    `margins + lr * delta` into an FMA — or rematerialise tree arithmetic
+    inside the fused update — differently depending on the data
+    representation's producer graph, silently breaking the bit-identity
+    between the in-memory and chunked paths (DESIGN.md §11)."""
     k = stacked.feature.shape[0]
-    for c in range(k):
-        tr = jax.tree.map(lambda a: a[c], stacked)
-        delta = _tree_margin_delta(cfg, tr, data)
-        margins = margins.at[:, c].add(cfg.learning_rate * delta)
-    return margins
+    updates = jnp.stack(
+        [
+            _tree_margin_delta(cfg, jax.tree.map(lambda a: a[c], stacked), data)
+            for c in range(k)
+        ],
+        axis=1,
+    )
+    return margins + jax.lax.optimization_barrier(updates)
 
 
 def _round_step_fn(cfg: BoosterConfig, obj: O.Objective, hist_builder=None):
@@ -129,7 +151,6 @@ def _round_step_fn(cfg: BoosterConfig, obj: O.Objective, hist_builder=None):
     def round_step(data, margins, y, extra, cuts):
         gh_all = obj.grad(margins, y, **extra)  # (n, k, 2)
         trees = []
-        new_margins = margins
         for c in range(k):
             tr = T.grow_tree(
                 data,
@@ -143,11 +164,15 @@ def _round_step_fn(cfg: BoosterConfig, obj: O.Objective, hist_builder=None):
                 hist_builder=hist_builder,
                 hist_block_rows=cfg.hist_block_rows,
             )
-            trees.append(tr)
-            # Incremental margin update from this tree only.
-            delta = _tree_margin_delta(cfg, tr, data)
-            new_margins = new_margins.at[:, c].add(cfg.learning_rate * delta)
+            # Materialise the tree arrays before they fan out to the margin
+            # update: without the barrier XLA may rematerialise leaf-value
+            # arithmetic inside the fused traversal, with representation-
+            # dependent FMA contraction (DESIGN.md §11).
+            trees.append(jax.lax.optimization_barrier(tr))
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+        # Trees only depend on round-start gradients, so the k margin
+        # columns update in one barriered add (see _apply_stacked_trees).
+        new_margins = _apply_stacked_trees(cfg, stacked, data, margins)
         return stacked, new_margins
 
     return round_step
@@ -291,8 +316,9 @@ class Booster:
 
     @property
     def matrix(self) -> C.CompressedMatrix | None:
-        """Compressed matrix of the last training set (TrainState compat)."""
-        return None if self._train_dmat is None else self._train_dmat.matrix
+        """Compressed matrix of the last training set (TrainState compat).
+        None after external-memory fits (no single flat matrix exists)."""
+        return getattr(self._train_dmat, "matrix", None)
 
     def num_boosted_rounds(self) -> int:
         return self.n_rounds_trained
@@ -339,9 +365,13 @@ class Booster:
         mesh=None,
         data_axes: Sequence[str] = ("data",),
     ) -> "Booster":
-        """Train cfg.n_rounds rounds from scratch on a DeviceDMatrix.
+        """Train cfg.n_rounds rounds from scratch on a DeviceDMatrix or an
+        ExternalDMatrix (external-memory path: the chunk-stacked compressed
+        representation trains through the same compiled scan, bit-identical
+        to the in-memory path on the same data — DESIGN.md §11).
 
-        evals: sequence of (DeviceDMatrix, name) pairs (or bare matrices)
+        evals: sequence of (DeviceDMatrix, name) pairs (or bare matrices;
+          ExternalDMatrix eval sets work too)
           built with `ref=dtrain`; metrics are computed per round inside the
           compiled scan. With `early_stopping_rounds`, the LAST metric of
           the LAST eval set drives stopping (direction = that metric's
@@ -420,12 +450,18 @@ class Booster:
     def _cuts_match(self, cuts: jax.Array) -> bool:
         return cuts_equal(self.cuts, cuts)
 
-    def _initial_margins(self, dmat: DeviceDMatrix) -> jax.Array:
+    def _initial_margins(self, dmat) -> jax.Array:
         """Margins to (re-)enter training with: base score if unfitted, else
         on-device binned prediction of the current ensemble."""
         k = self.obj.n_outputs(self.cfg.n_classes)
         if self.ensemble is None:
             return jnp.full((dmat.n_rows, k), self.base_score, jnp.float32)
+        if isinstance(dmat, ExternalDMatrix):
+            cpb = dmat.packed_bins()
+            return PR.predict_binned_chunked(
+                self.ensemble, cpb.packed, cpb.bits, cpb.chunk_rows,
+                cpb.n_rows, self.cfg.max_bins - 1, self.cfg.max_depth,
+            )
         return PR.predict_binned_packed(
             self.ensemble, dmat.matrix.packed, dmat.bits, dmat.n_rows,
             self.cfg.max_bins - 1, self.cfg.max_depth,
@@ -435,10 +471,10 @@ class Booster:
         out = []
         for i, e in enumerate(evals):
             d, name = e if isinstance(e, (tuple, list)) else (e, f"eval{i}")
-            if not isinstance(d, DeviceDMatrix):
+            if not isinstance(d, (DeviceDMatrix, ExternalDMatrix)):
                 raise TypeError(
-                    "evals entries must be DeviceDMatrix (or (DeviceDMatrix, "
-                    f"name)), got {type(d)}; build with ref=dtrain"
+                    "evals entries must be DeviceDMatrix / ExternalDMatrix "
+                    f"(or (matrix, name)), got {type(d)}; build with ref=dtrain"
                 )
             if d.label is None:
                 raise ValueError(f"eval set '{name}' has no label")
@@ -462,10 +498,11 @@ class Booster:
             )
         if dtrain.max_bins != cfg.max_bins:
             raise ValueError(
-                f"DeviceDMatrix was quantised with max_bins={dtrain.max_bins} "
-                f"but this booster expects max_bins={cfg.max_bins}; build the "
-                "matrix with the same max_bins (bin-space thresholds and the "
-                "reserved missing bin must agree)"
+                f"{type(dtrain).__name__} was quantised with "
+                f"max_bins={dtrain.max_bins} but this booster expects "
+                f"max_bins={cfg.max_bins}; build the matrix with the same "
+                "max_bins (bin-space thresholds and the reserved missing bin "
+                "must agree)"
             )
         evals = self._normalise_evals(evals, dtrain)
         record_every = verbose_every or (1 if (callback or evals) else 0)
@@ -497,12 +534,24 @@ class Booster:
                 eval_extras, metrics, track_metric,
             )
         else:
-            data = (
-                dtrain.packed_bins() if cfg.compress_matrix
-                else dtrain.matrix.unpack()
-            )
+            external = isinstance(dtrain, ExternalDMatrix)
+            if external:
+                # External-memory path: the chunk-stacked packed words are
+                # the only representation; a dense matrix never exists.
+                data = dtrain.packed_bins()
+            else:
+                data = (
+                    dtrain.packed_bins() if cfg.compress_matrix
+                    else dtrain.matrix.unpack()
+                )
             hist_builder = None
             if cfg.use_kernel_histograms:
+                if external:
+                    raise NotImplementedError(
+                        "use_kernel_histograms is not supported with "
+                        "ExternalDMatrix (the Pallas kernels are not "
+                        "chunk-aware); train with the default builders"
+                    )
                 from repro.kernels import ops as KO
 
                 hist_builder = (
@@ -625,11 +674,17 @@ class Booster:
         DeviceDMatrix (bin-space traversal on the packed words — exact, since
         thresholds are cut values and quantisation is searchsorted-left)."""
         self._require_fitted()
-        if isinstance(data, DeviceDMatrix):
+        if isinstance(data, (DeviceDMatrix, ExternalDMatrix)):
             if not self._cuts_match(data.cuts):
                 raise ValueError(
-                    "DeviceDMatrix was quantised with different cuts than "
-                    "this booster; build it with ref= the training matrix"
+                    f"{type(data).__name__} was quantised with different cuts "
+                    "than this booster; build it with ref= the training matrix"
+                )
+            if isinstance(data, ExternalDMatrix):
+                cpb = data.packed_bins()
+                return PR.predict_binned_chunked(
+                    self.ensemble, cpb.packed, cpb.bits, cpb.chunk_rows,
+                    cpb.n_rows, self.cfg.max_bins - 1, self.cfg.max_depth,
                 )
             return PR.predict_binned_packed(
                 self.ensemble, data.matrix.packed, data.bits, data.n_rows,

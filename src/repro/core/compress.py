@@ -89,6 +89,67 @@ class PackedBins:
         return self.packed.shape[0]
 
 
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["packed"],
+    meta_fields=["bits", "chunk_rows", "n_rows"],
+)
+@dataclass(frozen=True)
+class ChunkedPackedBins:
+    """Chunk-stacked bit-packed matrix — the external-memory training
+    representation (DESIGN.md §11).
+
+    Each chunk of `chunk_rows` rows is packed independently (so chunks can
+    be produced, paged and decoded without their neighbours) and the chunks
+    are stacked on a leading axis. Like PackedBins this is a registered
+    pytree, so the whole stack flows through jit / lax.scan / shard_map;
+    the training loop scans the chunk axis, keeping dense per-row
+    transients bounded by one chunk regardless of n_rows. Global row ids
+    map to (chunk, offset) as (r // chunk_rows, r % chunk_rows); the last
+    chunk may be logically short (n_rows bounds the real rows) and is
+    padded with zero words.
+    """
+
+    packed: jax.Array  # (n_chunks, n_features, words_per_chunk) uint32
+    bits: int
+    chunk_rows: int
+    n_rows: int
+
+    @property
+    def n_chunks(self) -> int:
+        return self.packed.shape[0]
+
+    @property
+    def n_features(self) -> int:
+        return self.packed.shape[1]
+
+    @property
+    def padded_rows(self) -> int:
+        return self.packed.shape[0] * self.chunk_rows
+
+
+def gather_rows_chunked(
+    packed: jax.Array, bits: int, chunk_rows: int, row_ids: jax.Array
+) -> jax.Array:
+    """All features' bins for an arbitrary set of global row ids, straight
+    from the chunk stack: (m,) int32 row ids -> (m, n_features) int32.
+
+    The chunked analogue of `packed[:, r // spw]` + shift/mask on the flat
+    layout — one word gather per (row, feature). row_ids are clipped into
+    the padded range, so callers may use out-of-range sentinels for padding
+    rows (their bins are garbage; route them to a dump slot).
+    """
+    n_chunks, f, _ = packed.shape
+    spw = symbols_per_word(bits)
+    r = jnp.clip(row_ids, 0, n_chunks * chunk_rows - 1)
+    c = r // chunk_rows
+    off = r % chunk_rows
+    fidx = jnp.arange(f, dtype=jnp.int32)[None, :]
+    words = packed[c[:, None], fidx, (off // spw)[:, None]]  # (m, f)
+    shift = ((off % spw).astype(jnp.uint32) * jnp.uint32(bits))[:, None]
+    return ((words >> shift) & jnp.uint32((1 << bits) - 1)).astype(jnp.int32)
+
+
 def gather_feature_bins(packed: jax.Array, bits: int, feat: jax.Array) -> jax.Array:
     """Extract bins[i, feat[i]] for every row i straight from packed words.
 

@@ -15,7 +15,6 @@ per-node best-split records. See EXPERIMENTS.md §Perf.
 """
 from __future__ import annotations
 
-import functools
 from typing import Sequence
 
 import jax
@@ -26,7 +25,6 @@ from repro import jaxcompat
 from repro.core import compress as C
 from repro.core import objectives as O
 from repro.core import tree as T
-from repro.core import predict as PR
 
 
 # Compiled per-round shard_map programs and eval-margin updaters, keyed by
@@ -43,26 +41,41 @@ def make_distributed_round(
     data_axes: Sequence[str] = ("data",),
     n_rows_per_shard: int | None = None,
     bits: int | None = None,
+    chunk_rows: int | None = None,
 ):
     """Returns a jit'd per-round function over row-sharded data.
 
     Inputs to the returned fn: bins_or_packed row-sharded over data_axes,
     margins/y row-sharded, cuts replicated; replicated tree output. Cached
     by static config so repeated fits reuse the compiled program.
+
+    `chunk_rows` set means external-memory data: each shard holds a stack
+    of independently packed chunks (its row shard), and the per-level
+    histogram is a chunk-scan on-shard followed by the usual psum — the
+    chunk loop composes with Algorithm 1's AllReduce unchanged.
     """
     # Objective is a hashable NamedTuple; registry lookups return singletons,
     # so registered (incl. custom-registered) objectives key stably.
-    key = (cfg, obj, mesh, tuple(data_axes), n_rows_per_shard, bits)
+    key = (cfg, obj, mesh, tuple(data_axes), n_rows_per_shard, bits,
+           chunk_rows)
     cached = _ROUND_FN_CACHE.get(key)
     if cached is not None:
         return cached
     k = obj.n_outputs(cfg.n_classes)
-    mb = cfg.max_bins - 1
     axis0, extra = data_axes[0], tuple(data_axes[1:])
     cfg_kw = O.config_kwargs(cfg)  # static under shard_map (cfg keys cache)
+    chunked = chunk_rows is not None
 
     def round_body(data, margins, y, cuts):
-        if cfg.compress_matrix:
+        from repro.core import booster as B  # lazy: avoid import cycle
+
+        if chunked:
+            # External-memory: this shard's chunk stack is its matrix.
+            rep = C.ChunkedPackedBins(
+                packed=data, bits=bits, chunk_rows=chunk_rows,
+                n_rows=n_rows_per_shard,
+            )
+        elif cfg.compress_matrix:
             # Packed-native: each shard's words ARE its training matrix —
             # no per-round unpack, no dense (n, f) bins (DESIGN.md §2).
             rep = C.PackedBins(packed=data, bits=bits, n_rows=n_rows_per_shard)
@@ -70,7 +83,6 @@ def make_distributed_round(
             rep = data
         gh_all = obj.grad(margins, y, **cfg_kw)
         trees = []
-        new_margins = margins
         for c in range(k):
             tr = T.grow_tree(
                 rep,
@@ -84,25 +96,21 @@ def make_distributed_round(
                 axis_name=axis0,
                 extra_axes=extra,
             )
-            trees.append(tr)
-            if cfg.compress_matrix:
-                delta = PR.traverse_tree_packed(
-                    tr.feature, tr.split_bin, tr.default_left, tr.leaf_value,
-                    tr.is_leaf, rep.packed, rep.bits, rep.n_rows, mb,
-                    cfg.max_depth,
-                )
-            else:
-                delta = PR.traverse_tree_binned(
-                    tr.feature, tr.split_bin, tr.default_left, tr.leaf_value,
-                    tr.is_leaf, rep, mb, cfg.max_depth,
-                )
-            new_margins = new_margins.at[:, c].add(cfg.learning_rate * delta)
+            # Materialise tree arrays before the margin update (same
+            # barrier as booster._round_step_fn — see DESIGN.md §11).
+            trees.append(jax.lax.optimization_barrier(tr))
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+        # One barriered add for all k columns, shared with the
+        # single-device scan so both compile the update identically.
+        new_margins = B._apply_stacked_trees(cfg, stacked, rep, margins)
         return stacked, new_margins
 
     axes = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
     row_spec = P(axes)
-    if cfg.compress_matrix:
+    if chunked:
+        # chunk stack is (C, F, W): rows live in whole chunks on axis 0.
+        data_spec = P(axes, None, None)
+    elif cfg.compress_matrix:
         # packed matrix is (F, W): rows live in the words axis.
         data_spec = P(None, axes)
     else:
@@ -148,6 +156,8 @@ def make_chunk_runner(
     reads them at chunk granularity — the same multi-metric stack as the
     single-device scan.
     """
+    from repro.core.dmatrix import ExternalDMatrix
+
     n = dmat.n_rows
     n_shards = 1
     for a in data_axes:
@@ -158,13 +168,34 @@ def make_chunk_runner(
             "(truncate or pad upstream)"
         )
     cuts = dmat.cuts
-    if cfg.compress_matrix:
+    if isinstance(dmat, ExternalDMatrix):
+        # External-memory + multi-device: whole chunks are the sharding
+        # unit (each chunk already decodes independently, so no per-shard
+        # re-packing is needed). Shard boundaries must align with chunk
+        # boundaries so each shard's rows are exactly its chunks' rows.
+        if n % dmat.chunk_rows != 0:
+            raise ValueError(
+                f"external-memory training with mesh= requires n_rows={n} "
+                f"to be a multiple of chunk_rows={dmat.chunk_rows} (the "
+                "last chunk must be full so shards get whole chunks)"
+            )
+        if dmat.n_chunks % n_shards != 0:
+            raise ValueError(
+                f"n_chunks={dmat.n_chunks} must be divisible by the "
+                f"{n_shards} data shards; pick chunk_rows so chunks "
+                "distribute evenly"
+            )
+        bits, n_per = dmat.bits, n // n_shards
+        data = dmat.packed_bins().packed
+        chunk_rows = dmat.chunk_rows
+    elif cfg.compress_matrix:
         # Re-pack per shard so each shard's words decode independently.
         # Cached on the DeviceDMatrix: the dense-bins transient (the matrix
         # DESIGN.md §2 bans from steady state) exists once per shard count,
         # not once per fit.
         bits = dmat.bits
         n_per = n // n_shards
+        chunk_rows = None
         data = dmat._shard_pack_cache.get(n_shards)
         if data is None:
             bins = dmat.matrix.unpack()
@@ -176,17 +207,22 @@ def make_chunk_runner(
             dmat._shard_pack_cache[n_shards] = data
     else:
         data = dmat.matrix.unpack()
-        bits, n_per = None, None
+        bits, n_per, chunk_rows = None, None, None
 
     axes = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
     row_sharding = jax.NamedSharding(mesh, P(axes))
-    data_sharding = jax.NamedSharding(
-        mesh, P(None, axes) if cfg.compress_matrix else P(axes, None)
-    )
+    if chunk_rows is not None:
+        data_spec = P(axes, None, None)  # whole chunks per shard
+    elif cfg.compress_matrix:
+        data_spec = P(None, axes)
+    else:
+        data_spec = P(axes, None)
+    data_sharding = jax.NamedSharding(mesh, data_spec)
     y = jax.device_put(dmat.label, row_sharding)
     data = jax.device_put(data, data_sharding)
     round_fn = make_distributed_round(
-        cfg, obj, mesh, data_axes, n_rows_per_shard=n_per, bits=bits
+        cfg, obj, mesh, data_axes, n_rows_per_shard=n_per, bits=bits,
+        chunk_rows=chunk_rows,
     )
 
     from repro.core import booster as B  # lazy: avoid import cycle

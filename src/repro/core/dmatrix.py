@@ -17,6 +17,19 @@ with `ref=`, mirroring XGBoost's `QuantileDMatrix(..., ref=dtrain)`:
 
     dtrain = DeviceDMatrix(x_train, label=y_train)
     dvalid = DeviceDMatrix(x_valid, label=y_valid, ref=dtrain)
+
+Two batch-iterator constructors remove the all-resident-at-once ceiling
+(DESIGN.md §11):
+
+  * `DeviceDMatrix.from_batches(batches)` assembles the SAME in-memory
+    matrix from an iterator of chunks (bit-identical to constructing from
+    the concatenated array) — convenience for sources that are naturally
+    chunked but still fit on device.
+  * `ExternalDMatrix(batches, chunk_rows=...)` never builds the flat
+    matrix at all: cut points stream through a quantile sketch, every
+    chunk is quantised + bit-packed independently, and the chunks live
+    host-side until training pages the compressed stack in. Training over
+    it scans chunk-by-chunk, bounding dense device transients by one chunk.
 """
 from __future__ import annotations
 
@@ -26,6 +39,93 @@ import numpy as np
 
 from repro.core import compress as C
 from repro.core import quantile as Q
+
+
+def _split_batch_item(item, index: int):
+    """One iterator item -> (x, label | None, group_ids | None)."""
+    if isinstance(item, (tuple, list)):
+        if not 1 <= len(item) <= 3:
+            raise ValueError(
+                f"batch {index}: expected x, (x, y) or (x, y, group_ids), "
+                f"got a {len(item)}-tuple"
+            )
+        return tuple(item) + (None,) * (3 - len(item))
+    return item, None, None
+
+
+def _collect_batches(batches):
+    """Validate and materialise a batch iterator as host float32 chunks.
+
+    Every chunk must be a 2-D numeric array with the same n_features and
+    the same dtype as the first chunk, and labels/group_ids must be present
+    either for every chunk or for none, with lengths matching their chunk —
+    anything else raises a ValueError naming the offending batch (instead
+    of an opaque XLA shape error deep inside quantise/compress).
+
+    Returns (x_chunks, label or None, group_ids or None, n_features).
+    """
+    xs, ys, gs = [], [], []
+    n_features = None
+    dtype0 = None
+    for i, item in enumerate(batches):
+        x, y, g = _split_batch_item(item, i)
+        x = np.asarray(x)
+        if x.dtype == object or not (
+            np.issubdtype(x.dtype, np.number) or x.dtype == np.bool_
+        ):
+            raise ValueError(
+                f"batch {i} has non-numeric dtype {x.dtype!r}; batches must "
+                "be numeric 2-D arrays"
+            )
+        if x.ndim != 2:
+            raise ValueError(
+                f"batch {i} must be 2-D (rows, n_features), got shape {x.shape}"
+            )
+        if x.shape[0] == 0:
+            raise ValueError(f"batch {i} is empty (0 rows)")
+        if n_features is None:
+            n_features, dtype0 = x.shape[1], x.dtype
+        else:
+            if x.shape[1] != n_features:
+                raise ValueError(
+                    f"batch {i} has {x.shape[1]} features but batch 0 had "
+                    f"{n_features}; all batches must agree"
+                )
+            if x.dtype != dtype0:
+                raise ValueError(
+                    f"batch {i} has dtype {x.dtype!r} but batch 0 had "
+                    f"{dtype0!r}; all batches must agree"
+                )
+        if (y is None) != (not ys) and i > 0:
+            raise ValueError(
+                f"batch {i} {'has no label but earlier batches did' if y is None else 'has a label but earlier batches did not'}"
+                "; labels must be given for every batch or for none"
+            )
+        if y is not None:
+            y = np.asarray(y, np.float32).reshape(-1)
+            if y.shape[0] != x.shape[0]:
+                raise ValueError(
+                    f"batch {i}: label has {y.shape[0]} rows, x has {x.shape[0]}"
+                )
+            ys.append(y)
+        if (g is None) != (not gs) and i > 0:
+            raise ValueError(
+                f"batch {i}: group_ids must be given for every batch or none"
+            )
+        if g is not None:
+            g = np.asarray(g, np.int32).reshape(-1)
+            if g.shape[0] != x.shape[0]:
+                raise ValueError(
+                    f"batch {i}: group_ids has {g.shape[0]} rows, "
+                    f"x has {x.shape[0]}"
+                )
+            gs.append(g)
+        xs.append(np.ascontiguousarray(x, np.float32))
+    if not xs:
+        raise ValueError("batch iterator produced no batches")
+    label = np.concatenate(ys) if ys else None
+    groups = np.concatenate(gs) if gs else None
+    return xs, label, groups, n_features
 
 
 def cuts_equal(a: jax.Array | None, b: jax.Array | None) -> bool:
@@ -85,6 +185,28 @@ class DeviceDMatrix:
                 f"label has {self.label.shape[0]} rows, x has {self.n_rows}"
             )
 
+    @classmethod
+    def from_batches(
+        cls,
+        batches,
+        *,
+        max_bins: int = Q.DEFAULT_MAX_BINS,
+        ref: "DeviceDMatrix | None" = None,
+    ) -> "DeviceDMatrix":
+        """Build the in-memory matrix from an iterator of chunks.
+
+        `batches` yields `x`, `(x, y)` or `(x, y, group_ids)` chunks; they
+        are validated (consistent n_features/dtype, matching label lengths
+        — a clear ValueError instead of an opaque XLA error) and assembled
+        into exactly the matrix `DeviceDMatrix(concat(chunks), ...)` would
+        produce, bit for bit. For data that must never be resident all at
+        once, use `ExternalDMatrix` instead.
+        """
+        xs, label, groups, _ = _collect_batches(batches)
+        x = xs[0] if len(xs) == 1 else np.concatenate(xs)
+        return cls(x, label=label, group_ids=groups, max_bins=max_bins,
+                   ref=ref)
+
     # --- surface -----------------------------------------------------------
     @property
     def cuts(self) -> jax.Array:
@@ -133,3 +255,212 @@ class DeviceDMatrix:
             f"{self.nbytes / 1e6:.2f} MB"
             f"{', labelled' if self.label is not None else ''})"
         )
+
+
+class ExternalDMatrix:
+    """External-memory training matrix: host-resident bit-packed chunks.
+
+    The flat (n_rows, n_features) matrix never exists on device — not as
+    floats, not as dense bins. Cut points come from a streaming quantile
+    sketch (one pass over the chunks, bounded memory), each chunk is then
+    quantised and bit-packed independently, and the packed chunks are kept
+    host-side as one (n_chunks, n_features, words_per_chunk) uint32 stack.
+    `packed_bins()` pages the compressed stack onto the device (cached;
+    `unload()` drops it again) as a `ChunkedPackedBins` pytree that the
+    booster's compiled scan consumes chunk by chunk, so dense device
+    transients stay bounded by one chunk regardless of n_rows
+    (DESIGN.md §11).
+
+    Labels, group ids and per-round gradients stay fully device-resident
+    (they are O(n), the matrix is O(n * f) — the same split XGBoost's
+    external-memory mode makes).
+
+    Args:
+      batches: iterator of `x`, `(x, y)` or `(x, y, group_ids)` chunks
+        (validated like `DeviceDMatrix.from_batches`; incoming chunk sizes
+        are arbitrary — rows are re-chunked to `chunk_rows`).
+      chunk_rows: rows per stored chunk — the unit of device paging and the
+        bound on dense transients during construction and training.
+      max_bins: total bins per feature incl. the reserved missing bin.
+      ref: reuse another matrix's cut points (evaluation sets; overrides
+        `cuts`).
+      cuts: "sketch" (default — stream a StreamingQuantileSketch over the
+        chunks), "exact" (gather the full float matrix once and run
+        `compute_cuts`; bit-identical to the in-memory matrix, for
+        artificially chunked data and parity testing), or a precomputed
+        (n_features, n_value_bins - 1) cut array.
+      sketch_capacity: per-feature summary size for cuts="sketch".
+    """
+
+    def __init__(
+        self,
+        batches,
+        *,
+        chunk_rows: int = 65536,
+        max_bins: int = Q.DEFAULT_MAX_BINS,
+        ref=None,
+        cuts="sketch",
+        sketch_capacity: int = 1024,
+    ):
+        if chunk_rows <= 0:
+            raise ValueError(f"chunk_rows must be positive, got {chunk_rows}")
+        xs, label, groups, n_features = _collect_batches(batches)
+        n_rows = sum(c.shape[0] for c in xs)
+        xs = _rechunk(xs, chunk_rows)
+
+        if ref is not None:
+            if n_features != ref.n_features:
+                raise ValueError(
+                    f"ref has {ref.n_features} features, batches have "
+                    f"{n_features}"
+                )
+            cut_arr = ref.cuts
+            max_bins = ref.max_bins
+        elif isinstance(cuts, str):
+            if cuts == "exact":
+                cut_arr = Q.compute_cuts(
+                    jnp.asarray(np.concatenate(xs)), max_bins
+                )
+            elif cuts == "sketch":
+                sketch = Q.StreamingQuantileSketch(
+                    n_features, max_bins, capacity=sketch_capacity
+                )
+                for chunk in xs:
+                    sketch.push(chunk)
+                cut_arr = sketch.get_cuts()
+            else:
+                raise ValueError(
+                    f"cuts must be 'sketch', 'exact' or an array, got {cuts!r}"
+                )
+        else:
+            cut_arr = jnp.asarray(cuts, jnp.float32)
+            nvb = Q.n_value_bins(max_bins)
+            if cut_arr.shape != (n_features, nvb - 1):
+                raise ValueError(
+                    f"cuts must have shape ({n_features}, {nvb - 1}), "
+                    f"got {cut_arr.shape}"
+                )
+
+        # Quantise + pack chunk by chunk: the dense transients (float chunk,
+        # int32 bin chunk) are bounded by chunk_rows. Bit width is fixed
+        # from max_bins so every chunk packs identically without a second
+        # global pass over the data.
+        bits = C.bits_needed(max_bins - 1)
+        spw = C.symbols_per_word(bits)
+        words_per_chunk = -(-chunk_rows // spw)
+        host_chunks = np.zeros(
+            (len(xs), n_features, words_per_chunk), np.uint32
+        )
+        for i, chunk in enumerate(xs):
+            bins = Q.quantize(jnp.asarray(chunk), cut_arr)
+            packed = np.asarray(C.pack(bins, bits))
+            host_chunks[i, :, : packed.shape[1]] = packed
+
+        self._host_packed = host_chunks
+        self._device_stack: jax.Array | None = None
+        self.cuts = cut_arr
+        self.max_bins = max_bins
+        self.bits = bits
+        self.chunk_rows = chunk_rows
+        self.n_rows = n_rows
+        self.label = None if label is None else jnp.asarray(label, jnp.float32)
+        self.group_ids = (
+            None if groups is None else jnp.asarray(groups, jnp.int32)
+        )
+
+    @classmethod
+    def from_arrays(
+        cls, x, label=None, *, group_ids=None, chunk_rows: int = 65536, **kw
+    ) -> "ExternalDMatrix":
+        """Artificially chunk an in-memory array (tests, benchmarks, and
+        the parity check against `DeviceDMatrix`)."""
+        x = np.asarray(x, np.float32)
+
+        def batches():
+            for s in range(0, x.shape[0], chunk_rows):
+                xb = x[s : s + chunk_rows]
+                yb = None if label is None else np.asarray(label)[s : s + chunk_rows]
+                gb = None if group_ids is None else np.asarray(group_ids)[s : s + chunk_rows]
+                if gb is not None:
+                    yield xb, yb, gb
+                elif yb is not None:
+                    yield xb, yb
+                else:
+                    yield xb
+        return cls(batches(), chunk_rows=chunk_rows, **kw)
+
+    # --- surface -----------------------------------------------------------
+    @property
+    def n_chunks(self) -> int:
+        return self._host_packed.shape[0]
+
+    @property
+    def n_features(self) -> int:
+        return self._host_packed.shape[1]
+
+    @property
+    def nbytes_host(self) -> int:
+        """Host bytes held by the packed chunk stack."""
+        return self._host_packed.nbytes
+
+    @property
+    def nbytes_device(self) -> int:
+        """Device bytes currently held (0 when paged out)."""
+        if self._device_stack is None:
+            return 0
+        return int(np.prod(self._device_stack.shape)) * 4
+
+    def packed_bins(self) -> C.ChunkedPackedBins:
+        """Page the compressed chunk stack onto the device (cached) as the
+        traced representation the training scan consumes."""
+        if self._device_stack is None:
+            self._device_stack = jnp.asarray(self._host_packed)
+        return C.ChunkedPackedBins(
+            packed=self._device_stack,
+            bits=self.bits,
+            chunk_rows=self.chunk_rows,
+            n_rows=self.n_rows,
+        )
+
+    def unload(self) -> None:
+        """Drop the device copy of the chunk stack (page out). The host
+        stack is retained; the next `packed_bins()` pages back in."""
+        self._device_stack = None
+
+    def same_cuts(self, other) -> bool:
+        return cuts_equal(self.cuts, getattr(other, "cuts", None))
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (
+            f"ExternalDMatrix({self.n_rows}x{self.n_features}, "
+            f"{self.n_chunks} chunks of {self.chunk_rows} rows, "
+            f"{self.bits}-bit, {self.nbytes_host / 1e6:.2f} MB host"
+            f"{', labelled' if self.label is not None else ''})"
+        )
+
+
+def _rechunk(xs: list, chunk_rows: int) -> list:
+    """Re-slice a list of arbitrary-sized row chunks into uniform
+    chunk_rows pieces (the last may be short) without building the full
+    matrix: peak extra memory is one output chunk."""
+    out, buf, buffered = [], [], 0
+    for chunk in xs:
+        buf.append(chunk)
+        buffered += chunk.shape[0]
+        while buffered >= chunk_rows:
+            take, need = [], chunk_rows
+            while need > 0:
+                head = buf[0]
+                if head.shape[0] <= need:
+                    take.append(head)
+                    need -= head.shape[0]
+                    buf.pop(0)
+                else:
+                    take.append(head[:need])
+                    buf[0] = head[need:]
+                    need = 0
+            out.append(take[0] if len(take) == 1 else np.concatenate(take))
+            buffered -= chunk_rows
+    if buffered:
+        out.append(buf[0] if len(buf) == 1 else np.concatenate(buf))
+    return out

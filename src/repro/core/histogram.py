@@ -16,7 +16,29 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.compress import symbols_per_word
+from repro.core.compress import gather_rows_chunked, symbols_per_word
+
+
+def _scatter_rows(
+    flat: jax.Array,  # ((n_nodes + 1) * f * max_bins, 2) float32 accumulator
+    b: jax.Array,  # (rows, f) int32 bin ids
+    pos: jax.Array,  # (rows,) int32 node ids (dump slot included)
+    gh: jax.Array,  # (rows, 2) float32
+    max_bins: int,
+) -> jax.Array:
+    """Scatter one row block's (g, h) pairs into the flat histogram.
+
+    The single definition of the flat scatter index
+    ((pos * F) + f) * B + bin, shared by every builder below: the per-bin
+    f32 add order this encodes (rows outer, features inner, in block/chunk
+    order) is load-bearing for the external-memory bit-identity guarantee
+    (DESIGN.md §11) — change it in one place or not at all.
+    """
+    rows, f = b.shape
+    fidx = jnp.arange(f, dtype=jnp.int32)[None, :]
+    idx = (pos[:, None] * f + fidx) * max_bins + b
+    gh_rep = jnp.broadcast_to(gh[:, None, :], (rows, f, 2)).reshape(-1, 2)
+    return flat.at[idx.reshape(-1)].add(gh_rep, mode="drop")
 
 
 @functools.partial(jax.jit, static_argnames=("n_nodes", "max_bins"))
@@ -30,12 +52,8 @@ def build_histograms(
     """Returns hist (n_nodes, n_features, max_bins, 2) float32."""
     n, f = bins.shape
     pos = jnp.minimum(positions, n_nodes).astype(jnp.int32)
-    # Flat scatter index per (row, feature): ((pos * F) + f) * B + bin.
-    idx = (pos[:, None] * f + jnp.arange(f, dtype=jnp.int32)[None, :]) * max_bins
-    idx = idx + bins
     flat = jnp.zeros(((n_nodes + 1) * f * max_bins, 2), jnp.float32)
-    gh_rep = jnp.broadcast_to(gh[:, None, :], (n, f, 2)).reshape(-1, 2)
-    flat = flat.at[idx.reshape(-1)].add(gh_rep, mode="drop")
+    flat = _scatter_rows(flat, bins, pos, gh, max_bins)
     return flat.reshape(n_nodes + 1, f, max_bins, 2)[:n_nodes]
 
 
@@ -84,18 +102,118 @@ def build_histograms_packed(
 
     shifts = (jnp.arange(spw, dtype=jnp.uint32) * bits)[None, None, :]
     mask = jnp.uint32((1 << bits) - 1)
-    fidx = jnp.arange(f, dtype=jnp.int32)[None, :]
 
     def body(flat, chunk):
         words, g, p = chunk
         b = ((words[:, :, None] >> shifts) & mask).reshape(f, rows_pc)
         b = b.T.astype(jnp.int32)  # (rows_pc, f) — the only dense tile
-        idx = (p[:, None] * f + fidx) * max_bins + b
-        g_rep = jnp.broadcast_to(g[:, None, :], (rows_pc, f, 2)).reshape(-1, 2)
-        return flat.at[idx.reshape(-1)].add(g_rep, mode="drop"), None
+        return _scatter_rows(flat, b, p, g, max_bins), None
 
     flat = jnp.zeros(((n_nodes + 1) * f * max_bins, 2), jnp.float32)
     flat, _ = jax.lax.scan(body, flat, (packed_c, gh_c, pos_c))
+    return flat.reshape(n_nodes + 1, f, max_bins, 2)[:n_nodes]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_nodes", "max_bins", "bits", "chunk_rows", "n_rows"),
+)
+def build_histograms_chunked(
+    packed: jax.Array,  # (n_chunks, f, words_per_chunk) uint32
+    gh: jax.Array,  # (n, 2) float32
+    positions: jax.Array,  # (n,) int32 level-local node ids, n_nodes = inactive
+    n_nodes: int,
+    max_bins: int,
+    bits: int,
+    chunk_rows: int,
+    n_rows: int,
+) -> jax.Array:
+    """build_histograms over the chunk-stacked packed matrix (external-
+    memory path, DESIGN.md §11): a lax.scan over CHUNKS accumulates each
+    chunk's scatter-add into the carried flat histogram, so the dense tile
+    is bounded by one chunk and — because the carry threads the partial
+    histogram through chunks in row order, exactly like the row-block scan
+    of build_histograms_packed — the result is bit-identical to the
+    in-memory build on the same rows (per-bin f32 adds happen in the same
+    row order; chunk padding rows land in the dump slot).
+    """
+    n_chunks, f, w_c = packed.shape
+    spw = symbols_per_word(bits)
+    rows_up = w_c * spw  # unpacked rows per chunk (>= chunk_rows)
+    n_padded = n_chunks * chunk_rows
+
+    gh_c = jnp.pad(gh, ((0, n_padded - n_rows), (0, 0)))
+    gh_c = gh_c.reshape(n_chunks, chunk_rows, 2)
+    pos_c = jnp.pad(
+        jnp.minimum(positions, n_nodes).astype(jnp.int32),
+        (0, n_padded - n_rows),
+        constant_values=n_nodes,
+    ).reshape(n_chunks, chunk_rows)
+    if rows_up > chunk_rows:  # word-alignment padding rows -> dump slot
+        gh_c = jnp.pad(gh_c, ((0, 0), (0, rows_up - chunk_rows), (0, 0)))
+        pos_c = jnp.pad(
+            pos_c, ((0, 0), (0, rows_up - chunk_rows)), constant_values=n_nodes
+        )
+
+    shifts = (jnp.arange(spw, dtype=jnp.uint32) * bits)[None, None, :]
+    mask = jnp.uint32((1 << bits) - 1)
+
+    def body(flat, chunk):
+        words, g, p = chunk
+        b = ((words[:, :, None] >> shifts) & mask).reshape(f, rows_up)
+        b = b.T.astype(jnp.int32)  # (rows_up, f) — the only dense tile
+        return _scatter_rows(flat, b, p, g, max_bins), None
+
+    flat = jnp.zeros(((n_nodes + 1) * f * max_bins, 2), jnp.float32)
+    flat, _ = jax.lax.scan(body, flat, (packed, gh_c, pos_c))
+    return flat.reshape(n_nodes + 1, f, max_bins, 2)[:n_nodes]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_nodes", "max_bins", "bits", "chunk_rows", "block_rows"),
+)
+def build_histograms_chunked_rows(
+    packed: jax.Array,  # (n_chunks, f, words_per_chunk) uint32
+    gh_sel: jax.Array,  # (m, 2) float32, pre-gathered for the selected rows
+    pos_sel: jax.Array,  # (m,) int32 node ids, n_nodes = dump/padding slot
+    row_ids: jax.Array,  # (m,) int32 GLOBAL row ids (out of range = padding)
+    n_nodes: int,
+    max_bins: int,
+    bits: int,
+    chunk_rows: int,
+    block_rows: int = 65536,
+) -> jax.Array:
+    """build_histograms_packed_rows over the chunk stack: the compacted-row
+    histogram of the subtraction trick, with each row's words gathered from
+    its owning chunk. Blocking and scatter order match the flat-layout
+    version exactly, so sibling subtraction stays bit-identical between the
+    in-memory and external-memory paths.
+    """
+    _, f, _ = packed.shape
+    m = row_ids.shape[0]
+    bs = max(1, min(block_rows, m))
+    pad = (-m) % bs
+    n_chunks_scan = (m + pad) // bs
+
+    rid = jnp.pad(row_ids, (0, pad))  # gather_rows_chunked clips internally
+    pos_p = jnp.pad(
+        jnp.minimum(pos_sel, n_nodes).astype(jnp.int32),
+        (0, pad),
+        constant_values=n_nodes,
+    )
+    gh_p = jnp.pad(gh_sel, ((0, pad), (0, 0)))
+    rid_c = rid.reshape(n_chunks_scan, bs)
+    pos_c = pos_p.reshape(n_chunks_scan, bs)
+    gh_c = gh_p.reshape(n_chunks_scan, bs, 2)
+
+    def body(flat, chunk):
+        r, p, g = chunk
+        b = gather_rows_chunked(packed, bits, chunk_rows, r)  # (bs, f)
+        return _scatter_rows(flat, b, p, g, max_bins), None
+
+    flat = jnp.zeros(((n_nodes + 1) * f * max_bins, 2), jnp.float32)
+    flat, _ = jax.lax.scan(body, flat, (rid_c, pos_c, gh_c))
     return flat.reshape(n_nodes + 1, f, max_bins, 2)[:n_nodes]
 
 
@@ -140,16 +258,13 @@ def build_histograms_packed_rows(
     gh_c = gh_p.reshape(n_chunks, bs, 2)
 
     mask = jnp.uint32((1 << bits) - 1)
-    fidx = jnp.arange(f, dtype=jnp.int32)[None, :]
 
     def body(flat, chunk):
         r, p, g = chunk
         words = packed[:, r // spw]  # (f, bs) word gather
         shift = ((r % spw).astype(jnp.uint32) * jnp.uint32(bits))[None, :]
         b = ((words >> shift) & mask).T.astype(jnp.int32)  # (bs, f)
-        idx = (p[:, None] * f + fidx) * max_bins + b
-        g_rep = jnp.broadcast_to(g[:, None, :], (bs, f, 2)).reshape(-1, 2)
-        return flat.at[idx.reshape(-1)].add(g_rep, mode="drop"), None
+        return _scatter_rows(flat, b, p, g, max_bins), None
 
     flat = jnp.zeros(((n_nodes + 1) * f * max_bins, 2), jnp.float32)
     flat, _ = jax.lax.scan(body, flat, (rid_c, pos_c, gh_c))

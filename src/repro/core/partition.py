@@ -67,3 +67,38 @@ def update_positions_packed(
 
     child = jnp.where(go_left, 2 * pos + 1, 2 * pos + 2)
     return jnp.where(splits_here, child, -1).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("missing_bin", "bits", "chunk_rows", "n_rows")
+)
+def update_positions_chunked(
+    packed: jax.Array,  # (n_chunks, f, words_per_chunk) uint32
+    positions: jax.Array,  # (n,) int32 arena node ids, -1 = inactive
+    split_mask: jax.Array,  # (n_arena,) bool — nodes that split this level
+    feature: jax.Array,  # (n_arena,) int32
+    split_bin: jax.Array,  # (n_arena,) int32
+    default_left: jax.Array,  # (n_arena,) bool
+    missing_bin: int,
+    bits: int,
+    chunk_rows: int,
+    n_rows: int,
+) -> jax.Array:
+    """update_positions_packed over the chunk-stacked matrix (external-
+    memory path): a lax.scan over chunks routes each chunk's rows with that
+    chunk's words. Routing is elementwise per row, so the result is
+    bit-identical to the flat-layout version on the same rows."""
+    n_chunks = packed.shape[0]
+    pos_c = jnp.pad(
+        positions, (0, n_chunks * chunk_rows - n_rows), constant_values=-1
+    ).reshape(n_chunks, chunk_rows)
+
+    def body(carry, chunk):
+        words, p = chunk
+        return carry, update_positions_packed(
+            words, p, split_mask, feature, split_bin, default_left,
+            missing_bin, bits,
+        )
+
+    _, new_pos = jax.lax.scan(body, None, (packed, pos_c))
+    return new_pos.reshape(-1)[:n_rows]

@@ -161,6 +161,51 @@ def traverse_tree_packed(
     return _traverse((feature, default_left, leaf_value, is_leaf), Lookup(), max_depth)
 
 
+def traverse_tree_chunked(
+    feature, split_bin, default_left, leaf_value, is_leaf,
+    packed: jax.Array, bits: int, chunk_rows: int, n_rows: int,
+    missing_bin: int, max_depth: int,
+) -> jax.Array:
+    """traverse_tree_packed over the chunk-stacked matrix (external-memory
+    path): a lax.scan over chunks traverses each chunk's rows against that
+    chunk's words. Traversal is elementwise per row (gather + select), so
+    leaf outputs are bit-identical to the flat-layout version."""
+
+    def one_chunk(carry, words):
+        return carry, traverse_tree_packed(
+            feature, split_bin, default_left, leaf_value, is_leaf,
+            words, bits, chunk_rows, missing_bin, max_depth,
+        )
+
+    _, leaves = jax.lax.scan(one_chunk, None, packed)  # (n_chunks, chunk_rows)
+    return leaves.reshape(-1)[:n_rows]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "chunk_rows", "n_rows", "missing_bin", "max_depth"),
+)
+def predict_binned_chunked(
+    ens: Ensemble, packed: jax.Array, bits: int, chunk_rows: int,
+    n_rows: int, missing_bin: int, max_depth: int,
+) -> jax.Array:
+    """predict_binned straight from the chunk-stacked packed matrix."""
+
+    def one_tree(carry, t):
+        feature, split_bin, default_left, leaf_value, is_leaf = t
+        return carry, traverse_tree_chunked(
+            feature, split_bin, default_left, leaf_value, is_leaf,
+            packed, bits, chunk_rows, n_rows, missing_bin, max_depth,
+        )
+
+    _, leaves = jax.lax.scan(
+        one_tree,
+        None,
+        (ens.feature, ens.split_bin, ens.default_left, ens.leaf_value, ens.is_leaf),
+    )
+    return _fold_classes(leaves, ens, n_rows)
+
+
 @functools.partial(jax.jit, static_argnames=("missing_bin", "max_depth"))
 def predict_binned(
     ens: Ensemble, bins: jax.Array, missing_bin: int, max_depth: int

@@ -57,7 +57,7 @@ def level_offset(level: int) -> int:
 
 
 def grow_tree(
-    bins: jax.Array | C.PackedBins,  # (n, f) int32 rows OR the packed matrix
+    bins: jax.Array | C.PackedBins | C.ChunkedPackedBins,  # dense rows OR packed
     gh: jax.Array,  # (n, 2) float32
     cuts: jax.Array,  # (f, n_cuts) float32
     max_depth: int,
@@ -86,7 +86,8 @@ def grow_tree(
     all-gather of tiny per-node best-split records; row routing for a split
     owned by another shard arrives via a psum'd route vector."""
     packed_mode = isinstance(bins, C.PackedBins)
-    if packed_mode:
+    chunked_mode = isinstance(bins, C.ChunkedPackedBins)
+    if packed_mode or chunked_mode:
         if feature_axis is not None:
             raise NotImplementedError(
                 "feature-sharded growth requires dense bins (unpack per shard)"
@@ -97,7 +98,18 @@ def grow_tree(
     na = arena_size(max_depth)
     missing_bin = max_bins - 1
     if hist_builder is not None:
+        if chunked_mode:
+            raise NotImplementedError(
+                "custom/kernel hist builders are not chunk-aware; use the "
+                "default builders for external-memory training"
+            )
         build = hist_builder
+    elif chunked_mode:
+        def build(cpb, gh_, pos_, n_nodes_, max_bins_):
+            return H.build_histograms_chunked(
+                cpb.packed, gh_, pos_, n_nodes_, max_bins_,
+                cpb.bits, cpb.chunk_rows, cpb.n_rows,
+            )
     elif packed_mode:
         def build(pb, gh_, pos_, n_nodes_, max_bins_):
             return H.build_histograms_packed(
@@ -200,7 +212,12 @@ def grow_tree(
         full_feature = jnp.zeros(na, jnp.int32).at[idx].set(feature[idx])
         full_bin = jnp.zeros(na, jnp.int32).at[idx].set(split_bin[idx])
         full_dl = jnp.zeros(na, bool).at[idx].set(default_left[idx])
-        if packed_mode:
+        if chunked_mode:
+            positions = P.update_positions_chunked(
+                bins.packed, positions, split_mask, full_feature, full_bin,
+                full_dl, missing_bin, bins.bits, bins.chunk_rows, bins.n_rows,
+            )
+        elif packed_mode:
             positions = P.update_positions_packed(
                 bins.packed, positions, split_mask, full_feature, full_bin,
                 full_dl, missing_bin, bins.bits,
@@ -267,6 +284,7 @@ def _histograms_by_subtraction(
     dominant cost of a boosting round on scatter-bound backends.
     """
     packed_mode = isinstance(bins, C.PackedBins)
+    chunked_mode = isinstance(bins, C.ChunkedPackedBins)
     n = gh.shape[0]
     n_par = n_nodes // 2
     m = n // 2
@@ -291,7 +309,12 @@ def _histograms_by_subtraction(
     pos_c = parent_ext[jnp.minimum(buf, n)]
     gh_c = gh[jnp.minimum(buf, n - 1)]
 
-    if packed_mode:
+    if chunked_mode:
+        hist_small = H.build_histograms_chunked_rows(
+            bins.packed, gh_c, pos_c, buf, n_par, max_bins, bins.bits,
+            bins.chunk_rows, block_rows=hist_block_rows,
+        )
+    elif packed_mode:
         hist_small = H.build_histograms_packed_rows(
             bins.packed, gh_c, pos_c, buf, n_par, max_bins, bins.bits,
             block_rows=hist_block_rows,

@@ -15,7 +15,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import compress as C
 from repro.kernels.histogram import histogram_packed

@@ -4,7 +4,6 @@ Each kernel's tests sweep shapes/dtypes and assert_allclose against these.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

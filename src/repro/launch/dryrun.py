@@ -22,7 +22,6 @@ NOTE the XLA_FLAGS line above MUST precede any jax import (device count is
 locked at first init); this module is the only place it is set.
 """
 import argparse
-import dataclasses
 import json
 import time
 import traceback

@@ -20,12 +20,11 @@ the roofline terms. Usage:
   python -m repro.launch.dryrun_gbdt [--rows 1048576] [--features 13]
 """
 import argparse
-import functools
 import json
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.core import objectives as O
 from repro.core import tree as T

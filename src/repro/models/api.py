@@ -17,7 +17,7 @@ src_embeds (audio/encdec).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable
+from typing import Callable
 
 import jax.numpy as jnp
 
@@ -26,7 +26,7 @@ from repro.models import encdec as ED
 from repro.models import hybrid as HY
 from repro.models import ssm_model as SM
 from repro.models import transformer as TF
-from repro.models.transformer import NO_SHARDING, ShardingRules  # re-export
+from repro.models.transformer import NO_SHARDING, ShardingRules  # noqa: F401 (re-export)
 
 
 @dataclass(frozen=True)

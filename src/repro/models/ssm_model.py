@@ -10,7 +10,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.models.config import ArchConfig
-from repro.models.layers import BF16, dot, dot_f32, rmsnorm
+from repro.models.layers import BF16, dot_f32, rmsnorm
 from repro.models import ssm as SSM
 from repro.models import transformer as TF
 

@@ -17,7 +17,6 @@ with_sharding_constraint using the specs in ShardingRules.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 
 import jax
@@ -34,7 +33,6 @@ from repro.models.layers import (
     rmsnorm,
 )
 from repro.models.moe import moe_ffn
-from repro.models import ssm as SSM
 
 
 @dataclass(frozen=True)

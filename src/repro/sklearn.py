@@ -80,7 +80,7 @@ except ImportError:  # pragma: no cover - exercised on minimal installs
             return float(np.mean(np.asarray(self.predict(X)) == np.asarray(y)))
 
 
-from repro.core import Booster, BoosterConfig, DeviceDMatrix
+from repro.core import Booster, BoosterConfig, DeviceDMatrix, ExternalDMatrix
 
 
 class _BoosterEstimator(BaseEstimator):
@@ -107,6 +107,7 @@ class _BoosterEstimator(BaseEstimator):
         early_stopping_rounds: int | None = None,
         quantile_alpha: float = 0.5,
         verbose: int = 0,
+        chunk_rows: int | None = None,
     ):
         self.n_estimators = n_estimators
         self.learning_rate = learning_rate
@@ -122,6 +123,10 @@ class _BoosterEstimator(BaseEstimator):
         self.early_stopping_rounds = early_stopping_rounds
         self.quantile_alpha = quantile_alpha
         self.verbose = verbose
+        # chunk_rows=None trains in-memory; an int routes the training set
+        # through ExternalDMatrix (chunked, external-memory path) so fits
+        # bound dense device transients by one chunk (DESIGN.md §11).
+        self.chunk_rows = chunk_rows
 
     # --- fit plumbing ------------------------------------------------------
     def _fit_objective(self, y: np.ndarray) -> tuple[str, int, np.ndarray]:
@@ -148,8 +153,13 @@ class _BoosterEstimator(BaseEstimator):
     def _fit(self, X, y, eval_set=None, group_ids=None, eval_group_ids=None):
         X = np.asarray(X, np.float32)
         objective, n_classes, y_enc = self._fit_objective(y)
-        dtrain = DeviceDMatrix(X, label=y_enc, group_ids=group_ids,
-                               max_bins=self.max_bins)
+        if self.chunk_rows is not None:
+            dtrain = ExternalDMatrix.from_arrays(
+                X, y_enc, group_ids=group_ids, chunk_rows=self.chunk_rows,
+                max_bins=self.max_bins)
+        else:
+            dtrain = DeviceDMatrix(X, label=y_enc, group_ids=group_ids,
+                                   max_bins=self.max_bins)
         evals = []
         for i, (xv, yv) in enumerate(eval_set or ()):
             gv = None if eval_group_ids is None else eval_group_ids[i]

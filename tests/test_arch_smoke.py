@@ -4,7 +4,6 @@ step on CPU; output shapes asserted, no NaNs. Full configs are exercised
 only by the dry-run (launch/dryrun.py, ShapeDtypeStruct, no allocation)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import ARCHS, get_arch

@@ -5,7 +5,6 @@ import pytest
 
 from repro.core import BoosterConfig, train, predict_proba, predict_margins
 from repro.core import get_metric
-from repro.core import objectives as O
 
 
 @pytest.fixture(scope="module")

@@ -1,7 +1,6 @@
 """Paper §2.2: bit-packed compression — roundtrip + ratio properties."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import compress as C

@@ -1,7 +1,7 @@
 """Data pipeline: paper-dataset generators + LM token stream."""
 import numpy as np
 
-from repro.data import DATASETS, TokenStream, dataset_spec, make_dataset
+from repro.data import DATASETS, TokenStream, make_dataset
 
 
 def test_specs_match_paper_table1():

@@ -1,7 +1,5 @@
 """Launch-layer logic that needs no devices: shape support rules, cache
 capacities, sliding-window gating, HLO text parsing, roofline math."""
-import jax.numpy as jnp
-import pytest
 
 from repro.configs import ARCHS, get_arch
 from repro.launch import specs as SP
@@ -91,7 +89,6 @@ def test_batch_partition_specs_shapes():
     from repro.launch.mesh import batch_axes
     cfg = get_arch("phi-3-vision-4.2b")
     shape = SHAPES["train_4k"]
-    rules = SP.rules_for.__wrapped__ if hasattr(SP.rules_for, "__wrapped__") else None
     # build rules without a mesh: emulate single-pod axes
     from repro.models.transformer import ShardingRules
     r = ShardingRules(batch=("data",), model="model", seq=None)

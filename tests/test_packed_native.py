@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import BoosterConfig, train, predict_margins
+from repro.core import BoosterConfig, train
 from repro.core import booster as B
 from repro.core import compress as C
 from repro.core import objectives as O

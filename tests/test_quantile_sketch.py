@@ -1,0 +1,181 @@
+"""Streaming quantile sketch (external-memory cut generation, DESIGN.md §11).
+
+Property tests: merge-order invariance in the exact (unpruned) regime,
+rank-error bounds vs exact quantiles under pruning, equivalence with
+compute_cuts when the summary is exact, and degenerate/constant features.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import quantile as Q
+
+
+def _chunks(x, sizes):
+    out, start = [], 0
+    for s in sizes:
+        out.append(x[start : start + s])
+        start += s
+    assert start == x.shape[0]
+    return out
+
+
+def test_exact_regime_matches_compute_cuts(rng):
+    """With capacity above the distinct-value count the sketch is exact and
+    reproduces compute_cuts' interpolation: cuts agree to float32 round-off
+    and quantisation agrees everywhere."""
+    n, f = 1500, 6
+    x = rng.normal(size=(n, f)).astype(np.float32)
+    x[:, 3] = 2.5  # constant feature
+    x[rng.random((n, f)) < 0.03] = np.nan
+    x[:, 4] = np.nan  # all-missing feature
+    x[:, 5] = rng.integers(0, 3, n)  # low cardinality
+
+    exact = np.asarray(Q.compute_cuts(jnp.asarray(x), 256))
+    sk = Q.StreamingQuantileSketch(f, 256, capacity=4096)
+    for chunk in _chunks(x, [400, 400, 400, 300]):
+        sk.push(chunk)
+    sketch = np.asarray(sk.get_cuts())
+
+    assert np.allclose(exact, sketch, rtol=1e-6, atol=0, equal_nan=True)
+    bins_exact = np.asarray(Q.quantize(jnp.asarray(x), jnp.asarray(exact)))
+    bins_sketch = np.asarray(Q.quantize(jnp.asarray(x), jnp.asarray(sketch)))
+    np.testing.assert_array_equal(bins_exact, bins_sketch)
+
+
+def test_merge_order_invariance_exact_regime(rng):
+    """Merging exact summaries is exact, so any merge order produces
+    bitwise-identical cuts."""
+    n, f = 1200, 5
+    x = rng.normal(size=(n, f)).astype(np.float32)
+    parts = _chunks(x, [500, 400, 300])
+    sketches = []
+    for part in parts:
+        sk = Q.StreamingQuantileSketch(f, 128, capacity=4096)
+        sk.push(part)
+        sketches.append(sk)
+
+    def merged(order):
+        acc = Q.StreamingQuantileSketch(f, 128, capacity=4096)
+        for i in order:
+            acc.merge(sketches[i])
+        return np.asarray(acc.get_cuts())
+
+    a = merged([0, 1, 2])
+    b = merged([2, 0, 1])
+    c = merged([1, 2, 0])
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(a, c)
+    # push-streaming the same chunks in order agrees too
+    streamed = Q.StreamingQuantileSketch(f, 128, capacity=4096)
+    for part in parts:
+        streamed.push(part)
+    np.testing.assert_array_equal(a, np.asarray(streamed.get_cuts()))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_rank_error_bound_under_pruning(seed):
+    """Every summary entry's rank uncertainty stays within a small multiple
+    of total/capacity after many merge+prune cycles, and querying any rank
+    lands within that bound of the true order statistic."""
+    rng = np.random.default_rng(seed)
+    n, capacity, n_chunks = 40000, 256, 10
+    col = (rng.standard_normal(n) ** 3).astype(np.float32)
+    sk = Q.StreamingQuantileSketch(1, 256, capacity=capacity)
+    for chunk in np.array_split(col, n_chunks):
+        sk.push(chunk[:, None])
+    srt = np.sort(col)
+    eps = 2.0 * n_chunks / capacity  # empirical GK-style bound w/ headroom
+    for frac in np.linspace(0.02, 0.98, 25):
+        r = frac * (n - 1)
+        v = Q._value_at_rank(sk._summaries[0], np.asarray([r]))[0]
+        true_rank = np.searchsorted(srt, v)
+        assert abs(true_rank - r) <= eps * n, (frac, true_rank, r)
+
+
+def test_bin_mass_balance_under_pruning(rng):
+    """Cuts from a heavily pruned sketch still produce roughly equal-mass
+    bins: no bin hoards more than a few times the ideal mass."""
+    n = 50000
+    col = (rng.standard_normal(n) ** 3).astype(np.float32)
+    sk = Q.StreamingQuantileSketch(1, 256, capacity=256)
+    for chunk in np.array_split(col, 10):
+        sk.push(chunk[:, None])
+    cuts = np.asarray(sk.get_cuts())[0]
+    finite = cuts[np.isfinite(cuts)]
+    assert len(finite) > 100  # the used prefix is substantial
+    mass = np.bincount(
+        np.searchsorted(finite, col, side="left"), minlength=len(finite) + 1
+    )
+    assert mass.max() / n <= 1 / Q.n_value_bins(256) + 10 / 256
+
+
+def test_constant_and_degenerate_features(rng):
+    """Constant / all-missing / single-row features match compute_cuts."""
+    n = 800
+    x = np.zeros((n, 3), np.float32)
+    x[:, 0] = 7.25
+    x[:, 1] = np.nan
+    x[:, 2] = np.where(rng.random(n) < 0.5, -1.0, 3.0)
+    exact = np.asarray(Q.compute_cuts(jnp.asarray(x), 64))
+    sk = Q.StreamingQuantileSketch(3, 64, capacity=512)
+    for chunk in np.array_split(x, 4):
+        sk.push(chunk)
+    np.testing.assert_array_equal(exact, np.asarray(sk.get_cuts()))
+    # constant feature: exactly one finite cut at the value
+    cuts0 = np.asarray(sk.get_cuts())[0]
+    assert cuts0[0] == np.float32(7.25) and np.all(np.isinf(cuts0[1:]))
+    # all-missing: no finite cuts
+    assert np.all(np.isinf(np.asarray(sk.get_cuts())[1]))
+
+
+def test_weighted_sketch_tracks_weighted_quantiles(rng):
+    """Weights shift the cut mass: doubling the weight of the upper half
+    moves the median cut into it."""
+    n = 8000
+    col = np.sort(rng.standard_normal(n).astype(np.float32))
+    w = np.ones(n)
+    w[n // 2 :] = 3.0  # upper half worth 3x
+    sk = Q.StreamingQuantileSketch(1, 4, capacity=2048)  # 3 value bins
+    for chunk_x, chunk_w in zip(np.array_split(col, 5), np.array_split(w, 5)):
+        sk.push(chunk_x[:, None], weights=chunk_w)
+    cuts = np.asarray(sk.get_cuts())[0]
+    # total mass = 2n; the 1/3 cut sits near weighted rank 2n/3 -> the
+    # unweighted median region, well above the unweighted 1/3 quantile.
+    assert cuts[0] > col[int(0.45 * n)]
+
+
+def test_push_and_merge_validation():
+    sk = Q.StreamingQuantileSketch(3, 64, capacity=64)
+    with pytest.raises(ValueError, match="rows, 3"):
+        sk.push(np.zeros((5, 4), np.float32))
+    with pytest.raises(ValueError, match="weights"):
+        sk.push(np.zeros((5, 3), np.float32), weights=np.ones(4))
+    other = Q.StreamingQuantileSketch(2, 64, capacity=64)
+    with pytest.raises(ValueError, match="disagree"):
+        sk.merge(other)
+    with pytest.raises(TypeError):
+        sk.merge(np.zeros(3))
+    with pytest.raises(ValueError, match="capacity"):
+        Q.StreamingQuantileSketch(3, 64, capacity=2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    max_bins=st.sampled_from([16, 64, 256]),
+)
+def test_cuts_shape_and_monotone(seed, max_bins):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(300, 2)).astype(np.float32)
+    sk = Q.StreamingQuantileSketch(2, max_bins, capacity=64)
+    for chunk in np.array_split(x, 3):
+        sk.push(chunk)
+    cuts = np.asarray(sk.get_cuts())
+    nvb = Q.n_value_bins(max_bins)
+    assert cuts.shape == (2, nvb - 1)
+    assert cuts.dtype == np.float32
+    finite = np.where(np.isfinite(cuts), cuts, np.inf)
+    assert np.all(np.diff(finite, axis=1) >= 0)

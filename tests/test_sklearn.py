@@ -161,3 +161,17 @@ def test_sklearn_clone_contract():
     est = XGBClassifier(n_estimators=5, max_depth=2, eval_metric=["auc"])
     c = clone(est)
     assert c.get_params() == est.get_params()
+
+
+def test_chunk_rows_external_memory_fit(cls_data):
+    """chunk_rows= routes training through ExternalDMatrix and matches the
+    in-memory estimator bit for bit (exact-cuts chunking is artificial, but
+    sketch cuts differ only in binning, so compare predictions loosely)."""
+    x, yc = cls_data
+    mem = XGBClassifier(n_estimators=8, max_depth=3, max_bins=32).fit(x, yc)
+    ext = XGBClassifier(n_estimators=8, max_depth=3, max_bins=32,
+                        chunk_rows=100).fit(x, yc)
+    assert ext.booster_.matrix is None  # no flat matrix was ever built
+    agree = np.mean(ext.predict(x) == mem.predict(x))
+    assert agree > 0.95
+    assert ext.score(x, yc) > 0.85

@@ -1,9 +1,6 @@
 """End-to-end behaviour of the paper's system (Figure 1 pipeline) plus the
 framework glue: launcher drivers, flash attention, input specs."""
-import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import BoosterConfig, train, predict_proba
 from repro.data import make_dataset

@@ -1,5 +1,4 @@
 """Tree growth (Algorithm 1) + prediction (§2.4)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 
