@@ -26,6 +26,11 @@ tracked across PRs (EXPERIMENTS.md §Perf):
    chunks pipeline end to end, plus a chunk-size sweep at the single-shot
    size.
 
+5. Stochastic — warm per-round time at subsample in {1.0, 0.5, 0.25} and
+   colsample_bytree=0.5 (ISSUE 5): subsampled rounds histogram a
+   statically-shaped compacted row buffer, so per-round time should fall
+   roughly with the subsample fraction.
+
 `--sections` runs a subset (e.g. only external_memory) and MERGES the
 result into an existing --out file, so the artifact of record can be
 refreshed incrementally.
@@ -144,7 +149,7 @@ def _make_seed_dense_round(cfg, obj, cuts, n_rows, bits):
             feature=tr.feature[None], split_bin=tr.split_bin[None],
             threshold=tr.threshold[None], default_left=tr.default_left[None],
             leaf_value=tr.leaf_value[None], is_leaf=tr.is_leaf[None],
-            n_classes=1, base_score=0.0,
+            gain=tr.gain[None], n_classes=1, base_score=0.0,
         )
         delta = PR.predict_binned(ens1, bins, mb, cfg.max_depth)[:, 0]
         new_margins = margins.at[:, 0].add(cfg.learning_rate * delta)
@@ -384,7 +389,49 @@ def external_memory_split(rows, features, max_bins, max_depth, n_rounds,
     return out
 
 
-SECTIONS = ("phases", "api", "round_loop", "objectives", "external_memory")
+STOCH_ROWS_CAP = 250_000  # keep the 4-config stochastic sweep tractable
+
+
+def stochastic_split(xj, yj, max_bins, max_depth, n_rounds):
+    """Warm per-round fit time of the compiled stochastic scan: row
+    subsampling rides the compacted-row histogram path, so per-round time
+    should fall roughly with the subsample fraction; colsample_bytree only
+    thins split evaluation (histograms are still built for every feature),
+    so it stays near the deterministic baseline. The deterministic
+    subsample=1.0 row doubles as the regression anchor for the section."""
+    cap = min(STOCH_ROWS_CAP, xj.shape[0])
+    xr, yr = xj[:cap], yj[:cap]
+    dtrain = DeviceDMatrix(xr, label=yr, max_bins=max_bins)
+    jax.block_until_ready(dtrain.matrix.packed)
+
+    # Keys are dot-free so check_regression.py's dotted-path lookup works.
+    configs = [
+        ("subsample_100", {}),
+        ("subsample_50", {"subsample": 0.5}),
+        ("subsample_25", {"subsample": 0.25}),
+        ("colsample_bytree_50", {"colsample_bytree": 0.5}),
+    ]
+    out = {"rows": cap}
+    for name, kw in configs:
+        def fit_once():
+            bst = Booster(n_rounds=n_rounds, max_depth=max_depth,
+                          max_bins=max_bins, objective="binary:logistic",
+                          seed=0, **kw)
+            t0 = time.perf_counter()
+            bst.fit(dtrain)
+            jax.block_until_ready(bst.margins)
+            return time.perf_counter() - t0
+
+        fit_once()  # compile
+        out[name] = {"per_round_s": fit_once() / n_rounds, **kw}
+    base = out["subsample_100"]["per_round_s"]
+    for name, _ in configs[1:]:
+        out[name]["speedup_vs_deterministic"] = base / out[name]["per_round_s"]
+    return out
+
+
+SECTIONS = ("phases", "api", "round_loop", "objectives", "external_memory",
+            "stochastic")
 
 
 def run(rows, features, max_bins, max_depth, n_rounds,
@@ -409,6 +456,9 @@ def run(rows, features, max_bins, max_depth, n_rounds,
         if "objectives" in sections:
             result["objectives"] = objectives_split(xj, max_bins, max_depth,
                                                     n_rounds)
+        if "stochastic" in sections:
+            result["stochastic"] = stochastic_split(xj, yj, max_bins,
+                                                    max_depth, n_rounds)
         del xj, yj, x, y
     if "external_memory" in sections:
         ext_rows = external_rows or 4 * rows
@@ -481,6 +531,9 @@ def main(argv=None):
         print(f"{k},{v}")
     for k, v in r.get("objectives", {}).items():
         print(f"objective_{k}_per_round_s,{v['per_round_s']:.4f}")
+    for k, v in r.get("stochastic", {}).items():
+        if isinstance(v, dict):
+            print(f"stochastic_{k}_per_round_s,{v['per_round_s']:.4f}")
     for k, v in r.get("external_memory", {}).items():
         print(f"external_{k},{v}")
     with open(args.out, "w") as f:

@@ -68,18 +68,26 @@ def load_pytree(path: str):
         return _decode(msgpack.unpackb(f.read(), raw=False, strict_map_key=False))
 
 
+def _ensemble_fields_with_gain(fields: dict) -> dict:
+    """Backfill `gain` for checkpoints written before gains were stored in
+    the arena (importances on such models report zeros — -inf marks every
+    slot as "not a known split")."""
+    if "gain" not in fields:
+        fields = dict(fields)
+        fields["gain"] = jnp.full(
+            np.asarray(fields["leaf_value"]).shape, -jnp.inf, jnp.float32
+        )
+    return fields
+
+
 def save_ensemble(path: str, ens) -> None:
-    from repro.core.predict import Ensemble
+    from repro.core.predict import _ENSEMBLE_ARRAY_FIELDS, Ensemble
 
     assert isinstance(ens, Ensemble)
     save_pytree(
         path,
         {
-            "fields": {
-                k: getattr(ens, k)
-                for k in ("feature", "split_bin", "threshold", "default_left",
-                          "leaf_value", "is_leaf")
-            },
+            "fields": {k: getattr(ens, k) for k in _ENSEMBLE_ARRAY_FIELDS},
             "n_classes": ens.n_classes,
             "base_score": ens.base_score,
         },
@@ -90,7 +98,8 @@ def load_ensemble(path: str):
     from repro.core.predict import Ensemble
 
     d = load_pytree(path)
-    return Ensemble(**d["fields"], n_classes=d["n_classes"], base_score=d["base_score"])
+    return Ensemble(**_ensemble_fields_with_gain(d["fields"]),
+                    n_classes=d["n_classes"], base_score=d["base_score"])
 
 
 # --- self-describing Booster checkpoints -----------------------------------
@@ -183,7 +192,7 @@ def load_booster(path: str):
     bst.n_rounds_trained = d["n_rounds_trained"]
     bst.history = d["history"]
     bst.ensemble = Ensemble(
-        **d["ensemble"]["fields"],
+        **_ensemble_fields_with_gain(d["ensemble"]["fields"]),
         n_classes=d["ensemble"]["n_classes"],
         base_score=d["base_score"],
     )

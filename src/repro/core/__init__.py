@@ -30,6 +30,7 @@ from repro.core.objectives import (
     register_objective,
 )
 from repro.core.quantile import compute_cuts, quantize
+from repro.core.sampling import StochasticParams, TreeContext
 from repro.core.split import SplitParams
 from repro.core.tree import Tree, grow_tree
 from repro.core.predict import (
@@ -66,7 +67,9 @@ __all__ = [
     "compute_cuts",
     "quantize",
     "SplitParams",
+    "StochasticParams",
     "Tree",
+    "TreeContext",
     "grow_tree",
     "Ensemble",
     "concat_ensembles",

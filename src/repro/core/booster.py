@@ -62,6 +62,7 @@ from repro.core import compress as C
 from repro.core import metrics as M
 from repro.core import objectives as O
 from repro.core import quantile as Q
+from repro.core import sampling as SMP
 from repro.core import split as S
 from repro.core import tree as T
 from repro.core import predict as PR
@@ -85,6 +86,29 @@ class BoosterConfig:
     use_kernel_histograms: bool = False  # route through the Pallas kernel path
     compress_matrix: bool = True  # paper §2.2 (False = raw int32 bins)
     hist_block_rows: int = 65536  # packed-histogram fallback dense-tile bound
+    # Stochastic regularisers + constraints (DESIGN.md §12). All-default
+    # values select the exact deterministic pre-stochastic program.
+    subsample: float = 1.0  # per-tree row fraction (static round(n*s) buffer)
+    colsample_bytree: float = 1.0  # per-tree feature fraction
+    colsample_bylevel: float = 1.0  # per-level fraction OF the tree's set
+    colsample_bynode: float = 1.0  # per-node fraction OF the level's set
+    monotone_constraints: tuple | None = None  # per-feature {-1, 0, +1}
+    seed: int = 0  # PRNG seed; keys fold as (seed, round, class, site)
+
+    def __post_init__(self):
+        mc = self.monotone_constraints
+        if mc is not None:
+            mc = tuple(int(c) for c in mc)  # hashable (lists/arrays coerce)
+            object.__setattr__(self, "monotone_constraints", mc)
+            if any(c not in (-1, 0, 1) for c in mc):
+                raise ValueError(
+                    f"monotone_constraints must be -1/0/+1, got {mc}"
+                )
+        for knob in ("subsample", "colsample_bytree", "colsample_bylevel",
+                     "colsample_bynode"):
+            v = getattr(self, knob)
+            if not 0.0 < v <= 1.0:
+                raise ValueError(f"{knob} must be in (0, 1], got {v}")
 
     @property
     def split_params(self) -> S.SplitParams:
@@ -145,16 +169,42 @@ def _round_step_fn(cfg: BoosterConfig, obj: O.Objective, hist_builder=None):
     """One boosting round: gradients -> K trees -> margins. Pure (not jit'd
     on its own) so it can be the body of the training scan. `cuts` is an
     argument, not a closure, so compiled train functions can be cached by
-    static config alone and reused across DeviceDMatrices."""
-    k = obj.n_outputs(cfg.n_classes)
+    static config alone and reused across DeviceDMatrices.
 
-    def round_step(data, margins, y, extra, cuts):
+    With stochastic knobs active (DESIGN.md §12) the per-round PRNG key
+    `rkey` (folded from (seed, round) by the scan body) is folded per class
+    tree and drives row/column sampling INSIDE the compiled program; the
+    per-tree row buffer is compacted statically so a subsampled round does
+    proportionally less scatter work. Kernel hist builders aren't
+    row-subset aware, so they fall back to masked-mode subsampling."""
+    k = obj.n_outputs(cfg.n_classes)
+    stoch = SMP.stochastic_params(cfg)
+    compact_rows = hist_builder is None
+
+    def round_step(data, margins, y, extra, cuts, rkey=None):
+        if stoch is not None and rkey is None:
+            raise ValueError(
+                "this config has stochastic knobs (subsample/colsample/"
+                "monotone or non-default seed use) — the round step needs "
+                "a per-round PRNG key (rkey)"
+            )
         gh_all = obj.grad(margins, y, **extra)  # (n, k, 2)
+        n_features = (
+            data.n_features if isinstance(data, (C.PackedBins, C.ChunkedPackedBins))
+            else data.shape[1]
+        )
         trees = []
         for c in range(k):
+            gh_c = gh_all[:, c, :]
+            ctx = None
+            if stoch is not None:
+                ctx, gh_c = SMP.make_tree_context(
+                    stoch, jax.random.fold_in(rkey, c), gh_c, n_features,
+                    compact=compact_rows,
+                )
             tr = T.grow_tree(
                 data,
-                gh_all[:, c, :],
+                gh_c,
                 cuts,
                 cfg.max_depth,
                 cfg.max_bins,
@@ -163,6 +213,7 @@ def _round_step_fn(cfg: BoosterConfig, obj: O.Objective, hist_builder=None):
                 max_leaves=cfg.max_leaves or 2**cfg.max_depth,
                 hist_builder=hist_builder,
                 hist_block_rows=cfg.hist_block_rows,
+                ctx=ctx,
             )
             # Materialise the tree arrays before they fan out to the margin
             # update: without the barrier XLA may rematerialise leaf-value
@@ -181,11 +232,12 @@ def _round_step_fn(cfg: BoosterConfig, obj: O.Objective, hist_builder=None):
 def _make_round_step(cfg: BoosterConfig, obj: O.Objective, cuts: jax.Array,
                      hist_builder=None):
     """Round step with `cuts` bound (the jaxpr-discipline tests and phase
-    benchmarks inspect this closed form)."""
+    benchmarks inspect this closed form). Stochastic configs must pass the
+    per-round key: `round_step(data, margins, y, extra, rkey=...)`."""
     step = _round_step_fn(cfg, obj, hist_builder)
 
-    def round_step(data, margins, y, extra):
-        return step(data, margins, y, extra, cuts)
+    def round_step(data, margins, y, extra, rkey=None):
+        return step(data, margins, y, extra, cuts, rkey)
 
     return round_step
 
@@ -211,6 +263,13 @@ def _make_train_fn(cfg: BoosterConfig, obj: O.Objective, cuts: jax.Array,
        train_metrics tuple-per-metric of (n_rounds,), final_eval_margins,
        eval_metrics tuple-per-set of tuple-per-metric of (n_rounds,))
 
+    With stochastic knobs in cfg the returned function instead takes
+      (base_key, start_round, data, margins0, y, extra, ...)
+    where start_round is the ABSOLUTE index of the first round — the scan
+    folds (base_key, round) per step, so ES chunks and update()
+    continuation replay one long fit's key stream (see _run_rounds'
+    run_chunk, the only internal caller).
+
     Eval sets ride inside the scan: eval_data is a tuple of PackedBins
     (quantised with the TRAINING cuts), their margins are carried next to
     the training margins, and EVERY requested metric of every eval set
@@ -220,16 +279,16 @@ def _make_train_fn(cfg: BoosterConfig, obj: O.Objective, cuts: jax.Array,
     length = cfg.n_rounds if n_rounds is None else n_rounds
     key = (cfg, obj, hist_builder, metrics, track_metric, length)
     jitted = _TRAIN_FN_CACHE.get(key)
+    stoch = SMP.stochastic_params(cfg)
     if jitted is None:
         round_step = _round_step_fn(cfg, obj, hist_builder)
 
-        @jax.jit
-        def train_fn(cuts, data, margins0, y, extra, eval_data=(),
-                     eval_margins0=(), eval_y=(), eval_extra=()):
-            def body(carry, _):
+        def _make_body(data, y, extra, eval_data, eval_y, eval_extra, cuts,
+                       rkey_of):
+            def body(carry, x):
                 margins, ev = carry
                 stacked, new_margins = round_step(data, margins, y, extra,
-                                                  cuts)
+                                                  cuts, rkey_of(x))
                 new_ev, ev_metrics = [], []
                 for pb, em, ey, ex in zip(eval_data, ev, eval_y, eval_extra):
                     em = _apply_stacked_trees(cfg, stacked, pb, em)
@@ -244,11 +303,35 @@ def _make_train_fn(cfg: BoosterConfig, obj: O.Objective, cuts: jax.Array,
                 ) if track_metric else ()
                 return (new_margins, tuple(new_ev)), (stacked, tr_metrics,
                                                       tuple(ev_metrics))
+            return body
 
-            (margins, ev), (all_trees, tr_metrics, ev_metrics) = jax.lax.scan(
-                body, (margins0, tuple(eval_margins0)), None, length=length
-            )
-            return margins, all_trees, tr_metrics, ev, ev_metrics
+        if stoch is None:
+            @jax.jit
+            def train_fn(cuts, data, margins0, y, extra, eval_data=(),
+                         eval_margins0=(), eval_y=(), eval_extra=()):
+                body = _make_body(data, y, extra, eval_data, eval_y,
+                                  eval_extra, cuts, lambda _: None)
+                (margins, ev), (all_trees, tr_metrics, ev_metrics) = \
+                    jax.lax.scan(body, (margins0, tuple(eval_margins0)),
+                                 None, length=length)
+                return margins, all_trees, tr_metrics, ev, ev_metrics
+        else:
+            # Stochastic variant: the base PRNG key and the ABSOLUTE first
+            # round index ride in as traced args; the scan folds
+            # (key, round) per step so ES chunking and update() continuation
+            # replay the identical key stream as one long fit.
+            @jax.jit
+            def train_fn(cuts, base_key, start_round, data, margins0, y,
+                         extra, eval_data=(), eval_margins0=(), eval_y=(),
+                         eval_extra=()):
+                body = _make_body(
+                    data, y, extra, eval_data, eval_y, eval_extra, cuts,
+                    lambda r: jax.random.fold_in(base_key, r),
+                )
+                xs = start_round + jnp.arange(length, dtype=jnp.int32)
+                (margins, ev), (all_trees, tr_metrics, ev_metrics) = \
+                    jax.lax.scan(body, (margins0, tuple(eval_margins0)), xs)
+                return margins, all_trees, tr_metrics, ev, ev_metrics
 
         jitted = _TRAIN_FN_CACHE[key] = train_fn
     return functools.partial(jitted, cuts)
@@ -504,6 +587,12 @@ class Booster:
                 "max_bins (bin-space thresholds and the reserved missing bin "
                 "must agree)"
             )
+        if cfg.monotone_constraints is not None \
+                and len(cfg.monotone_constraints) != dtrain.n_features:
+            raise ValueError(
+                f"monotone_constraints has {len(cfg.monotone_constraints)} "
+                f"entries but dtrain has {dtrain.n_features} features"
+            )
         evals = self._normalise_evals(evals, dtrain)
         record_every = verbose_every or (1 if (callback or evals) else 0)
         track_metric = record_every > 0
@@ -517,6 +606,8 @@ class Booster:
         else:
             margins = self._initial_margins(dtrain)
         extra = self._dataset_extra(dtrain)
+        stoch = SMP.stochastic_params(cfg)
+        base_key = jax.random.PRNGKey(cfg.seed) if stoch is not None else None
         eval_pbs = tuple(d.packed_bins() for d, _ in evals)
         eval_ys = tuple(d.label for d, _ in evals)
         eval_extras = tuple(self._dataset_extra(d) for d, _ in evals)
@@ -561,14 +652,18 @@ class Booster:
                 )
             fns: dict[int, Callable] = {}
 
-            def run_chunk(length, margins, eval_margins):
+            def run_chunk(length, start_round, margins, eval_margins):
                 fn = fns.get(length)
                 if fn is None:
                     fn = fns[length] = _make_train_fn(
                         cfg, obj, self.cuts, hist_builder, metrics,
                         track_metric, n_rounds=length,
                     )
-                return fn(data, margins, y, extra, eval_pbs, eval_margins,
+                if stoch is None:
+                    return fn(data, margins, y, extra, eval_pbs,
+                              eval_margins, eval_ys, eval_extras)
+                return fn(base_key, jnp.asarray(start_round, jnp.int32),
+                          data, margins, y, extra, eval_pbs, eval_margins,
                           eval_ys, eval_extras)
 
         # Early stopping runs the scan in compiled chunks of e rounds with
@@ -576,6 +671,7 @@ class Booster:
         es_on = bool(early_stopping_rounds) and bool(evals)
         chunk = min(early_stopping_rounds, n_rounds) if es_on else n_rounds
         trees_chunks, metric_chunks, ev_metric_chunks = [], [], []
+        rounds_before = self.n_rounds_trained  # absolute round offset (keys)
         trained = 0
         es_history: list[float] = []
         best_round: int | None = None
@@ -583,7 +679,8 @@ class Booster:
         while trained < n_rounds and not stopped:
             length = min(chunk, n_rounds - trained)
             margins, all_trees, tr_metrics, eval_margins, ev_metrics = \
-                run_chunk(length, margins, eval_margins)
+                run_chunk(length, rounds_before + trained, margins,
+                          eval_margins)
             trees_chunks.append(all_trees)
             metric_chunks.append(tr_metrics)
             ev_metric_chunks.append(ev_metrics)
@@ -600,7 +697,6 @@ class Booster:
                     stopped = True
         jax.block_until_ready(margins)
 
-        rounds_before = self.n_rounds_trained
         if len(trees_chunks) == 1:
             all_trees = trees_chunks[0]
         else:
@@ -621,6 +717,7 @@ class Booster:
             default_left=all_trees.default_left.reshape(-1, arena),
             leaf_value=all_trees.leaf_value.reshape(-1, arena),
             is_leaf=all_trees.is_leaf.reshape(-1, arena),
+            gain=all_trees.gain.reshape(-1, arena),
             n_classes=k,
             base_score=self.base_score,
         )
@@ -719,6 +816,43 @@ class Booster:
             f"{name}_{m.name}": float(m.fn(margins, dmat.label, **extra))
             for m in resolved
         }
+
+    def feature_importances(self, importance_type: str = "gain") -> np.ndarray:
+        """Per-feature importance over the fitted ensemble, from the split
+        gains stored in the tree arenas (a split node is any arena slot
+        with finite gain; leaves and inactive slots carry -inf).
+
+        importance_type:
+          * "gain"       — mean objective reduction per split on the feature
+                           (XGBoost's default importance_type);
+          * "total_gain" — summed objective reduction;
+          * "weight"     — number of splits on the feature.
+
+        Returns a float64 (n_features,) vector (unnormalised — the sklearn
+        estimators' `feature_importances_` normalises to sum 1). Boosters
+        loaded from checkpoints that predate stored gains report zeros.
+        """
+        self._require_fitted()
+        gain = np.asarray(self.ensemble.gain, np.float64)
+        feat = np.asarray(self.ensemble.feature)
+        split = np.isfinite(gain)
+        n_features = self.cuts.shape[0]
+        counts = np.bincount(
+            feat[split], minlength=n_features
+        ).astype(np.float64)
+        if importance_type == "weight":
+            return counts
+        if importance_type in ("gain", "total_gain"):
+            total = np.zeros(n_features, np.float64)
+            np.add.at(total, feat[split], gain[split])
+            if importance_type == "total_gain":
+                return total
+            return np.divide(total, counts, out=np.zeros_like(total),
+                             where=counts > 0)
+        raise ValueError(
+            f"importance_type must be 'gain', 'total_gain' or 'weight', "
+            f"got {importance_type!r}"
+        )
 
     # --- persistence -------------------------------------------------------
     def save(self, path: str) -> None:

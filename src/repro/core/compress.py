@@ -158,10 +158,37 @@ def gather_feature_bins(packed: jax.Array, bits: int, feat: jax.Array) -> jax.Ar
     the split feature of the node each row currently sits in).
     """
     n = feat.shape[0]
-    spw = symbols_per_word(bits)
     row = jnp.arange(n, dtype=jnp.int32)
-    word = packed[feat, row // spw]
-    shift = (row % spw).astype(jnp.uint32) * jnp.uint32(bits)
+    return gather_feature_bins_rows(packed, bits, feat, row)
+
+
+def gather_feature_bins_rows(
+    packed: jax.Array, bits: int, feat: jax.Array, row_ids: jax.Array
+) -> jax.Array:
+    """gather_feature_bins for an ARBITRARY row set: bins[row_ids[i],
+    feat[i]] per buffer slot i (the subsampled-row routing path,
+    DESIGN.md §12). Same cost shape: one word gather + shift/mask per slot.
+    """
+    spw = symbols_per_word(bits)
+    word = packed[feat, row_ids // spw]
+    shift = (row_ids % spw).astype(jnp.uint32) * jnp.uint32(bits)
+    return ((word >> shift) & jnp.uint32((1 << bits) - 1)).astype(jnp.int32)
+
+
+def gather_feature_bins_chunked(
+    packed: jax.Array, bits: int, chunk_rows: int,
+    feat: jax.Array, row_ids: jax.Array,
+) -> jax.Array:
+    """gather_feature_bins_rows over the chunk-stacked layout: each global
+    row id resolves to (chunk, offset) = (r // chunk_rows, r % chunk_rows)
+    and one word of its owning chunk is gathered."""
+    n_chunks, _, _ = packed.shape
+    spw = symbols_per_word(bits)
+    r = jnp.clip(row_ids, 0, n_chunks * chunk_rows - 1)
+    c = r // chunk_rows
+    off = r % chunk_rows
+    word = packed[c, feat, off // spw]
+    shift = (off % spw).astype(jnp.uint32) * jnp.uint32(bits)
     return ((word >> shift) & jnp.uint32((1 << bits) - 1)).astype(jnp.int32)
 
 

@@ -24,6 +24,7 @@ from jax.sharding import PartitionSpec as P
 from repro import jaxcompat
 from repro.core import compress as C
 from repro.core import objectives as O
+from repro.core import sampling as SMP
 from repro.core import tree as T
 
 
@@ -65,8 +66,23 @@ def make_distributed_round(
     axis0, extra = data_axes[0], tuple(data_axes[1:])
     cfg_kw = O.config_kwargs(cfg)  # static under shard_map (cfg keys cache)
     chunked = chunk_rows is not None
+    stoch = SMP.stochastic_params(cfg)
+    # Static shard geometry for the shared-key sampling (DESIGN.md §12):
+    # every shard draws the SAME global row selection / feature masks from
+    # the replicated per-round key, then slices its own rows — identical to
+    # the single-device sample, no extra collective, psum unchanged.
+    axis_sizes = tuple(mesh.shape[a] for a in data_axes)
+    n_shards = 1
+    for s in axis_sizes:
+        n_shards *= s
 
-    def round_body(data, margins, y, cuts):
+    def _shard_offset(n_local):
+        lin = jnp.int32(0)
+        for a, s in zip(data_axes, axis_sizes):
+            lin = lin * s + jax.lax.axis_index(a)
+        return lin * n_local
+
+    def round_body(data, margins, y, cuts, rkey=None):
         from repro.core import booster as B  # lazy: avoid import cycle
 
         if chunked:
@@ -81,12 +97,26 @@ def make_distributed_round(
             rep = C.PackedBins(packed=data, bits=bits, n_rows=n_rows_per_shard)
         else:
             rep = data
+        n_features = (
+            rep.n_features if cfg.compress_matrix or chunked
+            else rep.shape[1]
+        )
         gh_all = obj.grad(margins, y, **cfg_kw)
         trees = []
         for c in range(k):
+            gh_c = gh_all[:, c, :]
+            ctx = None
+            if stoch is not None:
+                n_local = margins.shape[0]
+                ctx, gh_c = SMP.make_tree_context(
+                    stoch, jax.random.fold_in(rkey, c), gh_c, n_features,
+                    compact=False,
+                    n_total=n_local * n_shards,
+                    row_offset=_shard_offset(n_local),
+                )
             tr = T.grow_tree(
                 rep,
-                gh_all[:, c, :],
+                gh_c,
                 cuts,
                 cfg.max_depth,
                 cfg.max_bins,
@@ -95,6 +125,7 @@ def make_distributed_round(
                 max_leaves=cfg.max_leaves or 2**cfg.max_depth,
                 axis_name=axis0,
                 extra_axes=extra,
+                ctx=ctx,
             )
             # Materialise tree arrays before the margin update (same
             # barrier as booster._round_step_fn — see DESIGN.md §11).
@@ -116,10 +147,13 @@ def make_distributed_round(
     else:
         data_spec = P(axes, None)
 
+    in_specs = (data_spec, row_spec, row_spec, P())
+    if stoch is not None:
+        in_specs = in_specs + (P(),)  # per-round key, replicated
     shard_fn = jaxcompat.shard_map(
         round_body,
         mesh=mesh,
-        in_specs=(data_spec, row_spec, row_spec, P()),
+        in_specs=in_specs,
         out_specs=(P(), row_spec),
     )
     fn = _ROUND_FN_CACHE[key] = jax.jit(shard_fn)
@@ -235,12 +269,23 @@ def make_chunk_runner(
         )
 
     train_kw = O.config_kwargs(cfg)  # group_ids is single-device only
+    stoch = SMP.stochastic_params(cfg)
+    base_key = jax.random.PRNGKey(cfg.seed) if stoch is not None else None
 
-    def run(length, margins, eval_margins):
+    def run(length, start_round, margins, eval_margins):
         margins = jax.device_put(margins, row_sharding)
         trees, tr_rows, ev_rows = [], [], []
-        for _ in range(length):
-            stacked, margins = round_fn(data, margins, y, cuts)
+        for r in range(length):
+            if stoch is None:
+                stacked, margins = round_fn(data, margins, y, cuts)
+            else:
+                # Same fold path as the single-device scan body, from the
+                # ABSOLUTE round index — single- and multi-device fits draw
+                # identical samples/masks (DESIGN.md §12).
+                rkey = jax.random.fold_in(
+                    base_key, jnp.asarray(start_round + r, jnp.int32)
+                )
+                stacked, margins = round_fn(data, margins, y, cuts, rkey)
             trees.append(stacked)
             eval_margins = tuple(
                 apply_eval(stacked, pb, em)

@@ -7,6 +7,11 @@ rows, so under shard_map it is embarrassingly parallel with no collectives).
 
 Arena indexing: complete binary tree, children of node k are 2k+1 / 2k+2.
 positions[i] = arena node id of row i, or -1 once the row rests in a leaf.
+
+One routing rule, four data layouts: `_route` holds the missing-bin /
+default-direction / child-index semantics ONCE; the public functions differ
+only in how the split-feature bin is fetched (dense gather, packed word
+shift/mask, sampled-row-buffer variants, chunk-stack scan).
 """
 from __future__ import annotations
 
@@ -18,22 +23,24 @@ import jax.numpy as jnp
 from repro.core import compress as C
 
 
-@jax.jit
-def update_positions(
-    bins: jax.Array,  # (n, f) int32
+def _route(
     positions: jax.Array,  # (n,) int32 arena node ids, -1 = inactive
     split_mask: jax.Array,  # (n_arena,) bool — nodes that split this level
     feature: jax.Array,  # (n_arena,) int32
     split_bin: jax.Array,  # (n_arena,) int32
     default_left: jax.Array,  # (n_arena,) bool
     missing_bin: int,
+    gather_bins,  # (per-row feature ids) -> per-row bin ids
 ) -> jax.Array:
+    """Shared routing body: fetch each row's split-feature bin via
+    `gather_bins`, then left/right by threshold with the learned default
+    direction for missing values."""
     pos = jnp.maximum(positions, 0)
     active = positions >= 0
     splits_here = split_mask[pos] & active
 
     f = feature[pos]
-    b = jnp.take_along_axis(bins, f[:, None], axis=1)[:, 0]
+    b = gather_bins(f)
     is_missing = b == missing_bin
     go_left = jnp.where(is_missing, default_left[pos], b <= split_bin[pos])
 
@@ -41,14 +48,30 @@ def update_positions(
     return jnp.where(splits_here, child, -1).astype(jnp.int32)
 
 
+@jax.jit
+def update_positions(
+    bins: jax.Array,  # (n, f) int32
+    positions: jax.Array,
+    split_mask: jax.Array,
+    feature: jax.Array,
+    split_bin: jax.Array,
+    default_left: jax.Array,
+    missing_bin: int,
+) -> jax.Array:
+    return _route(
+        positions, split_mask, feature, split_bin, default_left, missing_bin,
+        lambda f: jnp.take_along_axis(bins, f[:, None], axis=1)[:, 0],
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("missing_bin", "bits"))
 def update_positions_packed(
     packed: jax.Array,  # (f, n_words) uint32 bit-packed bins
-    positions: jax.Array,  # (n,) int32 arena node ids, -1 = inactive
-    split_mask: jax.Array,  # (n_arena,) bool — nodes that split this level
-    feature: jax.Array,  # (n_arena,) int32
-    split_bin: jax.Array,  # (n_arena,) int32
-    default_left: jax.Array,  # (n_arena,) bool
+    positions: jax.Array,
+    split_mask: jax.Array,
+    feature: jax.Array,
+    split_bin: jax.Array,
+    default_left: jax.Array,
     missing_bin: int,
     bits: int,
 ) -> jax.Array:
@@ -56,17 +79,58 @@ def update_positions_packed(
     each row is extracted on the fly (one word gather + shift/mask per row),
     so routing touches n_rows/spw-word columns instead of a dense (n, f)
     matrix — the dense bins never exist."""
-    pos = jnp.maximum(positions, 0)
-    active = positions >= 0
-    splits_here = split_mask[pos] & active
+    return _route(
+        positions, split_mask, feature, split_bin, default_left, missing_bin,
+        lambda f: C.gather_feature_bins(packed, bits, f),
+    )
 
-    f = feature[pos]
-    b = C.gather_feature_bins(packed, bits, f)
-    is_missing = b == missing_bin
-    go_left = jnp.where(is_missing, default_left[pos], b <= split_bin[pos])
 
-    child = jnp.where(go_left, 2 * pos + 1, 2 * pos + 2)
-    return jnp.where(splits_here, child, -1).astype(jnp.int32)
+@functools.partial(jax.jit, static_argnames=("missing_bin", "bits"))
+def update_positions_packed_rows(
+    packed: jax.Array,  # (f, n_words) uint32 bit-packed bins
+    positions: jax.Array,  # (m,) int32 arena node ids of the BUFFER slots
+    split_mask: jax.Array,
+    feature: jax.Array,
+    split_bin: jax.Array,
+    default_left: jax.Array,
+    missing_bin: int,
+    bits: int,
+    row_ids: jax.Array,  # (m,) int32 global row id of each buffer slot
+) -> jax.Array:
+    """update_positions_packed over a sampled-row buffer (DESIGN.md §12):
+    positions live in buffer space, and each slot's split-feature bin is
+    gathered via its global row id — routing cost scales with the buffer,
+    not n_rows."""
+    return _route(
+        positions, split_mask, feature, split_bin, default_left, missing_bin,
+        lambda f: C.gather_feature_bins_rows(packed, bits, f, row_ids),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("missing_bin", "bits", "chunk_rows")
+)
+def update_positions_chunked_rows(
+    packed: jax.Array,  # (n_chunks, f, words_per_chunk) uint32
+    positions: jax.Array,  # (m,) int32 arena node ids of the BUFFER slots
+    split_mask: jax.Array,
+    feature: jax.Array,
+    split_bin: jax.Array,
+    default_left: jax.Array,
+    missing_bin: int,
+    bits: int,
+    chunk_rows: int,
+    row_ids: jax.Array,  # (m,) int32 global row id of each buffer slot
+) -> jax.Array:
+    """update_positions_packed_rows over the chunk-stacked matrix: the
+    buffer's rows gather their split-feature word from the owning chunk
+    directly (no scan over chunks — the buffer is already compact)."""
+    return _route(
+        positions, split_mask, feature, split_bin, default_left, missing_bin,
+        lambda f: C.gather_feature_bins_chunked(
+            packed, bits, chunk_rows, f, row_ids
+        ),
+    )
 
 
 @functools.partial(

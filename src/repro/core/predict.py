@@ -26,7 +26,8 @@ from repro.core.tree import Tree
 
 @functools.partial(
     jax.tree_util.register_dataclass,
-    data_fields=["feature", "split_bin", "threshold", "default_left", "leaf_value", "is_leaf"],
+    data_fields=["feature", "split_bin", "threshold", "default_left",
+                 "leaf_value", "is_leaf", "gain"],
     meta_fields=["n_classes", "base_score"],
 )
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +37,9 @@ class Ensemble:
     For multiclass, trees are laid out round-robin: tree t predicts
     class t % n_classes (XGBoost's convention). n_classes/base_score are
     static pytree metadata so jit specialises on them.
+
+    `gain` carries each split node's objective reduction (-inf on leaves
+    and inactive arena slots) — the source for Booster.feature_importances.
     """
 
     feature: jax.Array  # (t, a) int32
@@ -44,6 +48,7 @@ class Ensemble:
     default_left: jax.Array  # (t, a) bool
     leaf_value: jax.Array  # (t, a) float32
     is_leaf: jax.Array  # (t, a) bool
+    gain: jax.Array  # (t, a) float32, -inf = not a split
     n_classes: int = 1
     base_score: float = 0.0
 
@@ -68,13 +73,15 @@ def stack_trees(trees: list[Tree], n_classes: int = 1, base_score: float = 0.0) 
         default_left=st.default_left,
         leaf_value=st.leaf_value,
         is_leaf=st.is_leaf,
+        gain=st.gain,
         n_classes=n_classes,
         base_score=base_score,
     )
 
 
 _ENSEMBLE_ARRAY_FIELDS = (
-    "feature", "split_bin", "threshold", "default_left", "leaf_value", "is_leaf"
+    "feature", "split_bin", "threshold", "default_left", "leaf_value",
+    "is_leaf", "gain",
 )
 
 

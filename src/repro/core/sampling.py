@@ -1,0 +1,271 @@
+"""Stochastic training context: per-tree sampling + constraints (DESIGN.md §12).
+
+XGBoost's stochastic regularisers (Chen & Guestrin 2016 §2.3) and monotone
+constraints, threaded through the construction stack as ONE object:
+
+  * `StochasticParams` — the static policy (subsample / colsample fractions,
+    monotone constraint vector). Hashable, so it rides inside BoosterConfig
+    and the compiled-fn cache keys.
+  * `TreeContext` — the per-tree traced state: a PRNG key folded
+    deterministically from `(seed, round, class)`, the statically-shaped
+    sampled-row buffer (or None in masked mode), and the per-tree feature
+    mask. A registered pytree, so it flows through jit / lax.scan /
+    shard_map next to the data.
+
+Determinism contract: every random draw derives from
+`fold_in(fold_in(PRNGKey(seed), round), class)` plus a fixed integer tag per
+draw site, and each draw is a function of GLOBAL sizes only (n_rows total,
+n_features). Distributed shards therefore compute bit-identical masks and
+row selections by replaying the same replicated computation — no collective
+is needed to agree on the sample, and the per-level histogram psum is
+unchanged (each shard just slices its rows out of the shared selection).
+
+Row subsampling has two executions with identical semantics:
+
+  * compact mode (single-device default): the selected `m = round(n *
+    subsample)` row ids are compacted, ascending, into a static buffer;
+    histograms are built only over that buffer via the `*_rows` builders,
+    so a subsampled round does proportionally less scatter work.
+  * masked mode (distributed / kernel builders): unselected rows keep
+    their (g, h) zeroed instead. Adding 0.0 terms in the same row order
+    leaves f32 bin sums bitwise unchanged, so the two modes agree exactly
+    per shard.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Fixed fold_in tags keep the draw sites' key streams disjoint.
+TAG_ROWS = 0x517C0DE1
+TAG_COLS_TREE = 0x517C0DE2
+TAG_COLS_LEVEL = 0x517C0DE3
+TAG_COLS_NODE = 0x517C0DE4
+
+
+class StochasticParams(NamedTuple):
+    """Static sampling/constraint policy (hashable; lives in cache keys).
+
+    `monotone` is a per-feature tuple of {-1, 0, +1} or None; fractions are
+    in (0, 1]. A value of None for the whole object (see
+    `stochastic_params`) means "fully deterministic defaults" and selects
+    the untouched pre-refactor code path bit for bit.
+    """
+
+    subsample: float = 1.0
+    colsample_bytree: float = 1.0
+    colsample_bylevel: float = 1.0
+    colsample_bynode: float = 1.0
+    monotone: tuple | None = None
+
+    @property
+    def row_sampling(self) -> bool:
+        return self.subsample < 1.0
+
+    @property
+    def monotone_on(self) -> bool:
+        return self.monotone is not None and any(self.monotone)
+
+
+def stochastic_params(cfg) -> StochasticParams | None:
+    """BoosterConfig -> StochasticParams, or None when every knob is at its
+    default (the None signals callers to keep the exact legacy program)."""
+    mono = cfg.monotone_constraints
+    if mono is not None and not any(mono):
+        mono = None
+    if (
+        cfg.subsample >= 1.0
+        and cfg.colsample_bytree >= 1.0
+        and cfg.colsample_bylevel >= 1.0
+        and cfg.colsample_bynode >= 1.0
+        and mono is None
+    ):
+        return None
+    return StochasticParams(
+        subsample=cfg.subsample,
+        colsample_bytree=cfg.colsample_bytree,
+        colsample_bylevel=cfg.colsample_bylevel,
+        colsample_bynode=cfg.colsample_bynode,
+        monotone=mono,
+    )
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["key", "row_ids", "feature_mask"],
+    meta_fields=["params"],
+)
+@dataclass(frozen=True)
+class TreeContext:
+    """Per-tree stochastic state, threaded through grow_tree.
+
+    key: per-tree PRNG key (fold path: seed -> round -> class).
+    row_ids: (m,) int32 ascending global row ids of the subsample, or None
+      (masked mode / no row sampling). When set, the gh passed alongside is
+      already gathered to the buffer, and positions/histograms/routing all
+      live in buffer space.
+    feature_mask: (f,) bool per-tree column sample, or None. Level/node
+      masks are drawn inside grow_tree from `key` (they need the level id).
+    params: the static StochasticParams policy.
+    """
+
+    key: jax.Array
+    row_ids: jax.Array | None
+    feature_mask: jax.Array | None
+    params: StochasticParams
+
+
+def sample_size(n: int, frac: float) -> int:
+    """Static sample size: round(n * frac), at least 1 (XGBoost keeps a
+    non-empty sample for any frac > 0)."""
+    return max(1, int(round(n * frac)))
+
+
+def _rank_along_last(u: jax.Array) -> jax.Array:
+    """Rank of each element within its last axis (0 = smallest). Double
+    argsort: deterministic under ties (lower index wins)."""
+    return jnp.argsort(jnp.argsort(u, axis=-1), axis=-1)
+
+
+def row_selection_mask(key: jax.Array, n: int, m: int) -> jax.Array:
+    """(n,) bool mask with EXACTLY m True entries, a deterministic function
+    of (key, n, m) only — identical on every shard and device count."""
+    u = jax.random.uniform(jax.random.fold_in(key, TAG_ROWS), (n,))
+    order = jnp.argsort(u)
+    return jnp.zeros(n, bool).at[order[:m]].set(True)
+
+
+def compact_row_ids(sel: jax.Array, m: int) -> jax.Array:
+    """Compact a selection mask with m True entries into an ascending (m,)
+    int32 row-id buffer (static shape)."""
+    n = sel.shape[0]
+    order = jnp.cumsum(sel) - 1
+    return (
+        jnp.zeros(m, jnp.int32)
+        .at[jnp.where(sel, order, m)]
+        .set(jnp.arange(n, dtype=jnp.int32), mode="drop")
+    )
+
+
+def feature_sample_mask(
+    key: jax.Array, k: int, f: int, base_mask: jax.Array | None = None,
+    n_nodes: int | None = None,
+) -> jax.Array:
+    """Sample k features without replacement from the base_mask's allowed
+    set: keep the k smallest uniforms (disallowed features score +inf).
+    Returns (f,) bool, or (n_nodes, f) when n_nodes is given (independent
+    draw per node)."""
+    shape = (f,) if n_nodes is None else (n_nodes, f)
+    u = jax.random.uniform(key, shape)
+    if base_mask is not None:
+        u = jnp.where(base_mask, u, jnp.inf)
+    return _rank_along_last(u) < k
+
+
+def tree_feature_mask(
+    key: jax.Array, f: int, params: StochasticParams
+) -> jax.Array | None:
+    """The per-tree column sample (colsample_bytree), or None when off."""
+    if params.colsample_bytree >= 1.0:
+        return None
+    k = sample_size(f, params.colsample_bytree)
+    return feature_sample_mask(jax.random.fold_in(key, TAG_COLS_TREE), k, f)
+
+
+def level_feature_counts(f: int, params: StochasticParams) -> tuple[int, int]:
+    """(k_level, k_node): static per-level / per-node feature sample sizes,
+    applied hierarchically (bylevel samples from bytree's set, bynode from
+    bylevel's — XGBoost's nesting)."""
+    k_tree = (
+        sample_size(f, params.colsample_bytree)
+        if params.colsample_bytree < 1.0 else f
+    )
+    k_level = (
+        sample_size(k_tree, params.colsample_bylevel)
+        if params.colsample_bylevel < 1.0 else k_tree
+    )
+    k_node = (
+        sample_size(k_level, params.colsample_bynode)
+        if params.colsample_bynode < 1.0 else k_level
+    )
+    return k_level, k_node
+
+
+def level_feature_mask(
+    ctx: TreeContext, level: int, n_nodes: int, f: int
+) -> jax.Array | None:
+    """Combined (tree ∩ level ∩ node) feature mask for one level: (f,) or
+    (n_nodes, f) bool, or None when no column sampling is active. Pure
+    function of (ctx.key, level) — identical on every shard."""
+    p = ctx.params
+    mask = ctx.feature_mask  # (f,) or None
+    if p.colsample_bylevel >= 1.0 and p.colsample_bynode >= 1.0:
+        return mask
+    k_level, k_node = level_feature_counts(f, p)
+    if p.colsample_bylevel < 1.0:
+        lkey = jax.random.fold_in(
+            jax.random.fold_in(ctx.key, TAG_COLS_LEVEL), level
+        )
+        mask = feature_sample_mask(lkey, k_level, f, base_mask=mask)
+    if p.colsample_bynode < 1.0:
+        nkey = jax.random.fold_in(
+            jax.random.fold_in(ctx.key, TAG_COLS_NODE), level
+        )
+        mask = feature_sample_mask(
+            nkey, k_node, f, base_mask=mask, n_nodes=n_nodes
+        )
+    return mask
+
+
+def make_tree_context(
+    params: StochasticParams,
+    tree_key: jax.Array,
+    gh: jax.Array,
+    n_features: int,
+    *,
+    compact: bool = True,
+    n_total: int | None = None,
+    row_offset=0,
+) -> tuple[TreeContext, jax.Array]:
+    """Build the per-tree context and the gh view grow_tree consumes.
+
+    compact=True (single-device): returns gh gathered to the static (m, 2)
+    sampled-row buffer recorded in ctx.row_ids.
+    compact=False (distributed shards / kernel builders): returns gh with
+    unselected rows zeroed (row_ids=None). `n_total` is the GLOBAL row
+    count and `row_offset` this shard's first global row — the selection
+    is drawn over n_total and sliced, so every shard sees the same global
+    sample regardless of device count.
+    """
+    n_local = gh.shape[0]
+    n_total = n_local if n_total is None else n_total
+    row_ids = None
+    if params.row_sampling:
+        m = sample_size(n_total, params.subsample)
+        sel = row_selection_mask(tree_key, n_total, m)
+        if compact:
+            if n_total != n_local:
+                raise ValueError(
+                    "compact row sampling needs the full row range on one "
+                    f"shard (n_total={n_total}, local={n_local})"
+                )
+            row_ids = compact_row_ids(sel, m)
+            gh = gh[row_ids]
+        else:
+            sel_local = jax.lax.dynamic_slice(
+                sel, (jnp.asarray(row_offset, jnp.int32),), (n_local,)
+            )
+            gh = jnp.where(sel_local[:, None], gh, 0.0)
+    return (
+        TreeContext(
+            key=tree_key,
+            row_ids=row_ids,
+            feature_mask=tree_feature_mask(tree_key, n_features, params),
+            params=params,
+        ),
+        gh,
+    )

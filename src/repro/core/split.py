@@ -12,6 +12,17 @@ missing-right — and keep the better, recording the learned default direction.
 
 Gain formula (XGBoost objective, regularised):
   gain = 1/2 [ GL^2/(HL+lam) + GR^2/(HR+lam) - G^2/(H+lam) ] - gamma
+
+Stochastic/constrained extensions (DESIGN.md §12), all statically gated so
+the default path compiles to the identical program:
+
+  * feature_mask — (f,) or (n_nodes, f) bool; masked-out features score
+    -inf and can never win (colsample_bytree/bylevel/bynode).
+  * monotone + node_bounds — per-feature direction constraints with
+    per-node inherited value bounds [lower, upper]. Child weights are
+    clipped to the bounds, candidate gain is computed AT the clipped
+    weights (XGBoost's CalcGainGivenWeight), and splits whose clipped
+    child weights violate the feature's direction are rejected.
 """
 from __future__ import annotations
 
@@ -43,11 +54,21 @@ def _leaf_gain(g: jax.Array, h: jax.Array, lam: float) -> jax.Array:
     return (g * g) / (h + lam)
 
 
+def _gain_at_weight(g: jax.Array, h: jax.Array, w: jax.Array, lam: float) -> jax.Array:
+    """Objective reduction of a leaf evaluated AT weight w (XGBoost's
+    CalcGainGivenWeight): -(2 G w + (H + lam) w^2). Equals G^2/(H+lam) at
+    the unconstrained optimum w = -G/(H+lam)."""
+    return -(2.0 * g * w + (h + lam) * w * w)
+
+
 @functools.partial(jax.jit, static_argnames=("params",))
 def evaluate_splits(
     hist: jax.Array,  # (n_nodes, n_features, max_bins, 2)
     parent_sum: jax.Array,  # (n_nodes, 2) total (G, H) per node
     params: SplitParams = SplitParams(),
+    feature_mask: jax.Array | None = None,  # (f,) or (n_nodes, f) bool
+    monotone: jax.Array | None = None,  # (f,) int32 in {-1, 0, 1}
+    node_bounds: jax.Array | None = None,  # (n_nodes, 2) [lower, upper]
 ) -> Splits:
     n_nodes, n_features, max_bins, _ = hist.shape
     lam, gamma, mcw = params.reg_lambda, params.gamma, params.min_child_weight
@@ -58,29 +79,59 @@ def evaluate_splits(
     g_miss = g[..., -1:]  # missing bin mass (n, f, 1)
     h_miss = h[..., -1:]
 
-    # Prefix sums over value bins (excluding the missing bin). Candidate
-    # threshold at value-bin b means: bin <= b goes left. The last value bin
-    # is excluded as a threshold (nothing would go right).
-    gl = jnp.cumsum(g[..., :-1], axis=-1)[..., :-1]  # (n, f, b-2)
-    hl = jnp.cumsum(h[..., :-1], axis=-1)[..., :-1]
+    # Prefix sums over value bins (excluding the missing bin), computed ONCE
+    # and shared between candidate scoring and the winning-split gather.
+    # Candidate threshold at value-bin b means: bin <= b goes left. The last
+    # value bin is excluded as a threshold (nothing would go right).
+    gl_full = jnp.cumsum(g[..., :-1], axis=-1)  # (n, f, b-1)
+    hl_full = jnp.cumsum(h[..., :-1], axis=-1)
+    gl = gl_full[..., :-1]  # (n, f, b-2)
+    hl = hl_full[..., :-1]
 
-    parent = _leaf_gain(g_tot, h_tot, lam)
+    if monotone is None:
+        parent = _leaf_gain(g_tot, h_tot, lam)
 
-    def direction_gain(gl_, hl_):
-        gr_, hr_ = g_tot - gl_, h_tot - hl_
-        gain = 0.5 * (
-            _leaf_gain(gl_, hl_, lam) + _leaf_gain(gr_, hr_, lam) - parent
-        ) - gamma
-        ok = (hl_ >= mcw) & (hr_ >= mcw)
-        return jnp.where(ok, gain, -jnp.inf), gr_, hr_
+        def direction_gain(gl_, hl_):
+            gr_, hr_ = g_tot - gl_, h_tot - hl_
+            gain = 0.5 * (
+                _leaf_gain(gl_, hl_, lam) + _leaf_gain(gr_, hr_, lam) - parent
+            ) - gamma
+            ok = (hl_ >= mcw) & (hr_ >= mcw)
+            return jnp.where(ok, gain, -jnp.inf)
+    else:
+        # Constrained evaluation: weights clipped to the node's inherited
+        # bounds, gain computed at the clipped weights, direction-violating
+        # candidates rejected. node_bounds is required alongside monotone.
+        lo = node_bounds[:, 0][:, None, None]  # (n, 1, 1)
+        hi = node_bounds[:, 1][:, None, None]
+        c = monotone[None, :, None].astype(jnp.int32)  # (1, f, 1)
+        w_parent = jnp.clip(-g_tot / (h_tot + lam), lo, hi)
+        parent = _gain_at_weight(g_tot, h_tot, w_parent, lam)
+
+        def direction_gain(gl_, hl_):
+            gr_, hr_ = g_tot - gl_, h_tot - hl_
+            wl = jnp.clip(-gl_ / (hl_ + lam), lo, hi)
+            wr = jnp.clip(-gr_ / (hr_ + lam), lo, hi)
+            gain = 0.5 * (
+                _gain_at_weight(gl_, hl_, wl, lam)
+                + _gain_at_weight(gr_, hr_, wr, lam)
+                - parent
+            ) - gamma
+            ok = (hl_ >= mcw) & (hr_ >= mcw)
+            ok &= (c == 0) | ((c > 0) & (wl <= wr)) | ((c < 0) & (wl >= wr))
+            return jnp.where(ok, gain, -jnp.inf)
 
     # missing-right: missing mass stays out of the left prefix.
-    gain_r, _, _ = direction_gain(gl, hl)
+    gain_r = direction_gain(gl, hl)
     # missing-left: missing mass joins the left child.
-    gain_l, _, _ = direction_gain(gl + g_miss, hl + h_miss)
+    gain_l = direction_gain(gl + g_miss, hl + h_miss)
 
     default_left = gain_l > gain_r
     gain = jnp.maximum(gain_l, gain_r)  # (n, f, b-2)
+
+    if feature_mask is not None:
+        fm = feature_mask if feature_mask.ndim == 2 else feature_mask[None, :]
+        gain = jnp.where(fm[:, :, None], gain, -jnp.inf)
 
     flat = gain.reshape(n_nodes, -1)
     best = jnp.argmax(flat, axis=1)
@@ -92,10 +143,11 @@ def evaluate_splits(
         default_left.reshape(n_nodes, -1), best[:, None], axis=1
     )[:, 0]
 
-    # Recompute child sums at the winning (feature, bin, direction).
+    # Child sums at the winning (feature, bin, direction), gathered from the
+    # prefix sums computed above (no recomputation).
     nf = jnp.arange(n_nodes)
-    gl_w = jnp.cumsum(g[..., :-1], axis=-1)[nf, best_f, best_b]
-    hl_w = jnp.cumsum(h[..., :-1], axis=-1)[nf, best_f, best_b]
+    gl_w = gl_full[nf, best_f, best_b]
+    hl_w = hl_full[nf, best_f, best_b]
     gl_w = gl_w + jnp.where(best_dl, g_miss[nf, best_f, 0], 0.0)
     hl_w = hl_w + jnp.where(best_dl, h_miss[nf, best_f, 0], 0.0)
     left_sum = jnp.stack([gl_w, hl_w], axis=-1)

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from repro.core import compress as C
 from repro.core import histogram as H
 from repro.core import partition as P
+from repro.core import sampling as SMP
 from repro.core import split as S
 
 
@@ -71,6 +72,7 @@ def grow_tree(
     hist_builder=None,  # optional kernel-backed builder (kernels.ops)
     hist_block_rows: int = 65536,  # packed fallback's dense-tile bound
     hist_subtraction: bool = True,  # smaller-child build + sibling = parent - child
+    ctx: SMP.TreeContext | None = None,  # stochastic/constrained growth
 ) -> Tree:
     """When `bins` is a compress.PackedBins, the tree grows *packed-native*
     (DESIGN.md §2): histograms are built straight from the uint32 words
@@ -84,7 +86,17 @@ def grow_tree(
     feature-local (1/p of the paper's AllReduce bytes move over the wire),
     splits are evaluated feature-locally and the winner is chosen via an
     all-gather of tiny per-node best-split records; row routing for a split
-    owned by another shard arrives via a psum'd route vector."""
+    owned by another shard arrives via a psum'd route vector.
+
+    `ctx` (DESIGN.md §12) threads per-tree stochastic state: when
+    `ctx.row_ids` is set, `gh` is the gathered (m, 2) buffer and the whole
+    construction — histograms (via the compacted `*_rows` builders, the
+    subtraction trick composed on top), routing, node sums — runs in
+    buffer space, so a subsampled round does proportionally less scatter
+    work while the dense matrix still never materialises. Feature masks
+    (per tree/level/node) and monotone bounds are applied in
+    split.evaluate_splits; bounds propagate down the arena. `ctx=None`
+    compiles to the exact pre-stochastic program."""
     packed_mode = isinstance(bins, C.PackedBins)
     chunked_mode = isinstance(bins, C.ChunkedPackedBins)
     if packed_mode or chunked_mode:
@@ -97,6 +109,37 @@ def grow_tree(
         n, f = bins.shape
     na = arena_size(max_depth)
     missing_bin = max_bins - 1
+
+    stoch = ctx.params if ctx is not None else None
+    row_ids = ctx.row_ids if ctx is not None else None
+    sampled = row_ids is not None
+    if sampled:
+        if hist_builder is not None:
+            raise NotImplementedError(
+                "custom/kernel hist builders are not row-subset aware; use "
+                "masked-mode subsampling (ctx.row_ids=None) with them"
+            )
+        if feature_axis is not None or axis_name is not None:
+            raise NotImplementedError(
+                "sharded growth uses masked-mode subsampling "
+                "(ctx.row_ids=None); compact buffers are single-shard only"
+            )
+        if not (packed_mode or chunked_mode):
+            # Dense path: gather the sampled view once, then grow as usual.
+            bins = bins[row_ids]
+            row_ids, sampled = None, False
+        n = gh.shape[0]  # buffer size m — positions/compaction live here
+    mono_on = stoch is not None and stoch.monotone_on
+    if mono_on:
+        if len(stoch.monotone) != f:
+            raise ValueError(
+                f"monotone constraints cover {len(stoch.monotone)} features "
+                f"but the matrix has {f}"
+            )
+        mono_arr = jnp.asarray(stoch.monotone, jnp.int32)
+        lower = jnp.full(na, -jnp.inf, jnp.float32)
+        upper = jnp.full(na, jnp.inf, jnp.float32)
+
     if hist_builder is not None:
         if chunked_mode:
             raise NotImplementedError(
@@ -104,6 +147,18 @@ def grow_tree(
                 "default builders for external-memory training"
             )
         build = hist_builder
+    elif sampled and chunked_mode:
+        def build(cpb, gh_, pos_, n_nodes_, max_bins_):
+            return H.build_histograms_chunked_rows(
+                cpb.packed, gh_, pos_, row_ids, n_nodes_, max_bins_,
+                cpb.bits, cpb.chunk_rows, block_rows=hist_block_rows,
+            )
+    elif sampled:
+        def build(pb, gh_, pos_, n_nodes_, max_bins_):
+            return H.build_histograms_packed_rows(
+                pb.packed, gh_, pos_, row_ids, n_nodes_, max_bins_,
+                pb.bits, block_rows=hist_block_rows,
+            )
     elif chunked_mode:
         def build(cpb, gh_, pos_, n_nodes_, max_bins_):
             return H.build_histograms_chunked(
@@ -162,7 +217,7 @@ def grow_tree(
         if use_subtraction and level > 0:
             hist = _histograms_by_subtraction(
                 bins, gh, local, hist_prev, n_nodes, max_bins,
-                hist_block_rows,
+                hist_block_rows, row_ids=row_ids,
             )
         else:
             hist = build(bins, gh, local, n_nodes, max_bins)
@@ -173,7 +228,21 @@ def grow_tree(
 
         # --- EvaluateSplit (prefix-sum scan over bins) -------------------
         parent = jax.lax.dynamic_slice_in_dim(node_sum, off, n_nodes)
-        sp = S.evaluate_splits(hist, parent, params)
+        feature_mask = (
+            SMP.level_feature_mask(ctx, level, n_nodes, f)
+            if ctx is not None else None
+        )
+        if mono_on:
+            lvl_lo = jax.lax.dynamic_slice_in_dim(lower, off, n_nodes)
+            lvl_hi = jax.lax.dynamic_slice_in_dim(upper, off, n_nodes)
+            bounds = jnp.stack([lvl_lo, lvl_hi], axis=-1)
+            sp = S.evaluate_splits(
+                hist, parent, params, feature_mask=feature_mask,
+                monotone=mono_arr, node_bounds=bounds,
+            )
+        else:
+            sp = S.evaluate_splits(hist, parent, params,
+                                   feature_mask=feature_mask)
         if feature_axis is not None:
             sp = _combine_feature_shards(sp, f, feature_axis)
 
@@ -196,8 +265,11 @@ def grow_tree(
         default_left = default_left.at[idx].set(will_split & sp.default_left)
         gain_arr = gain_arr.at[idx].set(jnp.where(will_split, sp.gain, -jnp.inf))
         is_leaf = is_leaf.at[idx].set(lvl_active & ~will_split)
+        lvl_leaf = S.leaf_value(parent, params.reg_lambda)
+        if mono_on:  # leaf weights respect the inherited bounds
+            lvl_leaf = jnp.clip(lvl_leaf, lvl_lo, lvl_hi)
         leaf_value = leaf_value.at[idx].set(
-            jnp.where(lvl_active & ~will_split, S.leaf_value(parent, params.reg_lambda), 0.0)
+            jnp.where(lvl_active & ~will_split, lvl_leaf, 0.0)
         )
 
         # Children bookkeeping (sums come from the split evaluation — no
@@ -207,12 +279,42 @@ def grow_tree(
         node_sum = node_sum.at[ridx].set(jnp.where(will_split[:, None], sp.right_sum, 0.0))
         active = active.at[lidx].set(will_split).at[ridx].set(will_split)
 
+        if mono_on:
+            # Monotone bound propagation (XGBoost's scheme): the midpoint of
+            # the clipped child weights becomes the dividing bound on the
+            # constrained side; the other side inherits the parent's bound.
+            wl = jnp.clip(S.leaf_value(sp.left_sum, params.reg_lambda),
+                          lvl_lo, lvl_hi)
+            wr = jnp.clip(S.leaf_value(sp.right_sum, params.reg_lambda),
+                          lvl_lo, lvl_hi)
+            mid = 0.5 * (wl + wr)
+            csign = mono_arr[sp.feature]
+            l_lo = jnp.where(csign < 0, mid, lvl_lo)
+            l_hi = jnp.where(csign > 0, mid, lvl_hi)
+            r_lo = jnp.where(csign > 0, mid, lvl_lo)
+            r_hi = jnp.where(csign < 0, mid, lvl_hi)
+            keep = ~will_split
+            lower = lower.at[lidx].set(jnp.where(keep, -jnp.inf, l_lo))
+            lower = lower.at[ridx].set(jnp.where(keep, -jnp.inf, r_lo))
+            upper = upper.at[lidx].set(jnp.where(keep, jnp.inf, l_hi))
+            upper = upper.at[ridx].set(jnp.where(keep, jnp.inf, r_hi))
+
         # --- RepartitionInstances ----------------------------------------
         split_mask = jnp.zeros(na, bool).at[idx].set(will_split)
         full_feature = jnp.zeros(na, jnp.int32).at[idx].set(feature[idx])
         full_bin = jnp.zeros(na, jnp.int32).at[idx].set(split_bin[idx])
         full_dl = jnp.zeros(na, bool).at[idx].set(default_left[idx])
-        if chunked_mode:
+        if sampled and chunked_mode:
+            positions = P.update_positions_chunked_rows(
+                bins.packed, positions, split_mask, full_feature, full_bin,
+                full_dl, missing_bin, bins.bits, bins.chunk_rows, row_ids,
+            )
+        elif sampled:
+            positions = P.update_positions_packed_rows(
+                bins.packed, positions, split_mask, full_feature, full_bin,
+                full_dl, missing_bin, bins.bits, row_ids,
+            )
+        elif chunked_mode:
             positions = P.update_positions_chunked(
                 bins.packed, positions, split_mask, full_feature, full_bin,
                 full_dl, missing_bin, bins.bits, bins.chunk_rows, bins.n_rows,
@@ -240,8 +342,15 @@ def grow_tree(
     lvl_active = jax.lax.dynamic_slice_in_dim(active, off, n_nodes)
     parent = jax.lax.dynamic_slice_in_dim(node_sum, off, n_nodes)
     is_leaf = is_leaf.at[idx].set(lvl_active)
+    final_leaf = S.leaf_value(parent, params.reg_lambda)
+    if mono_on:
+        final_leaf = jnp.clip(
+            final_leaf,
+            jax.lax.dynamic_slice_in_dim(lower, off, n_nodes),
+            jax.lax.dynamic_slice_in_dim(upper, off, n_nodes),
+        )
     leaf_value = leaf_value.at[idx].set(
-        jnp.where(lvl_active, S.leaf_value(parent, params.reg_lambda), 0.0)
+        jnp.where(lvl_active, final_leaf, 0.0)
     )
 
     # Raw-space thresholds for prediction on unquantised inputs.
@@ -274,6 +383,7 @@ def _histograms_by_subtraction(
     n_nodes: int,
     max_bins: int,
     hist_block_rows: int,
+    row_ids: jax.Array | None = None,  # sampled mode: slot -> global row id
 ) -> jax.Array:
     """Level histogram via the subtraction trick (DESIGN.md §7.5).
 
@@ -282,6 +392,10 @@ def _histograms_by_subtraction(
     floor(n/2), a static n//2 compaction buffer always suffices — the
     scatter work of every level below the root is halved, which is the
     dominant cost of a boosting round on scatter-bound backends.
+
+    With `row_ids` (subsampled growth, DESIGN.md §12) everything above runs
+    in buffer space — `gh`/`local` are (m,)-shaped, the compaction buffer is
+    m//2 — and only the word gathers translate slots to global rows.
     """
     packed_mode = isinstance(bins, C.PackedBins)
     chunked_mode = isinstance(bins, C.ChunkedPackedBins)
@@ -308,15 +422,18 @@ def _histograms_by_subtraction(
     )
     pos_c = parent_ext[jnp.minimum(buf, n)]
     gh_c = gh[jnp.minimum(buf, n - 1)]
+    # Buffer slots -> rows for the word gathers (padding slots carry a real
+    # row id but their pos is the dump slot, so they contribute nothing).
+    rid_c = buf if row_ids is None else row_ids[jnp.minimum(buf, n - 1)]
 
     if chunked_mode:
         hist_small = H.build_histograms_chunked_rows(
-            bins.packed, gh_c, pos_c, buf, n_par, max_bins, bins.bits,
+            bins.packed, gh_c, pos_c, rid_c, n_par, max_bins, bins.bits,
             bins.chunk_rows, block_rows=hist_block_rows,
         )
     elif packed_mode:
         hist_small = H.build_histograms_packed_rows(
-            bins.packed, gh_c, pos_c, buf, n_par, max_bins, bins.bits,
+            bins.packed, gh_c, pos_c, rid_c, n_par, max_bins, bins.bits,
             block_rows=hist_block_rows,
         )
     else:

@@ -108,6 +108,12 @@ class _BoosterEstimator(BaseEstimator):
         quantile_alpha: float = 0.5,
         verbose: int = 0,
         chunk_rows: int | None = None,
+        subsample: float = 1.0,
+        colsample_bytree: float = 1.0,
+        colsample_bylevel: float = 1.0,
+        colsample_bynode: float = 1.0,
+        monotone_constraints=None,
+        random_state: int = 0,
     ):
         self.n_estimators = n_estimators
         self.learning_rate = learning_rate
@@ -127,6 +133,14 @@ class _BoosterEstimator(BaseEstimator):
         # through ExternalDMatrix (chunked, external-memory path) so fits
         # bound dense device transients by one chunk (DESIGN.md §11).
         self.chunk_rows = chunk_rows
+        # Stochastic regularisers + constraints (DESIGN.md §12); defaults
+        # keep training fully deterministic regardless of random_state.
+        self.subsample = subsample
+        self.colsample_bytree = colsample_bytree
+        self.colsample_bylevel = colsample_bylevel
+        self.colsample_bynode = colsample_bynode
+        self.monotone_constraints = monotone_constraints
+        self.random_state = random_state
 
     # --- fit plumbing ------------------------------------------------------
     def _fit_objective(self, y: np.ndarray) -> tuple[str, int, np.ndarray]:
@@ -148,6 +162,15 @@ class _BoosterEstimator(BaseEstimator):
             objective=objective,
             n_classes=n_classes,
             quantile_alpha=self.quantile_alpha,
+            subsample=self.subsample,
+            colsample_bytree=self.colsample_bytree,
+            colsample_bylevel=self.colsample_bylevel,
+            colsample_bynode=self.colsample_bynode,
+            monotone_constraints=(
+                None if self.monotone_constraints is None
+                else tuple(int(c) for c in self.monotone_constraints)
+            ),
+            seed=self.random_state,
         )
 
     def _fit(self, X, y, eval_set=None, group_ids=None, eval_group_ids=None):
@@ -203,6 +226,15 @@ class _BoosterEstimator(BaseEstimator):
     def get_booster(self) -> Booster:
         self._check_fitted()
         return self.booster_
+
+    @property
+    def feature_importances_(self) -> np.ndarray:
+        """Gain-based importances normalised to sum 1 (XGBoost's sklearn
+        default importance_type="gain"); zeros when the model never split."""
+        self._check_fitted()
+        imp = self.booster_.feature_importances("gain")
+        total = imp.sum()
+        return imp / total if total > 0 else imp
 
 
 class XGBRegressor(RegressorMixin, _BoosterEstimator):

@@ -56,6 +56,43 @@ def test_row_sharded_equals_single_device():
     assert "ROW-SHARDED-OK" in out
 
 
+def test_subsampled_row_sharded_equals_single_device():
+    """Stochastic training under mesh=: shards derive the SAME row sample
+    and feature masks from the shared (seed, round, class) key, so single-
+    and multi-device subsampled fits grow identical trees (DESIGN.md §12)."""
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import Booster, BoosterConfig, DeviceDMatrix
+        rng = np.random.default_rng(6)
+        n, f = 2048, 6
+        x = rng.normal(size=(n, f)).astype(np.float32)
+        y = (x @ rng.normal(size=f) > 0).astype(np.float32)
+        cfg = BoosterConfig(n_rounds=4, max_depth=3, max_bins=32,
+                            objective="binary:logistic", subsample=0.5,
+                            colsample_bytree=0.8, colsample_bylevel=0.9,
+                            seed=13)
+        dtrain = DeviceDMatrix(x, label=y, max_bins=cfg.max_bins)
+        st = Booster(cfg).fit(dtrain)
+        from repro.jaxcompat import make_mesh
+        mesh = make_mesh((8,), ("data",))
+        bst = Booster(cfg).fit(dtrain, mesh=mesh)
+        assert bool(jnp.all(st.ensemble.feature == bst.ensemble.feature))
+        assert bool(jnp.all(st.ensemble.split_bin == bst.ensemble.split_bin))
+        d = float(jnp.max(jnp.abs(st.ensemble.leaf_value
+                                  - bst.ensemble.leaf_value)))
+        assert d < 1e-4, d
+        # monotone constraints compute identically on every shard too
+        cfg2 = BoosterConfig(n_rounds=3, max_depth=3, max_bins=32,
+                             monotone_constraints=(1, 0, 0, 0, 0, -1))
+        st2 = Booster(cfg2).fit(dtrain)
+        bst2 = Booster(cfg2).fit(dtrain, mesh=mesh)
+        assert bool(jnp.all(st2.ensemble.feature == bst2.ensemble.feature))
+        assert bool(jnp.all(st2.ensemble.is_leaf == bst2.ensemble.is_leaf))
+        print("SUBSAMPLED-SHARDED-OK")
+    """)
+    assert "SUBSAMPLED-SHARDED-OK" in out
+
+
 def test_feature_sharded_equals_single_device():
     out = _run("""
         import numpy as np, jax, jax.numpy as jnp

@@ -1,0 +1,373 @@
+"""Stochastic & constrained training (ISSUE 5, DESIGN.md §12).
+
+Covers the TreeContext threading end to end: deterministic defaults,
+seeded subsampling (compact-buffer path), column sampling, monotone
+constraints (split rejection + bound propagation), external-memory parity,
+cross-process seeded determinism, checkpoint round-trip of the new config
+knobs, and feature importances against a numpy oracle.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import Booster, BoosterConfig, DeviceDMatrix, ExternalDMatrix
+from repro.core import sampling as SMP
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _data(n=3000, f=8, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, f)).astype(np.float32)
+    w = rng.normal(size=f).astype(np.float32)
+    y = (x @ w + 0.3 * rng.normal(size=n) > 0).astype(np.float32)
+    return x, y
+
+
+def _ens_equal(a, b):
+    return (
+        bool(jnp.all(a.feature == b.feature))
+        and bool(jnp.all(a.split_bin == b.split_bin))
+        and bool(jnp.all(a.leaf_value == b.leaf_value))
+        and bool(jnp.all(a.default_left == b.default_left))
+    )
+
+
+# --- defaults stay deterministic --------------------------------------------
+
+def test_defaults_ignore_seed():
+    """With every stochastic knob at its default the seed must not matter:
+    the config selects the exact pre-stochastic program."""
+    x, y = _data()
+    dtrain = DeviceDMatrix(x, label=y, max_bins=32)
+    kw = dict(n_rounds=4, max_depth=4, max_bins=32,
+              objective="binary:logistic")
+    b1 = Booster(**kw, seed=0).fit(dtrain)
+    b2 = Booster(**kw, seed=12345).fit(dtrain)
+    assert _ens_equal(b1.ensemble, b2.ensemble)
+
+
+def test_explicit_default_knobs_identical():
+    x, y = _data()
+    dtrain = DeviceDMatrix(x, label=y, max_bins=32)
+    kw = dict(n_rounds=3, max_depth=3, max_bins=32,
+              objective="binary:logistic")
+    b1 = Booster(**kw).fit(dtrain)
+    b2 = Booster(**kw, subsample=1.0, colsample_bytree=1.0,
+                 colsample_bylevel=1.0, colsample_bynode=1.0,
+                 monotone_constraints=(0,) * x.shape[1]).fit(dtrain)
+    assert _ens_equal(b1.ensemble, b2.ensemble)
+
+
+# --- config validation ------------------------------------------------------
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="subsample"):
+        BoosterConfig(subsample=0.0)
+    with pytest.raises(ValueError, match="colsample_bytree"):
+        BoosterConfig(colsample_bytree=1.5)
+    with pytest.raises(ValueError, match="monotone"):
+        BoosterConfig(monotone_constraints=(2, 0))
+    # lists coerce to a hashable tuple
+    cfg = BoosterConfig(monotone_constraints=[1, 0, -1])
+    assert cfg.monotone_constraints == (1, 0, -1)
+    hash(cfg)
+
+
+def test_monotone_length_checked_at_fit():
+    x, y = _data(n=500, f=4)
+    dtrain = DeviceDMatrix(x, label=y, max_bins=32)
+    bst = Booster(n_rounds=2, max_bins=32, monotone_constraints=(1, 0))
+    with pytest.raises(ValueError, match="4 features"):
+        bst.fit(dtrain)
+
+
+# --- subsampling ------------------------------------------------------------
+
+def test_subsample_seeded_and_learns():
+    x, y = _data()
+    dtrain = DeviceDMatrix(x, label=y, max_bins=32)
+    kw = dict(n_rounds=6, max_depth=4, max_bins=32,
+              objective="binary:logistic", subsample=0.5)
+    b1 = Booster(**kw, seed=7).fit(dtrain)
+    b2 = Booster(**kw, seed=7).fit(dtrain)
+    b3 = Booster(**kw, seed=8).fit(dtrain)
+    assert _ens_equal(b1.ensemble, b2.ensemble)
+    assert not _ens_equal(b1.ensemble, b3.ensemble)
+    acc = float(np.mean(
+        (np.asarray(b1.predict(x)).reshape(-1) > 0.5) == y
+    ))
+    assert acc > 0.85, acc
+
+
+def test_subsample_update_continuation_matches_longer_fit():
+    """The key stream folds from the ABSOLUTE round index, so fit(4) +
+    update(4) replays exactly the rounds of one fit(8)."""
+    x, y = _data()
+    dtrain = DeviceDMatrix(x, label=y, max_bins=32)
+    kw = dict(max_depth=4, max_bins=32, objective="binary:logistic",
+              subsample=0.6, seed=11)
+    long = Booster(n_rounds=8, **kw).fit(dtrain)
+    cont = Booster(n_rounds=4, **kw).fit(dtrain)
+    cont.update(dtrain, 4)
+    assert _ens_equal(long.ensemble, cont.ensemble)
+
+
+def test_subsample_external_memory_bit_identical():
+    """Sampled growth over the chunk stack (compacted chunked-row builders)
+    matches the in-memory compacted path bit for bit on the same cuts."""
+    x, y = _data(n=2500)
+    kw = dict(n_rounds=4, max_depth=4, max_bins=32,
+              objective="binary:logistic", subsample=0.5,
+              colsample_bytree=0.75, seed=5)
+    dtrain = DeviceDMatrix(x, label=y, max_bins=32)
+    ext = ExternalDMatrix.from_arrays(x, y, chunk_rows=700, max_bins=32,
+                                      cuts="exact")
+    bi = Booster(**kw).fit(dtrain)
+    be = Booster(**kw).fit(ext)
+    assert _ens_equal(bi.ensemble, be.ensemble)
+    assert bool(jnp.all(bi.margins == be.margins))
+
+
+def test_row_selection_mask_exact_count_and_determinism():
+    import jax
+
+    key = jax.random.PRNGKey(3)
+    for n, m in ((100, 37), (1024, 512), (7, 1)):
+        sel = SMP.row_selection_mask(key, n, m)
+        assert int(jnp.sum(sel)) == m
+        sel2 = SMP.row_selection_mask(key, n, m)
+        assert bool(jnp.all(sel == sel2))
+    rid = SMP.compact_row_ids(SMP.row_selection_mask(key, 1024, 512), 512)
+    rid = np.asarray(rid)
+    assert np.all(np.diff(rid) > 0)  # ascending, unique
+    assert rid.min() >= 0 and rid.max() < 1024
+
+
+def test_masked_equals_compact_subsampling():
+    """The distributed shards zero unselected rows' gradients instead of
+    compacting; both executions must grow the same tree."""
+    import jax
+
+    from repro.core import objectives as O
+    from repro.core import tree as T
+
+    x, y = _data(n=1500, f=5)
+    dtrain = DeviceDMatrix(x, label=y, max_bins=32)
+    cfg = BoosterConfig(n_rounds=1, max_depth=4, max_bins=32,
+                        objective="binary:logistic", subsample=0.5, seed=21)
+    obj = O.get_objective(cfg.objective)
+    stoch = SMP.stochastic_params(cfg)
+    pb = dtrain.packed_bins()
+    margins = jnp.zeros((x.shape[0], 1), jnp.float32)
+    gh = obj.grad(margins, dtrain.label)[:, 0, :]
+    tkey = jax.random.fold_in(jax.random.fold_in(jax.random.PRNGKey(21), 0), 0)
+    ctx_c, gh_c = SMP.make_tree_context(stoch, tkey, gh, 5, compact=True)
+    ctx_m, gh_m = SMP.make_tree_context(stoch, tkey, gh, 5, compact=False)
+    tr_c = T.grow_tree(pb, gh_c, dtrain.cuts, cfg.max_depth, cfg.max_bins,
+                       cfg.split_params, ctx=ctx_c)
+    tr_m = T.grow_tree(pb, gh_m, dtrain.cuts, cfg.max_depth, cfg.max_bins,
+                       cfg.split_params, ctx=ctx_m)
+    assert bool(jnp.all(tr_c.feature == tr_m.feature))
+    assert bool(jnp.all(tr_c.split_bin == tr_m.split_bin))
+    assert float(jnp.max(jnp.abs(tr_c.leaf_value - tr_m.leaf_value))) < 1e-5
+
+
+def test_seeded_determinism_across_processes():
+    """Same seed => bit-identical boosters in two fresh subprocesses."""
+    script = textwrap.dedent("""
+        import hashlib
+        import numpy as np
+        from repro.core import Booster, DeviceDMatrix
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=(1200, 6)).astype(np.float32)
+        y = (x @ rng.normal(size=6) > 0).astype(np.float32)
+        dtrain = DeviceDMatrix(x, label=y, max_bins=32)
+        bst = Booster(n_rounds=4, max_depth=3, max_bins=32,
+                      objective="binary:logistic", subsample=0.5,
+                      colsample_bytree=0.8, seed=42).fit(dtrain)
+        h = hashlib.sha256()
+        for a in (bst.ensemble.feature, bst.ensemble.split_bin,
+                  bst.ensemble.leaf_value):
+            h.update(np.asarray(a).tobytes())
+        print("HASH", h.hexdigest())
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    hashes = []
+    for _ in range(2):
+        res = subprocess.run([sys.executable, "-c", script],
+                             capture_output=True, text=True, timeout=600,
+                             env=env)
+        assert res.returncode == 0, res.stdout + "\n" + res.stderr
+        hashes.append(res.stdout.strip().split()[-1])
+    assert hashes[0] == hashes[1]
+
+
+# --- column sampling --------------------------------------------------------
+
+def test_colsample_bytree_restricts_features():
+    """With one feature per tree, every tree's splits use a single
+    feature — observable straight off the arena."""
+    x, y = _data(n=2000, f=8)
+    dtrain = DeviceDMatrix(x, label=y, max_bins=32)
+    bst = Booster(n_rounds=6, max_depth=3, max_bins=32,
+                  objective="binary:logistic",
+                  colsample_bytree=1 / 8, seed=3).fit(dtrain)
+    ens = bst.ensemble
+    gain = np.asarray(ens.gain)
+    feat = np.asarray(ens.feature)
+    used_per_tree = [
+        set(feat[t][np.isfinite(gain[t])].tolist())
+        for t in range(ens.n_trees)
+    ]
+    assert all(len(u) <= 1 for u in used_per_tree), used_per_tree
+    # across trees, more than one feature should appear (different draws)
+    assert len(set().union(*used_per_tree)) > 1
+
+
+def test_feature_sample_mask_counts():
+    import jax
+
+    key = jax.random.PRNGKey(0)
+    m = SMP.feature_sample_mask(key, 3, 10)
+    assert m.shape == (10,) and int(jnp.sum(m)) == 3
+    base = jnp.arange(10) < 5
+    m2 = SMP.feature_sample_mask(key, 2, 10, base_mask=base)
+    assert int(jnp.sum(m2)) == 2 and bool(jnp.all(~m2[5:]))
+    m3 = SMP.feature_sample_mask(key, 4, 10, base_mask=base, n_nodes=6)
+    assert m3.shape == (6, 10)
+    assert bool(jnp.all(jnp.sum(m3, axis=1) == 4))
+    assert bool(jnp.all(~m3[:, 5:]))
+
+
+# --- monotone constraints ---------------------------------------------------
+
+def _monotone_fit(direction, n_rounds=25):
+    rng = np.random.default_rng(4)
+    n = 4000
+    x = rng.uniform(-2, 2, size=(n, 3)).astype(np.float32)
+    signal = 1.5 * x[:, 0] + np.sin(2 * x[:, 1])
+    y = (direction * signal + 0.3 * rng.normal(size=n)).astype(np.float32)
+    dtrain = DeviceDMatrix(x, label=y, max_bins=64)
+    bst = Booster(n_rounds=n_rounds, max_depth=4, max_bins=64,
+                  monotone_constraints=(direction, 0, 0)).fit(dtrain)
+    return bst
+
+
+@pytest.mark.parametrize("direction", [1, -1])
+def test_monotone_constraint_holds_on_sweep_grid(direction):
+    bst = _monotone_fit(direction)
+    grid = np.linspace(-2.2, 2.2, 64, dtype=np.float32)
+    for others in (-1.5, 0.0, 0.7):
+        xt = np.full((64, 3), others, np.float32)
+        xt[:, 0] = grid
+        pred = np.asarray(bst.predict(xt)).reshape(-1)
+        diffs = np.diff(pred) * direction
+        assert np.all(diffs >= -1e-6), (others, pred)
+
+
+def test_monotone_still_learns():
+    bst = _monotone_fit(1)
+    rng = np.random.default_rng(9)
+    xt = rng.uniform(-2, 2, size=(800, 3)).astype(np.float32)
+    yt = 1.5 * xt[:, 0] + np.sin(2 * xt[:, 1])
+    pred = np.asarray(bst.predict(xt)).reshape(-1)
+    resid = float(np.mean((pred - yt) ** 2))
+    base = float(np.mean((yt - yt.mean()) ** 2))
+    assert resid < 0.5 * base, (resid, base)
+
+
+def test_monotone_with_subsample():
+    rng = np.random.default_rng(5)
+    n = 3000
+    x = rng.uniform(-2, 2, size=(n, 4)).astype(np.float32)
+    y = (x[:, 0] + 0.2 * rng.normal(size=n)).astype(np.float32)
+    dtrain = DeviceDMatrix(x, label=y, max_bins=64)
+    bst = Booster(n_rounds=15, max_depth=4, max_bins=64, subsample=0.5,
+                  monotone_constraints=(1, 0, 0, 0), seed=6).fit(dtrain)
+    grid = np.linspace(-2, 2, 50, dtype=np.float32)
+    xt = np.zeros((50, 4), np.float32)
+    xt[:, 0] = grid
+    pred = np.asarray(bst.predict(xt)).reshape(-1)
+    assert np.all(np.diff(pred) >= -1e-6)
+
+
+# --- feature importances ----------------------------------------------------
+
+def _importance_oracle(ens, n_features):
+    """Numpy reference: walk every arena slot; finite gain == split node."""
+    gain = np.asarray(ens.gain, np.float64)
+    feat = np.asarray(ens.feature)
+    weight = np.zeros(n_features)
+    total = np.zeros(n_features)
+    for t in range(gain.shape[0]):
+        for a in range(gain.shape[1]):
+            if np.isfinite(gain[t, a]):
+                weight[feat[t, a]] += 1.0
+                total[feat[t, a]] += gain[t, a]
+    mean = np.divide(total, weight, out=np.zeros_like(total),
+                     where=weight > 0)
+    return weight, total, mean
+
+
+def test_feature_importances_match_oracle():
+    x, y = _data(n=2500, f=6)
+    dtrain = DeviceDMatrix(x, label=y, max_bins=32)
+    bst = Booster(n_rounds=5, max_depth=4, max_bins=32,
+                  objective="binary:logistic").fit(dtrain)
+    weight, total, mean = _importance_oracle(bst.ensemble, 6)
+    np.testing.assert_allclose(bst.feature_importances("weight"), weight)
+    np.testing.assert_allclose(bst.feature_importances("total_gain"), total,
+                               rtol=1e-12)
+    np.testing.assert_allclose(bst.feature_importances("gain"), mean,
+                               rtol=1e-12)
+    assert weight.sum() > 0
+    with pytest.raises(ValueError, match="importance_type"):
+        bst.feature_importances("cover")
+
+
+def test_feature_importances_survive_checkpoint(tmp_path):
+    x, y = _data(n=1500, f=5)
+    dtrain = DeviceDMatrix(x, label=y, max_bins=32)
+    bst = Booster(n_rounds=3, max_depth=3, max_bins=32,
+                  objective="binary:logistic").fit(dtrain)
+    path = str(tmp_path / "bst.ckpt")
+    bst.save(path)
+    loaded = Booster.load(path)
+    np.testing.assert_allclose(loaded.feature_importances("gain"),
+                               bst.feature_importances("gain"))
+
+
+def test_sklearn_feature_importances_normalised():
+    from repro.sklearn import XGBClassifier
+
+    x, y = _data(n=1500, f=6)
+    clf = XGBClassifier(n_estimators=5, max_depth=3, max_bins=32)
+    clf.fit(x, y)
+    fi = clf.feature_importances_
+    assert fi.shape == (6,)
+    assert abs(float(fi.sum()) - 1.0) < 1e-9
+    oracle = clf.get_booster().feature_importances("gain")
+    np.testing.assert_allclose(fi, oracle / oracle.sum())
+
+
+def test_sklearn_stochastic_params_roundtrip():
+    from repro.sklearn import XGBRegressor
+
+    reg = XGBRegressor(n_estimators=4, max_depth=3, max_bins=32,
+                       subsample=0.5, colsample_bytree=0.5,
+                       monotone_constraints=[1, 0, 0, 0], random_state=3)
+    params = reg.get_params()
+    assert params["subsample"] == 0.5
+    assert params["random_state"] == 3
+    x, y = _data(n=1200, f=4)
+    reg.fit(x, y)
+    cfg = reg.get_booster().cfg
+    assert cfg.subsample == 0.5 and cfg.colsample_bytree == 0.5
+    assert cfg.monotone_constraints == (1, 0, 0, 0) and cfg.seed == 3
