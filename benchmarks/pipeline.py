@@ -31,6 +31,11 @@ tracked across PRs (EXPERIMENTS.md §Perf):
    statically-shaped compacted row buffer, so per-round time should fall
    roughly with the subsample fraction.
 
+6. Resilience — per-round overhead of in-run checkpointing (ISSUE 6):
+   warm fit time with checkpoint_every=1 (an atomic snapshot after every
+   round, the worst-case cadence) vs the plain fit, plus the snapshot
+   size on disk. Acceptance: overhead < 5% per round at 1M x 50.
+
 `--sections` runs a subset (e.g. only external_memory) and MERGES the
 result into an existing --out file, so the artifact of record can be
 refreshed incrementally.
@@ -430,8 +435,48 @@ def stochastic_split(xj, yj, max_bins, max_depth, n_rounds):
     return out
 
 
+def resilience_split(xj, yj, max_bins, max_depth, n_rounds):
+    """Checkpoint-write overhead per round: a fit snapshotting after EVERY
+    round (checkpoint_every=1, the worst-case cadence — real deployments
+    checkpoint every tens of rounds) vs the plain fit. Both variants run
+    the chunked scan warm; the delta is the atomic write (msgpack encode +
+    crc32 + fsync + rename) plus the per-chunk host sync."""
+    import os
+    import tempfile
+
+    dtrain = DeviceDMatrix(xj, label=yj, max_bins=max_bins)
+    jax.block_until_ready(dtrain.matrix.packed)
+
+    def fit_once(ck=None, path=None):
+        bst = Booster(n_rounds=n_rounds, max_depth=max_depth,
+                      max_bins=max_bins, objective="binary:logistic")
+        t0 = time.perf_counter()
+        bst.fit(dtrain, checkpoint_every=ck, checkpoint_path=path)
+        jax.block_until_ready(bst.margins)
+        return time.perf_counter() - t0
+
+    fit_once()  # compile the full-length scan
+    t_plain = fit_once()
+    with tempfile.TemporaryDirectory() as td:
+        p = os.path.join(td, "bench.ckpt")
+        fit_once(ck=1, path=p)  # compile the length-1 chunk program
+        t_ck = fit_once(ck=1, path=p)
+        snapshot_bytes = os.path.getsize(p)
+    per_plain = t_plain / n_rounds
+    per_ck = t_ck / n_rounds
+    return {
+        "rows": int(xj.shape[0]),
+        "checkpoint_every": 1,
+        "plain_per_round_s": per_plain,
+        "checkpointed_per_round_s": per_ck,
+        "checkpoint_overhead_per_round_s": per_ck - per_plain,
+        "checkpoint_overhead_frac": (per_ck - per_plain) / per_plain,
+        "snapshot_bytes": int(snapshot_bytes),
+    }
+
+
 SECTIONS = ("phases", "api", "round_loop", "objectives", "external_memory",
-            "stochastic")
+            "stochastic", "resilience")
 
 
 def run(rows, features, max_bins, max_depth, n_rounds,
@@ -458,6 +503,9 @@ def run(rows, features, max_bins, max_depth, n_rounds,
                                                     n_rounds)
         if "stochastic" in sections:
             result["stochastic"] = stochastic_split(xj, yj, max_bins,
+                                                    max_depth, n_rounds)
+        if "resilience" in sections:
+            result["resilience"] = resilience_split(xj, yj, max_bins,
                                                     max_depth, n_rounds)
         del xj, yj, x, y
     if "external_memory" in sections:

@@ -2,13 +2,18 @@
 
 Arrays are stored as (dtype, shape, raw bytes); the pytree structure is
 stored as nested msgpack maps/lists. Works for model params, AdamW state
-and GBDT ensembles. Writes are atomic (tmp file + rename) so an interrupted
-save never corrupts the previous checkpoint.
+and GBDT ensembles. Writes are atomic and durable (tmp file + fsync +
+rename) so an interrupted save never corrupts the previous checkpoint, and
+every file is framed with a magic string + payload crc32 so truncated or
+bit-flipped checkpoints are rejected with a `CheckpointError` instead of
+being decoded into garbage (DESIGN.md §13).
 """
 from __future__ import annotations
 
 import os
+import struct
 import tempfile
+import zlib
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +22,14 @@ import numpy as np
 
 _ARR = "__arr__"
 _TUP = "__tuple__"
+
+MAGIC = b"RPROCKPT"  # 8 bytes, followed by crc32(payload) as >I, then payload
+
+
+class CheckpointError(ValueError):
+    """A checkpoint file is missing, corrupt, truncated, or the wrong
+    format/version. Subclasses ValueError so pre-existing callers that
+    caught ValueError keep working."""
 
 
 def _encode(obj):
@@ -48,14 +61,20 @@ def _decode(obj):
 
 
 def save_pytree(path: str, tree) -> None:
+    from repro.testing import faults
+
+    faults.check("checkpoint_write")
     host = jax.tree.map(lambda x: np.asarray(x) if hasattr(x, "shape") else x, tree)
     payload = msgpack.packb(_encode(host), use_bin_type=True)
+    framed = MAGIC + struct.pack(">I", zlib.crc32(payload) & 0xFFFFFFFF) + payload
     d = os.path.dirname(os.path.abspath(path))
     os.makedirs(d, exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=d)
     try:
         with os.fdopen(fd, "wb") as f:
-            f.write(payload)
+            f.write(framed)
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, path)
     except BaseException:
         if os.path.exists(tmp):
@@ -64,8 +83,37 @@ def save_pytree(path: str, tree) -> None:
 
 
 def load_pytree(path: str):
-    with open(path, "rb") as f:
-        return _decode(msgpack.unpackb(f.read(), raw=False, strict_map_key=False))
+    try:
+        with open(path, "rb") as f:
+            raw = f.read()
+    except OSError as exc:
+        raise CheckpointError(f"cannot read checkpoint {path}: {exc}") from exc
+    if raw.startswith(MAGIC):
+        header_len = len(MAGIC) + 4
+        if len(raw) < header_len:
+            raise CheckpointError(
+                f"checkpoint {path} is truncated inside its header "
+                f"({len(raw)} bytes)"
+            )
+        (expected,) = struct.unpack(">I", raw[len(MAGIC):header_len])
+        payload = raw[header_len:]
+        got = zlib.crc32(payload) & 0xFFFFFFFF
+        if got != expected:
+            raise CheckpointError(
+                f"checkpoint {path} failed its payload checksum "
+                f"(crc32 {got:#010x}, header says {expected:#010x}) — the "
+                "file is corrupt or truncated"
+            )
+    else:
+        # Pre-frame checkpoints (written before the magic+crc header) are
+        # raw msgpack; keep reading them.
+        payload = raw
+    try:
+        return _decode(msgpack.unpackb(payload, raw=False, strict_map_key=False))
+    except Exception as exc:
+        raise CheckpointError(
+            f"checkpoint {path} is not decodable msgpack: {exc}"
+        ) from exc
 
 
 def _ensemble_fields_with_gain(fields: dict) -> dict:
@@ -105,13 +153,21 @@ def load_ensemble(path: str):
 # --- self-describing Booster checkpoints -----------------------------------
 
 BOOSTER_FORMAT = "repro.booster"
-BOOSTER_VERSION = 1
+BOOSTER_VERSION = 2  # v2 adds the optional in-run "resume" section
+_READABLE_VERSIONS = (1, 2)
 
 
-def save_booster(path: str, bst) -> None:
+def save_booster(path: str, bst, *, ensemble=None, n_rounds_trained=None,
+                 history=None, resume: dict | None = None) -> None:
     """Versioned checkpoint of a fitted Booster: config + cut points + base
     score + trees + training record. Loading needs NO caller-supplied
     max_depth / objective / n_classes — the model describes itself.
+
+    The keyword overrides exist for in-run snapshots taken mid-`fit`: the
+    Booster's own attributes still describe the PREVIOUS completed fit, so
+    the checkpointer passes the partial ensemble / round count / history
+    explicitly, plus a `resume` dict (margins, ES state, RNG anchor) that
+    `Booster.resume` replays to a bit-identical continuation.
 
     Objectives are stored BY REGISTRY NAME: a model trained with a custom
     objective round-trips iff that objective was added with
@@ -134,6 +190,7 @@ def save_booster(path: str, bst) -> None:
             "objectives.register_objective(name, grad, ...) and pass the "
             "registered objective (or its name) to fit."
         )
+    ens = ensemble if ensemble is not None else bst.ensemble
     payload = {
         "format": BOOSTER_FORMAT,
         "version": BOOSTER_VERSION,
@@ -142,18 +199,22 @@ def save_booster(path: str, bst) -> None:
         "base_score": float(bst.base_score),
         "best_iteration": bst.best_iteration,
         "best_score": bst.best_score,
-        "n_rounds_trained": int(bst.n_rounds_trained),
-        "history": bst.history,
+        "n_rounds_trained": int(
+            n_rounds_trained if n_rounds_trained is not None
+            else bst.n_rounds_trained
+        ),
+        "history": history if history is not None else bst.history,
         "ensemble": {
-            "fields": {k: getattr(bst.ensemble, k)
-                       for k in _ENSEMBLE_ARRAY_FIELDS},
-            "n_classes": bst.ensemble.n_classes,
+            "fields": {k: getattr(ens, k) for k in _ENSEMBLE_ARRAY_FIELDS},
+            "n_classes": ens.n_classes,
         },
     }
+    if resume is not None:
+        payload["resume"] = resume
     save_pytree(path, payload)
 
 
-def load_booster(path: str):
+def _load_booster_payload(path: str):
     import dataclasses
 
     from repro.core.booster import Booster, BoosterConfig
@@ -161,14 +222,15 @@ def load_booster(path: str):
 
     d = load_pytree(path)
     if d.get("format") != BOOSTER_FORMAT:
-        raise ValueError(
+        raise CheckpointError(
             f"{path} is not a {BOOSTER_FORMAT} checkpoint "
             f"(format={d.get('format')!r})"
         )
-    if d.get("version") != BOOSTER_VERSION:
-        raise ValueError(
+    if d.get("version") not in _READABLE_VERSIONS:
+        raise CheckpointError(
             f"unsupported {BOOSTER_FORMAT} checkpoint version "
-            f"{d.get('version')!r} (this build reads {BOOSTER_VERSION})"
+            f"{d.get('version')!r} in {path} (this build reads "
+            f"{_READABLE_VERSIONS})"
         )
     known = {f.name for f in dataclasses.fields(BoosterConfig)}
     cfg = BoosterConfig(
@@ -177,7 +239,7 @@ def load_booster(path: str):
     from repro.core import objectives as O
 
     if cfg.objective not in O.OBJECTIVES:
-        raise ValueError(
+        raise CheckpointError(
             f"checkpoint {path} was trained with objective "
             f"{cfg.objective!r}, which is not in this process's objective "
             "registry. Custom objectives must be re-registered before "
@@ -196,4 +258,15 @@ def load_booster(path: str):
         n_classes=d["ensemble"]["n_classes"],
         base_score=d["base_score"],
     )
+    return bst, d.get("resume")
+
+
+def load_booster(path: str):
+    bst, _ = _load_booster_payload(path)
     return bst
+
+
+def load_booster_with_resume(path: str):
+    """Load a checkpoint together with its in-run resume section (None for
+    checkpoints of completed fits)."""
+    return _load_booster_payload(path)

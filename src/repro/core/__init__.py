@@ -30,6 +30,13 @@ from repro.core.objectives import (
     register_objective,
 )
 from repro.core.quantile import compute_cuts, quantize
+from repro.core.resilience import (
+    CheckpointError,
+    ChunkIntegrityError,
+    DivergenceError,
+    NumericError,
+    TrainingFault,
+)
 from repro.core.sampling import StochasticParams, TreeContext
 from repro.core.split import SplitParams
 from repro.core.tree import Tree, grow_tree
@@ -45,7 +52,12 @@ from repro.core.predict import (
 __all__ = [
     "Booster",
     "BoosterConfig",
+    "CheckpointError",
+    "ChunkIntegrityError",
     "ChunkedPackedBins",
+    "DivergenceError",
+    "NumericError",
+    "TrainingFault",
     "DeviceDMatrix",
     "ExternalDMatrix",
     "StreamingQuantileSketch",

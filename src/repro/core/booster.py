@@ -51,6 +51,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from dataclasses import dataclass
 from typing import Any, Callable, Sequence
 
@@ -62,11 +63,13 @@ from repro.core import compress as C
 from repro.core import metrics as M
 from repro.core import objectives as O
 from repro.core import quantile as Q
+from repro.core import resilience as RES
 from repro.core import sampling as SMP
 from repro.core import split as S
 from repro.core import tree as T
 from repro.core import predict as PR
 from repro.core.dmatrix import DeviceDMatrix, ExternalDMatrix, cuts_equal
+from repro.testing import faults as FA
 
 
 @dataclass(frozen=True)
@@ -94,8 +97,16 @@ class BoosterConfig:
     colsample_bynode: float = 1.0  # per-node fraction OF the level's set
     monotone_constraints: tuple | None = None  # per-feature {-1, 0, +1}
     seed: int = 0  # PRNG seed; keys fold as (seed, round, class, site)
+    # Numeric sentinel (DESIGN.md §13): "off" keeps the exact pre-sentinel
+    # compiled program; otherwise a per-round finite flag on grads/hessians/
+    # leaf weights rides the ys-stack and the host applies the policy at
+    # chunk granularity — "raise" (NumericError), "warn_skip" (zero the
+    # offending trees so later margins stay clean), "clamp" (nan_to_num +
+    # clip gradients before tree growth).
+    numeric_check: str = "off"
 
     def __post_init__(self):
+        RES.validate_numeric_policy(self.numeric_check)
         mc = self.monotone_constraints
         if mc is not None:
             mc = tuple(int(c) for c in mc)  # hashable (lists/arrays coerce)
@@ -176,12 +187,21 @@ def _round_step_fn(cfg: BoosterConfig, obj: O.Objective, hist_builder=None):
     tree and drives row/column sampling INSIDE the compiled program; the
     per-tree row buffer is compacted statically so a subsampled round does
     proportionally less scatter work. Kernel hist builders aren't
-    row-subset aware, so they fall back to masked-mode subsampling."""
+    row-subset aware, so they fall back to masked-mode subsampling.
+
+    With cfg.numeric_check != "off" the step returns a third element: a
+    scalar bool `ok` (all grads/hessians/leaf values/margins finite this
+    round) that rides the scan's ys-stack for host-side policy handling.
+    The default config keeps the exact two-tuple return and traced program.
+    The nan_grad fault site (repro.testing.faults) is read at trace time —
+    callers that cache compiled programs key on faults.trace_key."""
     k = obj.n_outputs(cfg.n_classes)
     stoch = SMP.stochastic_params(cfg)
     compact_rows = hist_builder is None
+    sentinel = cfg.numeric_check != "off"
+    fault = FA.active("nan_grad")
 
-    def round_step(data, margins, y, extra, cuts, rkey=None):
+    def round_step(data, margins, y, extra, cuts, rkey=None, round_idx=None):
         if stoch is not None and rkey is None:
             raise ValueError(
                 "this config has stochastic knobs (subsample/colsample/"
@@ -189,6 +209,14 @@ def _round_step_fn(cfg: BoosterConfig, obj: O.Objective, hist_builder=None):
                 "a per-round PRNG key (rkey)"
             )
         gh_all = obj.grad(margins, y, **extra)  # (n, k, 2)
+        if fault is not None and round_idx is not None:
+            bad_round = int(fault.payload.get("round", 0))
+            bad_val = float(fault.payload.get("value", np.nan))
+            gh_all = jnp.where(jnp.equal(round_idx, bad_round),
+                               jnp.full_like(gh_all, bad_val), gh_all)
+        gh_raw = gh_all
+        if cfg.numeric_check == "clamp":
+            gh_all = RES.clamp_gradients(gh_all)
         n_features = (
             data.n_features if isinstance(data, (C.PackedBins, C.ChunkedPackedBins))
             else data.shape[1]
@@ -224,7 +252,21 @@ def _round_step_fn(cfg: BoosterConfig, obj: O.Objective, hist_builder=None):
         # Trees only depend on round-start gradients, so the k margin
         # columns update in one barriered add (see _apply_stacked_trees).
         new_margins = _apply_stacked_trees(cfg, stacked, data, margins)
-        return stacked, new_margins
+        if not sentinel:
+            return stacked, new_margins
+        ok = RES.finite_flags(gh_raw, stacked.leaf_value, new_margins)
+        if cfg.numeric_check == "warn_skip":
+            # Neutralise the offending trees: zero leaves (the tree adds
+            # nothing to any margin), -inf gains (importances ignore it),
+            # and carry the round-start margins forward unpolluted.
+            stacked = stacked._replace(
+                leaf_value=jnp.where(ok, stacked.leaf_value,
+                                     jnp.zeros_like(stacked.leaf_value)),
+                gain=jnp.where(ok, stacked.gain,
+                               jnp.full_like(stacked.gain, -jnp.inf)),
+            )
+            new_margins = jnp.where(ok, new_margins, margins)
+        return stacked, new_margins, ok
 
     return round_step
 
@@ -236,8 +278,8 @@ def _make_round_step(cfg: BoosterConfig, obj: O.Objective, cuts: jax.Array,
     per-round key: `round_step(data, margins, y, extra, rkey=...)`."""
     step = _round_step_fn(cfg, obj, hist_builder)
 
-    def round_step(data, margins, y, extra, rkey=None):
-        return step(data, margins, y, extra, cuts, rkey)
+    def round_step(data, margins, y, extra, rkey=None, round_idx=None):
+        return step(data, margins, y, extra, cuts, rkey, round_idx)
 
     return round_step
 
@@ -275,20 +317,34 @@ def _make_train_fn(cfg: BoosterConfig, obj: O.Objective, cuts: jax.Array,
     the training margins, and EVERY requested metric of every eval set
     lands in its own ys-stack entry — multi-metric per-round history with
     zero host round trips.
+
+    Every variant returns a 6-tuple whose last element is the numeric
+    sentinel's per-round flags: a (length,) bool array when
+    cfg.numeric_check != "off", else the empty pytree () (no ys entry, so
+    the default compiled program is unchanged). An armed nan_grad fault
+    (repro.testing.faults) is baked in at trace time and keyed into the
+    cache, and forces the start_round-taking signature so the injection
+    round is absolute.
     """
     length = cfg.n_rounds if n_rounds is None else n_rounds
-    key = (cfg, obj, hist_builder, metrics, track_metric, length)
+    fault_key = FA.trace_key("nan_grad")
+    key = (cfg, obj, hist_builder, metrics, track_metric, length, fault_key)
     jitted = _TRAIN_FN_CACHE.get(key)
     stoch = SMP.stochastic_params(cfg)
+    sentinel = cfg.numeric_check != "off"
     if jitted is None:
         round_step = _round_step_fn(cfg, obj, hist_builder)
 
         def _make_body(data, y, extra, eval_data, eval_y, eval_extra, cuts,
-                       rkey_of):
+                       rkey_of, ridx_of):
             def body(carry, x):
                 margins, ev = carry
-                stacked, new_margins = round_step(data, margins, y, extra,
-                                                  cuts, rkey_of(x))
+                out = round_step(data, margins, y, extra, cuts, rkey_of(x),
+                                 ridx_of(x))
+                if sentinel:
+                    stacked, new_margins, ok = out
+                else:
+                    (stacked, new_margins), ok = out, ()
                 new_ev, ev_metrics = [], []
                 for pb, em, ey, ex in zip(eval_data, ev, eval_y, eval_extra):
                     em = _apply_stacked_trees(cfg, stacked, pb, em)
@@ -302,20 +358,16 @@ def _make_train_fn(cfg: BoosterConfig, obj: O.Objective, cuts: jax.Array,
                     for m in metrics
                 ) if track_metric else ()
                 return (new_margins, tuple(new_ev)), (stacked, tr_metrics,
-                                                      tuple(ev_metrics))
+                                                      tuple(ev_metrics), ok)
             return body
 
-        if stoch is None:
-            @jax.jit
-            def train_fn(cuts, data, margins0, y, extra, eval_data=(),
-                         eval_margins0=(), eval_y=(), eval_extra=()):
-                body = _make_body(data, y, extra, eval_data, eval_y,
-                                  eval_extra, cuts, lambda _: None)
-                (margins, ev), (all_trees, tr_metrics, ev_metrics) = \
-                    jax.lax.scan(body, (margins0, tuple(eval_margins0)),
-                                 None, length=length)
-                return margins, all_trees, tr_metrics, ev, ev_metrics
-        else:
+        def _scan(body, margins0, eval_margins0, xs):
+            (margins, ev), (all_trees, tr_metrics, ev_metrics, flags) = \
+                jax.lax.scan(body, (margins0, tuple(eval_margins0)), xs,
+                             length=length if xs is None else None)
+            return margins, all_trees, tr_metrics, ev, ev_metrics, flags
+
+        if stoch is not None:
             # Stochastic variant: the base PRNG key and the ABSOLUTE first
             # round index ride in as traced args; the scan folds
             # (key, round) per step so ES chunking and update() continuation
@@ -326,12 +378,31 @@ def _make_train_fn(cfg: BoosterConfig, obj: O.Objective, cuts: jax.Array,
                          eval_extra=()):
                 body = _make_body(
                     data, y, extra, eval_data, eval_y, eval_extra, cuts,
-                    lambda r: jax.random.fold_in(base_key, r),
+                    lambda r: jax.random.fold_in(base_key, r), lambda r: r,
                 )
                 xs = start_round + jnp.arange(length, dtype=jnp.int32)
-                (margins, ev), (all_trees, tr_metrics, ev_metrics) = \
-                    jax.lax.scan(body, (margins0, tuple(eval_margins0)), xs)
-                return margins, all_trees, tr_metrics, ev, ev_metrics
+                return _scan(body, margins0, eval_margins0, xs)
+        elif fault_key is not None:
+            # Deterministic config with an armed nan_grad fault: the scan
+            # still needs absolute round indices so the fault fires at its
+            # configured round regardless of chunk boundaries.
+            @jax.jit
+            def train_fn(cuts, start_round, data, margins0, y, extra,
+                         eval_data=(), eval_margins0=(), eval_y=(),
+                         eval_extra=()):
+                body = _make_body(data, y, extra, eval_data, eval_y,
+                                  eval_extra, cuts, lambda _: None,
+                                  lambda r: r)
+                xs = start_round + jnp.arange(length, dtype=jnp.int32)
+                return _scan(body, margins0, eval_margins0, xs)
+        else:
+            @jax.jit
+            def train_fn(cuts, data, margins0, y, extra, eval_data=(),
+                         eval_margins0=(), eval_y=(), eval_extra=()):
+                body = _make_body(data, y, extra, eval_data, eval_y,
+                                  eval_extra, cuts, lambda _: None,
+                                  lambda _: None)
+                return _scan(body, margins0, eval_margins0, None)
 
         jitted = _TRAIN_FN_CACHE[key] = train_fn
     return functools.partial(jitted, cuts)
@@ -341,6 +412,24 @@ def _scale_leaves(ens: PR.Ensemble, eta: float) -> PR.Ensemble:
     """Bake the learning rate into stored leaf values (margins during
     training already used eta; the stored ensemble must match)."""
     return ens._replace(leaf_value=ens.leaf_value * eta)
+
+
+def _stack_to_ensemble(all_trees: T.Tree, k: int,
+                       base_score: float) -> PR.Ensemble:
+    """Reshape a scan ys-stack of trees (rounds, k, arena...) into an
+    Ensemble in XGBoost's round-robin (rounds * k, arena) layout."""
+    arena = all_trees.feature.shape[-1]
+    return PR.Ensemble(
+        feature=all_trees.feature.reshape(-1, arena),
+        split_bin=all_trees.split_bin.reshape(-1, arena),
+        threshold=all_trees.threshold.reshape(-1, arena),
+        default_left=all_trees.default_left.reshape(-1, arena),
+        leaf_value=all_trees.leaf_value.reshape(-1, arena),
+        is_leaf=all_trees.is_leaf.reshape(-1, arena),
+        gain=all_trees.gain.reshape(-1, arena),
+        n_classes=k,
+        base_score=base_score,
+    )
 
 
 class Booster:
@@ -384,6 +473,11 @@ class Booster:
         self._metrics: tuple[M.Metric, ...] | None = None
         self._margins: jax.Array | None = None  # training margins cache
         self._train_dmat: DeviceDMatrix | None = None  # cache key for _margins
+        # Resilience record (DESIGN.md §13): rounds whose trees were zeroed
+        # under numeric_check="warn_skip", and a log of degradations the
+        # runtime absorbed (OOM fallback, failed checkpoint writes, clamps).
+        self.skipped_rounds: list[int] = []
+        self.resilience_events: list[dict] = []
 
     # --- small surface -----------------------------------------------------
     @property
@@ -447,6 +541,9 @@ class Booster:
         callback: Callable[[int, dict], None] | None = None,
         mesh=None,
         data_axes: Sequence[str] = ("data",),
+        checkpoint_every: int | None = None,
+        checkpoint_path: str | None = None,
+        on_oom: str = "raise",
     ) -> "Booster":
         """Train cfg.n_rounds rounds from scratch on a DeviceDMatrix or an
         ExternalDMatrix (external-memory path: the chunk-stacked compressed
@@ -469,14 +566,32 @@ class Booster:
           maximize]) tuple), appended after eval_metric.
         mesh: optional jax Mesh — rows are sharded over `data_axes` and
           histograms combined with psum (paper Algorithm 1); same Booster out.
+        checkpoint_every: write an atomic resumable snapshot every this many
+          rounds to `checkpoint_path` (DESIGN.md §13). `Booster.resume(path,
+          dtrain)` continues a killed fit to a bit-identical booster.
+        checkpoint_path: snapshot file; with checkpoint_every unset, only a
+          final complete checkpoint is written there.
+        on_oom: "raise" (default) or "external" — on device RESOURCE_EXHAUSTED
+          the fit is retried through an ExternalDMatrix with halved
+          chunk_rows (repeatedly, until it fits or chunks hit one row).
         """
-        self.ensemble = None
-        self.history = []
-        self.best_iteration = None
-        self.best_score = None
-        self.n_rounds_trained = 0
-        self._margins = None
-        self._train_dmat = None
+        if on_oom not in ("raise", "external"):
+            raise ValueError(
+                f"on_oom must be 'raise' or 'external', got {on_oom!r}"
+            )
+
+        def reset():
+            self.ensemble = None
+            self.history = []
+            self.best_iteration = None
+            self.best_score = None
+            self.n_rounds_trained = 0
+            self._margins = None
+            self._train_dmat = None
+            self.skipped_rounds = []
+
+        reset()
+        self.resilience_events = []
         if obj is not None:
             resolved = O.as_objective(obj)
             self._obj = resolved
@@ -488,10 +603,46 @@ class Booster:
         self.base_score = float(self.obj.init_base_score(
             dtrain.label, **O.config_kwargs(self.cfg)
         ))
-        self._run_rounds(dtrain, self.cfg.n_rounds, evals,
-                         early_stopping_rounds, verbose_every, callback,
-                         mesh, data_axes)
-        return self
+        dmat = dtrain
+        while True:
+            try:
+                self._run_rounds(dmat, self.cfg.n_rounds, evals,
+                                 early_stopping_rounds, verbose_every,
+                                 callback, mesh, data_axes,
+                                 checkpoint_every=checkpoint_every,
+                                 checkpoint_path=checkpoint_path)
+                return self
+            except Exception as exc:
+                if on_oom != "external" or not RES.is_oom(exc):
+                    raise
+                dmat = self._oom_fallback_matrix(dmat, exc)
+                reset()  # drop any partial history before the re-fit
+
+    def _oom_fallback_matrix(self, dmat, exc):
+        """Next, smaller-footprint training matrix after a device OOM: an
+        in-memory matrix degrades to external memory at half its rows per
+        chunk; an external matrix halves chunk_rows again. Re-raises the
+        OOM when chunks can no longer shrink."""
+        if isinstance(dmat, ExternalDMatrix):
+            new_rows = dmat.chunk_rows // 2
+            if new_rows < 1:
+                raise exc
+            nd = dmat.rechunk(new_rows)
+        else:
+            nd = ExternalDMatrix.from_dmatrix(
+                dmat, chunk_rows=max(dmat.n_rows // 2, 1)
+            )
+        warnings.warn(
+            f"device OOM during fit ({str(exc).splitlines()[0][:120]}); "
+            f"retrying via external-memory training with "
+            f"chunk_rows={nd.chunk_rows} (on_oom='external')"
+        )
+        self.resilience_events.append({
+            "event": "oom_fallback",
+            "chunk_rows": int(nd.chunk_rows),
+            "error": str(exc)[:200],
+        })
+        return nd
 
     def update(
         self,
@@ -506,6 +657,8 @@ class Booster:
         callback: Callable[[int, dict], None] | None = None,
         mesh=None,
         data_axes: Sequence[str] = ("data",),
+        checkpoint_every: int | None = None,
+        checkpoint_path: str | None = None,
     ) -> "Booster":
         """Continue training for n_rounds more rounds (warm start).
 
@@ -527,8 +680,87 @@ class Booster:
                 or self._metrics is None:
             self._metrics = self._resolve_metrics(eval_metric, custom_metric)
         self._run_rounds(dtrain, n_rounds, evals, early_stopping_rounds,
-                         verbose_every, callback, mesh, data_axes)
+                         verbose_every, callback, mesh, data_axes,
+                         checkpoint_every=checkpoint_every,
+                         checkpoint_path=checkpoint_path)
         return self
+
+    @classmethod
+    def resume(
+        cls,
+        path: str,
+        dtrain,
+        evals: Sequence = (),
+        *,
+        callback: Callable[[int, dict], None] | None = None,
+        verbose_every: int | None = None,
+        checkpoint_every: int | None = None,
+        checkpoint_path: str | None = None,
+        mesh=None,
+        data_axes: Sequence[str] = ("data",),
+    ) -> "Booster":
+        """Continue a killed fit from an in-run checkpoint (DESIGN.md §13).
+
+        `dtrain` (and `evals`, same sets in the same order) must be rebuilt
+        exactly as for the original fit — the checkpoint carries the model,
+        margins, ES state and the absolute-round PRNG anchor, but not the
+        data. The resumed booster is bit-identical (trees, margins,
+        predictions) to one from an uninterrupted fit: margins re-enter the
+        scan exactly as carried, the stochastic key stream folds absolute
+        round indices, and ES stop checks fire at the same fit-relative
+        boundaries.
+
+        Checkpointing continues with the original cadence to the same file
+        by default (override with checkpoint_every/checkpoint_path); the
+        file is rewritten as a completed checkpoint when the fit finishes.
+        """
+        from repro.checkpoint import io as CIO
+
+        bst, rs = CIO.load_booster_with_resume(path)
+        if rs is None:
+            raise CIO.CheckpointError(
+                f"{path} checkpoints a COMPLETED fit (no resume section); "
+                "use Booster.load() to load it, or update() to train further"
+            )
+        try:
+            bst._metrics = tuple(
+                M.get_metric(n) for n in rs["metric_names"]
+            ) or None
+        except Exception as exc:
+            raise ValueError(
+                f"cannot resolve checkpointed eval metrics "
+                f"{list(rs['metric_names'])}: {exc}. Re-register custom "
+                "metrics (metrics.register_metric) before resuming."
+            ) from exc
+        if dtrain.label is None:
+            raise ValueError("dtrain must be constructed with label= to resume")
+        if not bst._cuts_match(dtrain.cuts):
+            raise ValueError(
+                "dtrain was quantised with different cuts than the "
+                "checkpointed fit; rebuild it from the same data with the "
+                "same max_bins (or with ref= the original matrix)"
+            )
+        evals_n = bst._normalise_evals(evals, dtrain)
+        names = [n for _, n in evals_n]
+        want = [str(n) for n in rs["eval_names"]]
+        if names != want:
+            raise ValueError(
+                f"resume requires the original fit's eval sets in order: "
+                f"expected {want}, got {names}"
+            )
+        remaining = int(rs["target"]) - int(rs["rounds_done"])
+        if remaining <= 0:
+            return bst
+        ve = int(rs.get("verbose_every", 0)) if verbose_every is None \
+            else verbose_every
+        ck = (int(rs.get("checkpoint_every", 0)) or None) \
+            if checkpoint_every is None else checkpoint_every
+        cpath = checkpoint_path if checkpoint_path is not None else path
+        es = int(rs.get("early_stopping_rounds", 0)) or None
+        bst._run_rounds(dtrain, remaining, evals_n, es, ve, callback, mesh,
+                        tuple(data_axes), checkpoint_every=ck,
+                        checkpoint_path=cpath, resume_state=rs)
+        return bst
 
     def _cuts_match(self, cuts: jax.Array) -> bool:
         return cuts_equal(self.cuts, cuts)
@@ -570,7 +802,9 @@ class Booster:
         return out
 
     def _run_rounds(self, dtrain, n_rounds, evals, early_stopping_rounds,
-                    verbose_every, callback, mesh, data_axes):
+                    verbose_every, callback, mesh, data_axes,
+                    checkpoint_every=None, checkpoint_path=None,
+                    resume_state=None):
         if n_rounds <= 0:
             raise ValueError(f"n_rounds must be positive, got {n_rounds}")
         cfg, obj = self.cfg, self.obj
@@ -579,6 +813,16 @@ class Booster:
                 "early_stopping_rounds requires at least one eval set "
                 "(pass evals=[(DeviceDMatrix(..., ref=dtrain), name)])"
             )
+        if checkpoint_every is not None:
+            if checkpoint_every <= 0:
+                raise ValueError(
+                    f"checkpoint_every must be positive, got {checkpoint_every}"
+                )
+            if checkpoint_path is None:
+                raise ValueError(
+                    "checkpoint_every requires checkpoint_path= (the file "
+                    "snapshots are written to)"
+                )
         if dtrain.max_bins != cfg.max_bins:
             raise ValueError(
                 f"{type(dtrain).__name__} was quantised with "
@@ -601,17 +845,34 @@ class Booster:
         metrics = self._metrics if track_metric else ()
 
         y = dtrain.label
-        if self._train_dmat is dtrain and self._margins is not None:
-            margins = self._margins  # exact continuation on the same matrix
-        else:
-            margins = self._initial_margins(dtrain)
-        extra = self._dataset_extra(dtrain)
-        stoch = SMP.stochastic_params(cfg)
-        base_key = jax.random.PRNGKey(cfg.seed) if stoch is not None else None
         eval_pbs = tuple(d.packed_bins() for d, _ in evals)
         eval_ys = tuple(d.label for d, _ in evals)
         eval_extras = tuple(self._dataset_extra(d) for d, _ in evals)
-        eval_margins = tuple(self._initial_margins(d) for d, _ in evals)
+        if resume_state is not None:
+            # Checkpointed margins re-enter the scan exactly as carried —
+            # rebuilding them by prediction is NOT bit-identical, so both
+            # training and eval margins come from the snapshot verbatim.
+            margins = jnp.asarray(resume_state["margins"], jnp.float32)
+            eval_margins = tuple(
+                jnp.asarray(m, jnp.float32)
+                for m in resume_state["eval_margins"]
+            )
+            done = int(resume_state["rounds_done"])
+            rounds_before = int(resume_state["rounds_before"])
+            es_history = [float(v) for v in resume_state["es_history"]]
+        else:
+            if self._train_dmat is dtrain and self._margins is not None:
+                margins = self._margins  # exact continuation, same matrix
+            else:
+                margins = self._initial_margins(dtrain)
+            eval_margins = tuple(self._initial_margins(d) for d, _ in evals)
+            done = 0
+            rounds_before = self.n_rounds_trained  # absolute offset (keys)
+            es_history = []
+        target = done + n_rounds
+        extra = self._dataset_extra(dtrain)
+        stoch = SMP.stochastic_params(cfg)
+        base_key = jax.random.PRNGKey(cfg.seed) if stoch is not None else None
 
         if mesh is not None:
             if dtrain.group_ids is not None:
@@ -650,119 +911,269 @@ class Booster:
                     if cfg.compress_matrix
                     else KO.build_histograms_kernel
                 )
-            fns: dict[int, Callable] = {}
+            fns: dict = {}
 
             def run_chunk(length, start_round, margins, eval_margins):
-                fn = fns.get(length)
+                fkey = FA.trace_key("nan_grad")
+                fn = fns.get((length, fkey))
                 if fn is None:
-                    fn = fns[length] = _make_train_fn(
+                    fn = fns[(length, fkey)] = _make_train_fn(
                         cfg, obj, self.cuts, hist_builder, metrics,
                         track_metric, n_rounds=length,
                     )
-                if stoch is None:
-                    return fn(data, margins, y, extra, eval_pbs,
+                if stoch is not None:
+                    return fn(base_key, jnp.asarray(start_round, jnp.int32),
+                              data, margins, y, extra, eval_pbs,
                               eval_margins, eval_ys, eval_extras)
-                return fn(base_key, jnp.asarray(start_round, jnp.int32),
-                          data, margins, y, extra, eval_pbs, eval_margins,
+                if fkey is not None:
+                    return fn(jnp.asarray(start_round, jnp.int32), data,
+                              margins, y, extra, eval_pbs, eval_margins,
+                              eval_ys, eval_extras)
+                return fn(data, margins, y, extra, eval_pbs, eval_margins,
                           eval_ys, eval_extras)
 
-        # Early stopping runs the scan in compiled chunks of e rounds with
-        # one host read per chunk (never per round); otherwise one chunk.
+        FA.check("oom")
+        # The scan runs in compiled chunks delimited by the next early-
+        # stopping boundary (multiples of e, one host read per chunk —
+        # never per round), the next checkpoint boundary (multiples of
+        # checkpoint_every), and the end of the run. Boundaries are FIT-
+        # relative, so a resumed fit re-enters the identical chunk schedule
+        # and ES decisions replay exactly.
         es_on = bool(early_stopping_rounds) and bool(evals)
-        chunk = min(early_stopping_rounds, n_rounds) if es_on else n_rounds
-        trees_chunks, metric_chunks, ev_metric_chunks = [], [], []
-        rounds_before = self.n_rounds_trained  # absolute round offset (keys)
-        trained = 0
-        es_history: list[float] = []
+        e = int(early_stopping_rounds) if es_on else None
+        ck = int(checkpoint_every) if checkpoint_every else None
+        eval_names = [name for _, name in evals]
+        k = obj.n_outputs(cfg.n_classes)
+        run_ens: PR.Ensemble | None = None  # this call's trees, scaled
         best_round: int | None = None
         stopped = False
-        while trained < n_rounds and not stopped:
-            length = min(chunk, n_rounds - trained)
-            margins, all_trees, tr_metrics, eval_margins, ev_metrics = \
-                run_chunk(length, rounds_before + trained, margins,
-                          eval_margins)
-            trees_chunks.append(all_trees)
-            metric_chunks.append(tr_metrics)
-            ev_metric_chunks.append(ev_metrics)
-            trained += length
+        last_chunk = None  # (start, tr_host, ev_host) for the final record
+        while done < target and not stopped:
+            nxt = target
+            if es_on:
+                nxt = min(nxt, (done // e + 1) * e)
+            if ck:
+                nxt = min(nxt, (done // ck + 1) * ck)
+            length = nxt - done
+            margins, all_trees, tr_metrics, eval_margins, ev_metrics, flags \
+                = run_chunk(length, rounds_before + done, margins,
+                            eval_margins)
+            self._handle_numeric_flags(flags, rounds_before + done)
+            # The scan's ys-stack IS the ensemble arena: (rounds, k, arena)
+            # fields reshaped to XGBoost's round-robin (rounds * k, arena)
+            # layout — no per-round host round trips.
+            chunk_ens = _scale_leaves(
+                _stack_to_ensemble(all_trees, k, self.base_score),
+                cfg.learning_rate,
+            )
+            run_ens = chunk_ens if run_ens is None \
+                else PR.concat_ensembles(run_ens, chunk_ens)
+            tr_host = [np.asarray(v) for v in tr_metrics]
+            ev_host = [[np.asarray(v) for v in vals] for vals in ev_metrics]
+            if record_every > 0:
+                self._record_history(done, length, tr_host, ev_host, metrics,
+                                     eval_names, rounds_before, record_every,
+                                     callback)
+            last_chunk = (done, tr_host, ev_host)
+            self._check_divergence(ev_host, eval_names, metrics,
+                                   rounds_before + done)
             if es_on:
                 # The LAST metric of the LAST eval set drives stopping, in
                 # the direction that METRIC declares (XGBoost convention;
-                # the objective itself carries no direction).
-                es_history.extend(np.asarray(ev_metrics[-1][-1]).tolist())
-                arr = np.asarray(es_history)
-                best_round = int(np.argmax(arr) if metrics[-1].maximize
-                                 else np.argmin(arr))
-                if (len(arr) - 1 - best_round) >= early_stopping_rounds:
-                    stopped = True
+                # the objective itself carries no direction). The stop
+                # check fires only at fit-relative multiples of e (and at
+                # the end), so extra checkpoint boundaries never change the
+                # stopping decision.
+                es_history.extend(ev_host[-1][-1].tolist())
+                if nxt % e == 0 or nxt == target:
+                    arr = np.asarray(es_history)
+                    best_round = int(np.argmax(arr) if metrics[-1].maximize
+                                     else np.argmin(arr))
+                    if (len(arr) - 1 - best_round) >= e:
+                        stopped = True
+            done = nxt
+            if ck and not stopped and done < target and done % ck == 0:
+                self._write_checkpoint(
+                    checkpoint_path, run_ens=run_ens, done=done,
+                    target=target, rounds_before=rounds_before,
+                    margins=margins, eval_margins=eval_margins,
+                    es_history=es_history, early_stopping_rounds=e,
+                    checkpoint_every=ck, verbose_every=verbose_every,
+                    eval_names=eval_names,
+                )
         jax.block_until_ready(margins)
 
-        if len(trees_chunks) == 1:
-            all_trees = trees_chunks[0]
-        else:
-            all_trees = jax.tree.map(
-                lambda *xs: jnp.concatenate(xs, axis=0), *trees_chunks
-            )
-        keep_rounds = best_round + 1 if stopped else trained
+        # Deferred final history record: the cadence above records round r
+        # when r % record_every == 0, but the last trained round is recorded
+        # unconditionally and is only known once the loop exits.
+        if record_every > 0 and last_chunk is not None:
+            start, tr_host, ev_host = last_chunk
+            final_r = done - 1
+            if final_r % record_every != 0:
+                self._emit_record(final_r, final_r - start, tr_host, ev_host,
+                                  metrics, eval_names, rounds_before,
+                                  callback)
 
-        # The scan's ys-stack IS the ensemble arena: (rounds, k, arena)
-        # fields reshaped to XGBoost's round-robin (rounds * k, arena)
-        # layout — no per-round host round trips, no concatenate per round.
-        k = obj.n_outputs(cfg.n_classes)
-        arena = all_trees.feature.shape[-1]
-        new = PR.Ensemble(
-            feature=all_trees.feature.reshape(-1, arena),
-            split_bin=all_trees.split_bin.reshape(-1, arena),
-            threshold=all_trees.threshold.reshape(-1, arena),
-            default_left=all_trees.default_left.reshape(-1, arena),
-            leaf_value=all_trees.leaf_value.reshape(-1, arena),
-            is_leaf=all_trees.is_leaf.reshape(-1, arena),
-            gain=all_trees.gain.reshape(-1, arena),
-            n_classes=k,
-            base_score=self.base_score,
-        )
-        new = _scale_leaves(new, cfg.learning_rate)
-        if keep_rounds != trained:  # early stopped: keep best_iteration + 1
-            new = PR.truncate_rounds(new, keep_rounds)
-        self.ensemble = (
-            new if self.ensemble is None
-            else PR.concat_ensembles(self.ensemble, new)
-        )
-        self.n_rounds_trained = rounds_before + keep_rounds
-        if es_on:
+        keep = best_round + 1 if stopped else done
+        full = run_ens if self.ensemble is None \
+            else PR.concat_ensembles(self.ensemble, run_ens)
+        if stopped and keep < done:
+            # Early stopped: truncate the FULL ensemble to best_iteration+1
+            # total rounds (best_round may precede a resume point, so the
+            # cut can fall inside the pre-resume trees).
+            full = PR.truncate_rounds(full, rounds_before + keep)
+        self.ensemble = full
+        self.n_rounds_trained = rounds_before + keep
+        if es_on and best_round is not None:
             self.best_iteration = rounds_before + best_round
             self.best_score = float(es_history[best_round])
-        if keep_rounds == trained:
+        if keep == done:
             self._margins = margins
             self._train_dmat = dtrain
         else:  # ensemble truncated; cached margins would be stale
             self._margins = None
             self._train_dmat = None
+        if checkpoint_path is not None:
+            self._write_final_checkpoint(checkpoint_path)
 
-        # History: honest per-round records (ALL metrics computed in-scan).
-        if record_every > 0:
-            tr_host = [
-                np.concatenate([np.asarray(c[j]) for c in metric_chunks])
-                for j in range(len(metrics))
-            ]
-            ev_host = [
-                [np.concatenate([np.asarray(c[i][j])
-                                 for c in ev_metric_chunks])
-                 for j in range(len(metrics))]
-                for i in range(len(evals))
-            ]
-            for r in range(trained):
-                if r % record_every and r != trained - 1:
+    # --- resilience plumbing (DESIGN.md §13) --------------------------------
+    def _record_history(self, start, length, tr_host, ev_host, metrics,
+                        eval_names, rounds_before, record_every, callback):
+        for i in range(length):
+            r = start + i
+            if r % record_every:
+                continue
+            self._emit_record(r, i, tr_host, ev_host, metrics, eval_names,
+                              rounds_before, callback)
+
+    def _emit_record(self, r, i, tr_host, ev_host, metrics, eval_names,
+                     rounds_before, callback):
+        rec: dict[str, Any] = {"round": rounds_before + r}
+        for j, m in enumerate(metrics):
+            rec[f"train_{m.name}"] = float(tr_host[j][i])
+        for name, vals in zip(eval_names, ev_host):
+            for j, m in enumerate(metrics):
+                rec[f"{name}_{m.name}"] = float(vals[j][i])
+        self.history.append(rec)
+        if callback:
+            callback(rounds_before + r, rec)
+
+    def _handle_numeric_flags(self, flags, start_round):
+        """Host-side numeric-sentinel policy, applied once per chunk from
+        the per-round finite flags that rode the ys-stack."""
+        policy = self.cfg.numeric_check
+        if policy == "off" or isinstance(flags, tuple):
+            return
+        bad = np.flatnonzero(~np.asarray(flags))
+        if bad.size == 0:
+            return
+        rounds = [int(start_round + b) for b in bad]
+        if policy == "raise":
+            raise RES.NumericError(
+                f"non-finite gradients/hessians/leaf values at boosting "
+                f"round(s) {rounds} (numeric_check='raise'). Check labels "
+                "and objective stability, or train with numeric_check="
+                "'warn_skip' or 'clamp'."
+            )
+        if policy == "warn_skip":
+            warnings.warn(
+                f"round(s) {rounds} produced non-finite values; their trees "
+                "were zeroed and margins carried forward unchanged "
+                "(numeric_check='warn_skip')"
+            )
+            self.skipped_rounds.extend(rounds)
+            self.resilience_events.append(
+                {"event": "rounds_skipped", "rounds": rounds}
+            )
+        else:  # clamp
+            warnings.warn(
+                f"non-finite gradients at round(s) {rounds} were replaced/"
+                "clipped before tree growth (numeric_check='clamp')"
+            )
+            self.resilience_events.append(
+                {"event": "gradients_clamped", "rounds": rounds}
+            )
+
+    def _check_divergence(self, ev_host, eval_names, metrics, start_round):
+        """Divergence detection on eval metrics (active with any non-"off"
+        numeric_check): a non-finite metric means later rounds can only
+        compound the damage."""
+        if self.cfg.numeric_check == "off" or not eval_names:
+            return
+        for name, vals in zip(eval_names, ev_host):
+            for m, arr in zip(metrics, vals):
+                bad = np.flatnonzero(~np.isfinite(arr))
+                if bad.size == 0:
                     continue
-                rec: dict[str, Any] = {"round": rounds_before + r}
-                for j, m in enumerate(metrics):
-                    rec[f"train_{m.name}"] = float(tr_host[j][r])
-                for (d, name), vals in zip(evals, ev_host):
-                    for j, m in enumerate(metrics):
-                        rec[f"{name}_{m.name}"] = float(vals[j][r])
-                self.history.append(rec)
-                if callback:
-                    callback(rounds_before + r, rec)
+                at = int(start_round + bad[0])
+                msg = (f"eval metric {name}_{m.name} became non-finite at "
+                       f"round {at} — the fit is diverging")
+                if self.cfg.numeric_check == "raise":
+                    raise RES.DivergenceError(msg)
+                warnings.warn(msg)
+                self.resilience_events.append(
+                    {"event": "divergence", "metric": f"{name}_{m.name}",
+                     "round": at}
+                )
+                return
+
+    def _write_checkpoint(self, path, *, run_ens, done, target, rounds_before,
+                          margins, eval_margins, es_history,
+                          early_stopping_rounds, checkpoint_every,
+                          verbose_every, eval_names):
+        """Atomic in-run snapshot at a chunk boundary: the partial ensemble
+        plus everything `resume` needs to replay the rest of the fit
+        bit-identically (carried margins, ES history, the absolute-round
+        PRNG anchor, and the recording cadence)."""
+        from repro.checkpoint import io as CIO
+
+        ens = run_ens if self.ensemble is None \
+            else PR.concat_ensembles(self.ensemble, run_ens)
+        resume = {
+            "rounds_done": int(done),
+            "target": int(target),
+            "rounds_before": int(rounds_before),
+            "margins": margins,
+            "eval_margins": tuple(eval_margins),
+            "es_history": [float(v) for v in es_history],
+            "early_stopping_rounds": int(early_stopping_rounds or 0),
+            "checkpoint_every": int(checkpoint_every or 0),
+            "verbose_every": int(verbose_every or 0),
+            "eval_names": [str(n) for n in eval_names],
+            "metric_names": [m.name for m in (self._metrics or ())],
+        }
+        self._save_snapshot(
+            path,
+            lambda: CIO.save_booster(
+                path, self, ensemble=ens,
+                n_rounds_trained=rounds_before + done,
+                history=self.history, resume=resume,
+            ),
+            at_round=rounds_before + done,
+        )
+
+    def _write_final_checkpoint(self, path):
+        from repro.checkpoint import io as CIO
+
+        self._save_snapshot(path, lambda: CIO.save_booster(path, self),
+                            at_round=self.n_rounds_trained)
+
+    def _save_snapshot(self, path, write, at_round):
+        """Checkpoint writes retry on transient I/O errors and degrade to a
+        warning on persistent failure — losing a snapshot must not kill the
+        training run it exists to protect."""
+        try:
+            RES.with_retries(write, retries=2, backoff=0.05,
+                             retry_on=(OSError,))
+        except OSError as exc:
+            warnings.warn(
+                f"checkpoint write to {path} failed after retries ({exc}); "
+                "training continues without this snapshot"
+            )
+            self.resilience_events.append({
+                "event": "checkpoint_write_failed", "path": str(path),
+                "round": int(at_round), "error": str(exc),
+            })
 
     # --- inference ---------------------------------------------------------
     def predict_margins(self, data) -> jax.Array:

@@ -24,6 +24,7 @@ from jax.sharding import PartitionSpec as P
 from repro import jaxcompat
 from repro.core import compress as C
 from repro.core import objectives as O
+from repro.core import resilience as RES
 from repro.core import sampling as SMP
 from repro.core import tree as T
 
@@ -67,6 +68,7 @@ def make_distributed_round(
     cfg_kw = O.config_kwargs(cfg)  # static under shard_map (cfg keys cache)
     chunked = chunk_rows is not None
     stoch = SMP.stochastic_params(cfg)
+    sentinel = cfg.numeric_check != "off"
     # Static shard geometry for the shared-key sampling (DESIGN.md §12):
     # every shard draws the SAME global row selection / feature masks from
     # the replicated per-round key, then slices its own rows — identical to
@@ -102,6 +104,9 @@ def make_distributed_round(
             else rep.shape[1]
         )
         gh_all = obj.grad(margins, y, **cfg_kw)
+        gh_raw = gh_all
+        if cfg.numeric_check == "clamp":
+            gh_all = RES.clamp_gradients(gh_all)
         trees = []
         for c in range(k):
             gh_c = gh_all[:, c, :]
@@ -134,7 +139,27 @@ def make_distributed_round(
         # One barriered add for all k columns, shared with the
         # single-device scan so both compile the update identically.
         new_margins = B._apply_stacked_trees(cfg, stacked, rep, margins)
-        return stacked, new_margins
+        if not sentinel:
+            return stacked, new_margins
+        # Gradients/margins are shard-local; a shard seeing non-finite
+        # values must poison the round globally (trees are replicated), so
+        # the bad count is psum-all-reduced before the policy applies.
+        ok_local = RES.finite_flags(gh_raw, stacked.leaf_value, new_margins)
+        bad = jax.lax.psum(
+            jnp.where(ok_local, 0, 1).astype(jnp.int32), tuple(data_axes)
+        )
+        ok = bad == 0
+        if cfg.numeric_check == "warn_skip":
+            # Same neutralisation as booster._round_step_fn: zero leaves,
+            # -inf gains, round-start margins carried forward.
+            stacked = stacked._replace(
+                leaf_value=jnp.where(ok, stacked.leaf_value,
+                                     jnp.zeros_like(stacked.leaf_value)),
+                gain=jnp.where(ok, stacked.gain,
+                               jnp.full_like(stacked.gain, -jnp.inf)),
+            )
+            new_margins = jnp.where(ok, new_margins, margins)
+        return stacked, new_margins, ok
 
     axes = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
     row_spec = P(axes)
@@ -150,11 +175,14 @@ def make_distributed_round(
     in_specs = (data_spec, row_spec, row_spec, P())
     if stoch is not None:
         in_specs = in_specs + (P(),)  # per-round key, replicated
+    out_specs = (P(), row_spec)
+    if sentinel:
+        out_specs = out_specs + (P(),)  # psum'd ok flag, replicated
     shard_fn = jaxcompat.shard_map(
         round_body,
         mesh=mesh,
         in_specs=in_specs,
-        out_specs=(P(), row_spec),
+        out_specs=out_specs,
     )
     fn = _ROUND_FN_CACHE[key] = jax.jit(shard_fn)
     return fn
@@ -178,10 +206,11 @@ def make_chunk_runner(
     per shard so each shard decodes independently), then exposes the same
     chunk interface as the single-device scan:
 
-        run(length, margins, eval_margins) ->
+        run(length, start_round, margins, eval_margins) ->
             (margins, stacked_trees (length, k, arena...),
              train_metrics tuple-per-metric of (length,), eval_margins,
-             eval_metrics tuple-per-set of tuple-per-metric of (length,))
+             eval_metrics tuple-per-set of tuple-per-metric of (length,),
+             sentinel flags ((length,) bool, or () when numeric_check="off"))
 
     The per-round loop dispatches one shard_map'd program per round (one
     psum per tree level, Algorithm 1); eval-set margins are maintained
@@ -272,12 +301,14 @@ def make_chunk_runner(
     stoch = SMP.stochastic_params(cfg)
     base_key = jax.random.PRNGKey(cfg.seed) if stoch is not None else None
 
+    sentinel = cfg.numeric_check != "off"
+
     def run(length, start_round, margins, eval_margins):
         margins = jax.device_put(margins, row_sharding)
-        trees, tr_rows, ev_rows = [], [], []
+        trees, tr_rows, ev_rows, ok_rows = [], [], [], []
         for r in range(length):
             if stoch is None:
-                stacked, margins = round_fn(data, margins, y, cuts)
+                out = round_fn(data, margins, y, cuts)
             else:
                 # Same fold path as the single-device scan body, from the
                 # ABSOLUTE round index — single- and multi-device fits draw
@@ -285,7 +316,12 @@ def make_chunk_runner(
                 rkey = jax.random.fold_in(
                     base_key, jnp.asarray(start_round + r, jnp.int32)
                 )
-                stacked, margins = round_fn(data, margins, y, cuts, rkey)
+                out = round_fn(data, margins, y, cuts, rkey)
+            if sentinel:
+                stacked, margins, ok = out
+                ok_rows.append(ok)
+            else:
+                stacked, margins = out
             trees.append(stacked)
             eval_margins = tuple(
                 apply_eval(stacked, pb, em)
@@ -310,7 +346,8 @@ def make_chunk_runner(
                   for j in range(len(metrics)))
             for i in range(len(eval_pbs))
         )
-        return margins, all_trees, tr_metrics, eval_margins, ev_metrics
+        flags = jnp.stack(ok_rows) if sentinel else ()
+        return margins, all_trees, tr_metrics, eval_margins, ev_metrics, flags
 
     return run
 

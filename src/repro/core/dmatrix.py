@@ -33,12 +33,16 @@ Two batch-iterator constructors remove the all-resident-at-once ceiling
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compress as C
 from repro.core import quantile as Q
+from repro.core import resilience as RES
+from repro.testing import faults as FA
 
 
 def _split_batch_item(item, index: int):
@@ -83,6 +87,8 @@ def _collect_batches(batches):
             )
         if x.shape[0] == 0:
             raise ValueError(f"batch {i} is empty (0 rows)")
+        if x.shape[1] == 0:
+            raise ValueError(f"batch {i} has 0 features")
         if n_features is None:
             n_features, dtype0 = x.shape[1], x.dtype
         else:
@@ -107,6 +113,11 @@ def _collect_batches(batches):
                 raise ValueError(
                     f"batch {i}: label has {y.shape[0]} rows, x has {x.shape[0]}"
                 )
+            if not np.isfinite(y).all():
+                raise ValueError(
+                    f"batch {i}: label contains non-finite values (NaN/inf); "
+                    "clean or drop those rows before training"
+                )
             ys.append(y)
         if (g is None) != (not gs) and i > 0:
             raise ValueError(
@@ -120,7 +131,14 @@ def _collect_batches(batches):
                     f"x has {x.shape[0]}"
                 )
             gs.append(g)
-        xs.append(np.ascontiguousarray(x, np.float32))
+        xf = np.ascontiguousarray(x, np.float32)
+        if np.isinf(xf).any():
+            raise ValueError(
+                f"batch {i} contains infinite feature values; replace ±inf "
+                "with NaN (legal missing marker) or a large finite value "
+                "before quantisation"
+            )
+        xs.append(xf)
     if not xs:
         raise ValueError("batch iterator produced no batches")
     label = np.concatenate(ys) if ys else None
@@ -162,6 +180,22 @@ class DeviceDMatrix:
         x = jnp.asarray(x, jnp.float32)
         if x.ndim != 2:
             raise ValueError(f"x must be 2-D (n_rows, n_features), got {x.shape}")
+        if x.shape[0] == 0:
+            raise ValueError(
+                "x has 0 rows; cannot build a DeviceDMatrix from an empty "
+                "matrix"
+            )
+        if x.shape[1] == 0:
+            raise ValueError(
+                "x has 0 features; every row needs at least one feature "
+                "column"
+            )
+        if bool(jnp.any(jnp.isinf(x))):
+            raise ValueError(
+                "x contains infinite feature values; replace ±inf with NaN "
+                "(the legal missing marker) or a large finite value before "
+                "quantisation"
+            )
         if ref is not None:
             cuts = ref.cuts
             max_bins = ref.max_bins
@@ -183,6 +217,12 @@ class DeviceDMatrix:
         if self.label is not None and self.label.shape[0] != self.n_rows:
             raise ValueError(
                 f"label has {self.label.shape[0]} rows, x has {self.n_rows}"
+            )
+        if self.label is not None and \
+                not bool(jnp.all(jnp.isfinite(self.label))):
+            raise ValueError(
+                "label contains non-finite values (NaN/inf); clean or drop "
+                "those rows before training"
             )
 
     @classmethod
@@ -290,6 +330,13 @@ class ExternalDMatrix:
         artificially chunked data and parity testing), or a precomputed
         (n_features, n_value_bins - 1) cut array.
       sketch_capacity: per-feature summary size for cuts="sketch".
+      verify_chunks: verify each chunk's crc32 (recorded at build) on every
+        device page-in, so bit-flips between build and load surface as a
+        ChunkIntegrityError instead of silently training on garbage
+        (DESIGN.md §13).
+      load_retries / load_backoff: transient page-in failures (I/O errors,
+        integrity failures in the transfer path) are retried this many
+        times with exponential backoff before the error propagates.
     """
 
     def __init__(
@@ -301,6 +348,9 @@ class ExternalDMatrix:
         ref=None,
         cuts="sketch",
         sketch_capacity: int = 1024,
+        verify_chunks: bool = True,
+        load_retries: int = 2,
+        load_backoff: float = 0.05,
     ):
         if chunk_rows <= 0:
             raise ValueError(f"chunk_rows must be positive, got {chunk_rows}")
@@ -367,6 +417,86 @@ class ExternalDMatrix:
         self.group_ids = (
             None if groups is None else jnp.asarray(groups, jnp.int32)
         )
+        self.verify_chunks = verify_chunks
+        self.load_retries = load_retries
+        self.load_backoff = load_backoff
+        self._chunk_crcs = RES.crc32_chunks(host_chunks)
+
+    @classmethod
+    def from_dmatrix(cls, dmat: "DeviceDMatrix", *, chunk_rows: int,
+                     **kw) -> "ExternalDMatrix":
+        """Convert an in-memory DeviceDMatrix to external memory — the
+        `fit(on_oom="external")` degradation path. Bins are recovered from
+        the packed words and re-chunked; no raw float matrix is needed, the
+        cut points are shared, and training on the result is bit-identical
+        to the in-memory matrix (DESIGN.md §11)."""
+        bins = np.asarray(dmat.matrix.unpack())
+        return cls._from_host_bins(bins, dmat.cuts, dmat.max_bins,
+                                   dmat.label, dmat.group_ids, chunk_rows,
+                                   **kw)
+
+    @classmethod
+    def _from_host_bins(cls, bins, cuts, max_bins, label, group_ids,
+                        chunk_rows, *, verify_chunks: bool = True,
+                        load_retries: int = 2, load_backoff: float = 0.05):
+        """Build from already-quantised host bins (from_dmatrix / rechunk):
+        the float->bins pipeline is skipped, everything downstream of
+        quantisation is identical to __init__."""
+        if chunk_rows <= 0:
+            raise ValueError(f"chunk_rows must be positive, got {chunk_rows}")
+        self = cls.__new__(cls)
+        n_rows, n_features = bins.shape
+        bits = C.bits_needed(max_bins - 1)
+        spw = C.symbols_per_word(bits)
+        words_per_chunk = -(-chunk_rows // spw)
+        n_chunks = -(-n_rows // chunk_rows)
+        host_chunks = np.zeros(
+            (n_chunks, n_features, words_per_chunk), np.uint32
+        )
+        for i, s in enumerate(range(0, n_rows, chunk_rows)):
+            packed = np.asarray(
+                C.pack(jnp.asarray(bins[s : s + chunk_rows]), bits)
+            )
+            host_chunks[i, :, : packed.shape[1]] = packed
+        self._host_packed = host_chunks
+        self._device_stack = None
+        self.cuts = cuts
+        self.max_bins = max_bins
+        self.bits = bits
+        self.chunk_rows = chunk_rows
+        self.n_rows = n_rows
+        self.label = None if label is None else jnp.asarray(label, jnp.float32)
+        self.group_ids = (
+            None if group_ids is None else jnp.asarray(group_ids, jnp.int32)
+        )
+        self.verify_chunks = verify_chunks
+        self.load_retries = load_retries
+        self.load_backoff = load_backoff
+        self._chunk_crcs = RES.crc32_chunks(host_chunks)
+        return self
+
+    def rechunk(self, chunk_rows: int) -> "ExternalDMatrix":
+        """A new ExternalDMatrix over the same data with a different chunk
+        size (the OOM path halves chunk_rows until the fit fits). Chunks
+        are decoded host-side and re-packed; cuts, labels and groups are
+        shared, so training stays bit-identical."""
+        return type(self)._from_host_bins(
+            self._decode_host_bins(), self.cuts, self.max_bins, self.label,
+            self.group_ids, chunk_rows, verify_chunks=self.verify_chunks,
+            load_retries=self.load_retries, load_backoff=self.load_backoff,
+        )
+
+    def _decode_host_bins(self) -> np.ndarray:
+        """The dense bins matrix, host-side (transient: only rechunk and
+        parity tests materialise it)."""
+        out = np.empty((self.n_rows, self.n_features), np.int32)
+        for i in range(self.n_chunks):
+            s = i * self.chunk_rows
+            rows = min(self.chunk_rows, self.n_rows - s)
+            out[s : s + rows] = np.asarray(
+                C.unpack(jnp.asarray(self._host_packed[i]), self.bits, rows)
+            )
+        return out
 
     @classmethod
     def from_arrays(
@@ -412,14 +542,42 @@ class ExternalDMatrix:
 
     def packed_bins(self) -> C.ChunkedPackedBins:
         """Page the compressed chunk stack onto the device (cached) as the
-        traced representation the training scan consumes."""
+        traced representation the training scan consumes. Page-in verifies
+        per-chunk crc32s and retries transient failures (DESIGN.md §13)."""
         if self._device_stack is None:
-            self._device_stack = jnp.asarray(self._host_packed)
+            self._device_stack = self._page_in()
         return C.ChunkedPackedBins(
             packed=self._device_stack,
             bits=self.bits,
             chunk_rows=self.chunk_rows,
             n_rows=self.n_rows,
+        )
+
+    def _page_in(self) -> jax.Array:
+        """Host -> device transfer with integrity verification and
+        retry/backoff. The chunk_load / chunk_corrupt fault sites
+        (repro.testing.faults) live here."""
+
+        def attempt():
+            FA.check("chunk_load")
+            stack = FA.corrupt_array("chunk_corrupt", self._host_packed)
+            if self.verify_chunks:
+                RES.verify_chunk_crcs(
+                    stack, self._chunk_crcs,
+                    context=f"ExternalDMatrix({self.n_rows}x"
+                            f"{self.n_features})",
+                )
+            return jnp.asarray(stack)
+
+        def note(n, exc):
+            warnings.warn(
+                f"chunk page-in failed ({exc}); "
+                f"retry {n + 1}/{self.load_retries}"
+            )
+
+        return RES.with_retries(
+            attempt, retries=self.load_retries, backoff=self.load_backoff,
+            retry_on=(OSError, RES.ChunkIntegrityError), on_retry=note,
         )
 
     def unload(self) -> None:

@@ -225,8 +225,14 @@ pseudohuber = register_objective(
 def _poisson_grad(margins, y, **_):
     """Poisson regression with log link: nll = exp(m) - y*m, so g = exp(m)-y
     and h = exp(m). The hessian is inflated by exp(0.7) (XGBoost's
-    max_delta_step trick) to bound the leaf step when counts are sparse."""
-    mu = jnp.exp(margins[:, 0])
+    max_delta_step trick) to bound the leaf step when counts are sparse.
+
+    Margins are clamped to ±30 before the exponential: exp(88) already
+    overflows float32 to inf, and a single runaway leaf would otherwise
+    poison every later round's gradients (DESIGN.md §13). exp(30) ≈ 1e13 is
+    far beyond any count this objective can fit, so the clamp is inactive
+    on healthy fits."""
+    mu = jnp.exp(jnp.clip(margins[:, 0], -30.0, 30.0))
     g = mu - y
     h = mu * jnp.exp(0.7)
     return jnp.stack([g, h], axis=-1)[:, None, :]

@@ -1,0 +1,139 @@
+"""Resilience primitives shared across the training runtime (DESIGN.md §13).
+
+This module owns the *vocabulary* of failure — the exception taxonomy, the
+numeric-sentinel policies, OOM classification, retry/backoff, and chunk
+checksums — so that booster.py, dmatrix.py, distributed.py and
+checkpoint/io.py all speak the same language about what failed and what the
+caller may do about it. Nothing here touches jax except the small traced
+helpers (`clamp_gradients`, `finite_flags`) that run inside the compiled
+round step.
+"""
+from __future__ import annotations
+
+import time
+import zlib
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint.io import CheckpointError  # noqa: F401  (re-export)
+
+
+class TrainingFault(RuntimeError):
+    """Base class for failures the resilience layer detects and names."""
+
+
+class NumericError(TrainingFault):
+    """Non-finite gradients/hessians/leaf weights surfaced by the in-scan
+    sentinel under the ``numeric_check="raise"`` policy."""
+
+
+class DivergenceError(TrainingFault):
+    """Eval metric became non-finite — the fit is diverging and later
+    rounds can only make it worse."""
+
+
+class ChunkIntegrityError(TrainingFault):
+    """An external-memory chunk failed its crc32 on page-in: the bytes the
+    device would train on are not the bytes recorded at build time."""
+
+
+NUMERIC_POLICIES = ("off", "raise", "warn_skip", "clamp")
+
+# Gradient/hessian magnitudes beyond this are treated as runaway under the
+# "clamp" policy; generous enough that no healthy objective ever hits it.
+CLAMP_LIMIT = 1e10
+
+
+def validate_numeric_policy(policy: str) -> None:
+    if policy not in NUMERIC_POLICIES:
+        raise ValueError(
+            f"numeric_check must be one of {NUMERIC_POLICIES}, got {policy!r}"
+        )
+
+
+# --------------------------------------------------------------------------
+# Traced helpers (used inside the compiled round step)
+# --------------------------------------------------------------------------
+
+def clamp_gradients(gh: jnp.ndarray) -> jnp.ndarray:
+    """Replace NaN with 0 and clip +-inf / runaway magnitudes, keeping the
+    round usable under the "clamp" policy."""
+    gh = jnp.nan_to_num(gh, nan=0.0, posinf=CLAMP_LIMIT, neginf=-CLAMP_LIMIT)
+    return jnp.clip(gh, -CLAMP_LIMIT, CLAMP_LIMIT)
+
+
+def finite_flags(*arrays: jnp.ndarray) -> jnp.ndarray:
+    """Scalar bool: True iff every element of every array is finite. Cheap —
+    one fused reduce per array, no host sync (the flag rides the ys-stack
+    and is inspected host-side once per ES chunk)."""
+    ok = jnp.asarray(True)
+    for a in arrays:
+        ok = jnp.logical_and(ok, jnp.all(jnp.isfinite(a)))
+    return ok
+
+
+# --------------------------------------------------------------------------
+# OOM classification + retry/backoff
+# --------------------------------------------------------------------------
+
+def is_oom(exc: BaseException) -> bool:
+    """True for XLA's RESOURCE_EXHAUSTED family (and the simulated stand-in
+    from repro.testing.faults, which embeds the same marker)."""
+    msg = str(exc)
+    return "RESOURCE_EXHAUSTED" in msg or "Out of memory" in msg
+
+
+def with_retries(
+    fn: Callable[[], "object"],
+    *,
+    retries: int = 0,
+    backoff: float = 0.0,
+    retry_on: tuple = (IOError, OSError),
+    describe: str = "operation",
+    on_retry: Callable[[int, BaseException], None] | None = None,
+):
+    """Run `fn`, retrying up to `retries` times on `retry_on` exceptions with
+    exponential backoff (backoff * 2**attempt seconds). The final failure is
+    re-raised unchanged so callers keep the original type."""
+    attempt = 0
+    while True:
+        try:
+            return fn()
+        except retry_on as exc:
+            if attempt >= retries:
+                raise
+            if on_retry is not None:
+                on_retry(attempt, exc)
+            if backoff > 0:
+                time.sleep(backoff * (2.0 ** attempt))
+            attempt += 1
+
+
+# --------------------------------------------------------------------------
+# Chunk integrity
+# --------------------------------------------------------------------------
+
+def crc32_chunks(stack: np.ndarray) -> tuple:
+    """crc32 of each leading-axis slot of a host array (the per-chunk packed
+    words of an ExternalDMatrix). Returned as a tuple so it hashes and
+    serialises trivially."""
+    arr = np.ascontiguousarray(stack)
+    return tuple(zlib.crc32(arr[i].tobytes()) & 0xFFFFFFFF
+                 for i in range(arr.shape[0]))
+
+
+def verify_chunk_crcs(stack: np.ndarray, expected: Sequence[int],
+                      context: str = "ExternalDMatrix") -> None:
+    """Raise ChunkIntegrityError naming every chunk whose crc32 no longer
+    matches the build-time record."""
+    got = crc32_chunks(stack)
+    bad = [i for i, (g, e) in enumerate(zip(got, expected)) if g != e]
+    if bad:
+        raise ChunkIntegrityError(
+            f"{context}: chunk checksum mismatch on page-in for chunk(s) "
+            f"{bad} — data corrupted between build and load "
+            f"(expected crc32 {[expected[i] for i in bad]}, "
+            f"got {[got[i] for i in bad]})"
+        )

@@ -114,6 +114,10 @@ class _BoosterEstimator(BaseEstimator):
         colsample_bynode: float = 1.0,
         monotone_constraints=None,
         random_state: int = 0,
+        numeric_check: str = "off",
+        on_oom: str = "raise",
+        checkpoint_every: int | None = None,
+        checkpoint_path: str | None = None,
     ):
         self.n_estimators = n_estimators
         self.learning_rate = learning_rate
@@ -141,6 +145,14 @@ class _BoosterEstimator(BaseEstimator):
         self.colsample_bynode = colsample_bynode
         self.monotone_constraints = monotone_constraints
         self.random_state = random_state
+        # Fault-tolerance knobs (DESIGN.md §13): numeric_check arms the
+        # in-scan sentinel; on_oom="external" degrades to external-memory
+        # training on device OOM; checkpoint_every/checkpoint_path snapshot
+        # the fit for Booster.resume after a crash.
+        self.numeric_check = numeric_check
+        self.on_oom = on_oom
+        self.checkpoint_every = checkpoint_every
+        self.checkpoint_path = checkpoint_path
 
     # --- fit plumbing ------------------------------------------------------
     def _fit_objective(self, y: np.ndarray) -> tuple[str, int, np.ndarray]:
@@ -171,6 +183,7 @@ class _BoosterEstimator(BaseEstimator):
                 else tuple(int(c) for c in self.monotone_constraints)
             ),
             seed=self.random_state,
+            numeric_check=self.numeric_check,
         )
 
     def _fit(self, X, y, eval_set=None, group_ids=None, eval_group_ids=None):
@@ -198,6 +211,9 @@ class _BoosterEstimator(BaseEstimator):
             eval_metric=self.eval_metric,
             early_stopping_rounds=self.early_stopping_rounds,
             verbose_every=self.verbose,
+            on_oom=self.on_oom,
+            checkpoint_every=self.checkpoint_every,
+            checkpoint_path=self.checkpoint_path,
         )
         self.n_features_in_ = X.shape[1]
         self.evals_result_ = list(self.booster_.history)

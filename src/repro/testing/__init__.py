@@ -1,0 +1,3 @@
+"""Testing utilities shipped with the package: the fault-injection harness
+(`repro.testing.faults`) used by the chaos test suite and CI chaos-smoke job
+to drive the resilience layer (DESIGN.md §13)."""

@@ -1,0 +1,182 @@
+"""Kill-and-resume: SIGKILL a checkpointing fit mid-run in a subprocess,
+resume from its last atomic snapshot, and require the result be
+BIT-IDENTICAL (trees, margins, predictions) to an uninterrupted fit —
+the tentpole guarantee of the fault-tolerant runtime (DESIGN.md §13).
+
+The child process kills itself with SIGKILL (no cleanup, no atexit, no
+flushing — the closest a test gets to preemption); the parent asserts the
+snapshot on disk resumes exactly.
+"""
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Booster, BoosterConfig, DeviceDMatrix, ExternalDMatrix
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Shared, deterministic problem: child and parent regenerate identical data.
+DATA_SETUP = """
+import numpy as np
+rng = np.random.default_rng(123)
+x = rng.normal(size=(512, 6)).astype(np.float32)
+y = (x @ rng.normal(size=6) > 0).astype(np.float32)
+xv = rng.normal(size=(160, 6)).astype(np.float32)
+yv = (xv @ rng.normal(size=6) > 0).astype(np.float32)
+"""
+
+VARIANTS = {
+    "plain": dict(cfg_kw="", es="None", evals=False, external=False),
+    "subsample": dict(cfg_kw="subsample=0.7, colsample_bytree=0.8,",
+                      es="None", evals=False, external=False),
+    "es": dict(cfg_kw="", es="3", evals=True, external=False),
+    "external": dict(cfg_kw="", es="None", evals=False, external=True),
+}
+
+
+def _make_data():
+    ns = {}
+    exec(DATA_SETUP, ns)
+    return ns["x"], ns["y"], ns["xv"], ns["yv"]
+
+
+def _matrices(variant, x, y, xv, yv):
+    v = VARIANTS[variant]
+    if v["external"]:
+        d = ExternalDMatrix.from_arrays(x, y, chunk_rows=128, max_bins=32,
+                                        cuts="exact")
+    else:
+        d = DeviceDMatrix(x, label=y, max_bins=32)
+    evals = [(DeviceDMatrix(xv, label=yv, ref=d), "val")] if v["evals"] \
+        else []
+    return d, evals
+
+
+def _config(variant):
+    kw = {}
+    if variant == "subsample":
+        kw = dict(subsample=0.7, colsample_bytree=0.8)
+    return BoosterConfig(n_rounds=10, max_depth=3,
+                         objective="binary:logistic", max_bins=32, **kw)
+
+
+def _run_killed_fit(variant, ckpt_path, kill_round, every=3):
+    """Child fits with checkpointing and SIGKILLs itself at kill_round."""
+    v = VARIANTS[variant]
+    matrix = (
+        "ExternalDMatrix.from_arrays(x, y, chunk_rows=128, max_bins=32, "
+        "cuts='exact')"
+        if v["external"] else "DeviceDMatrix(x, label=y, max_bins=32)"
+    )
+    ev = ("[(DeviceDMatrix(xv, label=yv, ref=d), 'val')]"
+          if v["evals"] else "[]")
+    script = DATA_SETUP + textwrap.dedent(f"""
+        import os, signal
+        from repro.core import Booster, BoosterConfig, DeviceDMatrix, \\
+            ExternalDMatrix
+        cfg = BoosterConfig(n_rounds=10, max_depth=3, {v['cfg_kw']}
+                            objective='binary:logistic', max_bins=32)
+        d = {matrix}
+        def cb(r, rec):
+            if r >= {kill_round}:
+                os.kill(os.getpid(), signal.SIGKILL)
+        Booster(cfg).fit(d, evals={ev}, early_stopping_rounds={v['es']},
+                         checkpoint_every={every},
+                         checkpoint_path={ckpt_path!r}, callback=cb)
+        print('FIT-COMPLETED')  # unreachable: the callback kills first
+        """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    res = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True, text=True, timeout=600, env=env,
+    )
+    assert res.returncode == -signal.SIGKILL, (
+        f"child should die by SIGKILL, got {res.returncode}:\n"
+        f"{res.stdout}\n{res.stderr}"
+    )
+    assert "FIT-COMPLETED" not in res.stdout
+    return res
+
+
+def _assert_identical(ref, got, x):
+    assert got.n_rounds_trained == ref.n_rounds_trained
+    assert got.best_iteration == ref.best_iteration
+    for f in ("feature", "split_bin", "threshold", "default_left",
+              "leaf_value", "is_leaf"):
+        assert bool(jnp.all(getattr(ref.ensemble, f)
+                            == getattr(got.ensemble, f))), f
+    np.testing.assert_array_equal(np.asarray(ref.predict(x)),
+                                  np.asarray(got.predict(x)))
+    np.testing.assert_array_equal(np.asarray(ref.predict_margins(x)),
+                                  np.asarray(got.predict_margins(x)))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("variant", list(VARIANTS))
+def test_sigkill_then_resume_bit_identical(tmp_path, variant):
+    x, y, xv, yv = _make_data()
+    p = str(tmp_path / f"{variant}.ckpt")
+    _run_killed_fit(variant, p, kill_round=5)
+    assert os.path.exists(p), "no snapshot survived the kill"
+
+    d, evals = _matrices(variant, x, y, xv, yv)
+    ref = Booster(_config(variant)).fit(
+        d, evals=evals,
+        early_stopping_rounds=3 if variant == "es" else None,
+    )
+    d2, evals2 = _matrices(variant, x, y, xv, yv)
+    got = Booster.resume(p, d2, evals=evals2)
+    _assert_identical(ref, got, x)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kill_round", [4, 8])
+def test_sigkill_at_various_rounds(tmp_path, kill_round):
+    """The snapshot cadence (every 3 of 10 rounds) leaves different amounts
+    of lost work depending on when the kill lands; resume is exact either
+    way."""
+    x, y, xv, yv = _make_data()
+    p = str(tmp_path / "k.ckpt")
+    _run_killed_fit("plain", p, kill_round=kill_round)
+    d, _ = _matrices("plain", x, y, xv, yv)
+    ref = Booster(_config("plain")).fit(d)
+    d2, _ = _matrices("plain", x, y, xv, yv)
+    got = Booster.resume(p, d2)
+    _assert_identical(ref, got, x)
+
+
+@pytest.mark.slow
+def test_resume_survives_second_kill(tmp_path):
+    """Resume is itself checkpointed: kill the resumed fit too, resume
+    again, still bit-identical."""
+    x, y, xv, yv = _make_data()
+    p = str(tmp_path / "twice.ckpt")
+    _run_killed_fit("plain", p, kill_round=4)
+    # second child resumes from the snapshot and dies at round 8
+    script = DATA_SETUP + textwrap.dedent(f"""
+        import os, signal
+        from repro.core import Booster, DeviceDMatrix
+        d = DeviceDMatrix(x, label=y, max_bins=32)
+        def cb(r, rec):
+            if r >= 8:
+                os.kill(os.getpid(), signal.SIGKILL)
+        Booster.resume({p!r}, d, callback=cb)
+        """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    res = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=600, env=env)
+    assert res.returncode == -signal.SIGKILL, res.stderr
+
+    d, _ = _matrices("plain", x, y, xv, yv)
+    ref = Booster(_config("plain")).fit(d)
+    d2, _ = _matrices("plain", x, y, xv, yv)
+    got = Booster.resume(p, d2)
+    _assert_identical(ref, got, x)

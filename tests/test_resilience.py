@@ -1,0 +1,531 @@
+"""Fault-tolerant training runtime (DESIGN.md §13).
+
+Chaos suite: every test arms a fault via repro.testing.faults against the
+REAL production code path (no monkeypatching) and asserts the resilience
+machinery — checkpoint framing, input validation, numeric sentinels,
+chunk integrity + retry, OOM degradation, checkpoint/resume bit-identity —
+responds as specified.
+"""
+import os
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Booster,
+    BoosterConfig,
+    CheckpointError,
+    ChunkIntegrityError,
+    DeviceDMatrix,
+    ExternalDMatrix,
+    NumericError,
+)
+from repro.checkpoint import io as CIO
+from repro.testing import faults
+
+
+@pytest.fixture(autouse=True)
+def _no_leftover_faults():
+    faults.reset()
+    yield
+    faults.reset()
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(512, 6)).astype(np.float32)
+    y = (x @ rng.normal(size=6) > 0).astype(np.float32)
+    return x, y
+
+
+def _cfg(**kw):
+    base = dict(n_rounds=6, max_depth=3, objective="binary:logistic",
+                max_bins=32)
+    base.update(kw)
+    return BoosterConfig(**base)
+
+
+# --------------------------------------------------------------------------
+# Checkpoint framing: magic + crc32, corruption and truncation detection
+# --------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_frame(tmp_path):
+    p = str(tmp_path / "t.ckpt")
+    tree = {"a": jnp.arange(5.0), "n": 3, "t": (jnp.ones(2), "x")}
+    CIO.save_pytree(p, tree)
+    with open(p, "rb") as f:
+        assert f.read(8) == CIO.MAGIC
+    out = CIO.load_pytree(p)
+    assert out["n"] == 3
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.arange(5.0))
+
+
+def test_checkpoint_bit_flip_detected(tmp_path, data):
+    """Flipping any single byte of a real booster checkpoint is caught by
+    the payload crc32 and reported with the file name."""
+    x, y = data
+    p = str(tmp_path / "b.ckpt")
+    b = Booster(_cfg(n_rounds=3)).fit(DeviceDMatrix(x, label=y, max_bins=32))
+    b.save(p)
+    raw = bytearray(open(p, "rb").read())
+    size = len(raw)
+    # a spread of positions inside the payload (past the 12-byte header)
+    for pos in (12, size // 3, size // 2, size - 1):
+        bad = bytearray(raw)
+        bad[pos] ^= 0x40
+        with open(p, "wb") as f:
+            f.write(bad)
+        with pytest.raises(CheckpointError, match="checksum"):
+            CIO.load_booster(p)
+    # header crc corruption is also caught
+    bad = bytearray(raw)
+    bad[9] ^= 0x01
+    with open(p, "wb") as f:
+        f.write(bad)
+    with pytest.raises(CheckpointError):
+        CIO.load_booster(p)
+
+
+def test_checkpoint_truncation_detected(tmp_path, data):
+    x, y = data
+    p = str(tmp_path / "t.ckpt")
+    b = Booster(_cfg(n_rounds=2)).fit(DeviceDMatrix(x, label=y, max_bins=32))
+    b.save(p)
+    raw = open(p, "rb").read()
+    for cut in (5, 11, len(raw) // 2):
+        with open(p, "wb") as f:
+            f.write(raw[:cut])
+        with pytest.raises(CheckpointError):
+            CIO.load_pytree(p)
+
+
+def test_checkpoint_missing_and_garbage(tmp_path):
+    with pytest.raises(CheckpointError, match="cannot read"):
+        CIO.load_pytree(str(tmp_path / "nope.ckpt"))
+    p = str(tmp_path / "garbage.ckpt")
+    with open(p, "wb") as f:
+        f.write(b"not a checkpoint at all, definitely not msgpack" * 3)
+    with pytest.raises(CheckpointError):
+        CIO.load_pytree(p)
+    # CheckpointError subclasses ValueError: pre-existing callers keep working
+    assert issubclass(CheckpointError, ValueError)
+
+
+def test_checkpoint_legacy_unframed_readable(tmp_path):
+    """Files written before the magic+crc frame (raw msgpack) still load."""
+    import msgpack
+
+    p = str(tmp_path / "legacy.ckpt")
+    payload = msgpack.packb({"n": 7, "s": "old"}, use_bin_type=True)
+    with open(p, "wb") as f:
+        f.write(payload)
+    assert CIO.load_pytree(p) == {"n": 7, "s": "old"}
+
+
+def test_checkpoint_write_fault_is_atomic(tmp_path):
+    """An injected write failure leaves no file (and no tmp litter)."""
+    p = str(tmp_path / "w.ckpt")
+    with faults.inject("checkpoint_write", error=OSError):
+        with pytest.raises(OSError):
+            CIO.save_pytree(p, {"a": 1})
+    assert not os.path.exists(p)
+    assert os.listdir(str(tmp_path)) == []
+
+
+# --------------------------------------------------------------------------
+# Input validation
+# --------------------------------------------------------------------------
+
+def test_device_dmatrix_rejects_bad_inputs(data):
+    x, y = data
+    with pytest.raises(ValueError, match="0 rows"):
+        DeviceDMatrix(np.empty((0, 4), np.float32))
+    with pytest.raises(ValueError, match="0 features"):
+        DeviceDMatrix(np.empty((4, 0), np.float32))
+    xb = x.copy()
+    xb[3, 2] = np.inf
+    with pytest.raises(ValueError, match="inf"):
+        DeviceDMatrix(xb, label=y)
+    yb = y.copy()
+    yb[5] = np.nan
+    with pytest.raises(ValueError, match="label"):
+        DeviceDMatrix(x, label=yb)
+    # NaN features stay legal: they are the missing-value marker
+    xn = x.copy()
+    xn[1, 1] = np.nan
+    DeviceDMatrix(xn, label=y)
+
+
+def test_external_dmatrix_rejects_bad_inputs(data):
+    x, y = data
+    xb = x.copy()
+    xb[200, 3] = -np.inf
+    with pytest.raises(ValueError, match="inf"):
+        ExternalDMatrix.from_arrays(xb, y, chunk_rows=128, max_bins=32)
+    yb = y.copy()
+    yb[300] = np.inf
+    with pytest.raises(ValueError, match="label"):
+        ExternalDMatrix.from_arrays(x, yb, chunk_rows=128, max_bins=32)
+
+
+# --------------------------------------------------------------------------
+# Numeric sentinels (nan_grad fault drives the in-scan finite checks)
+# --------------------------------------------------------------------------
+
+def test_numeric_check_raise(data):
+    x, y = data
+    with faults.inject("nan_grad", round=3):
+        with pytest.raises(NumericError, match=r"round\(s\) \[3"):
+            Booster(_cfg(numeric_check="raise")).fit(
+                DeviceDMatrix(x, label=y, max_bins=32)
+            )
+
+
+def test_numeric_check_warn_skip(data):
+    """The poisoned round's tree is zeroed, margins stay clean, and only
+    that round is skipped — later rounds train on unpolluted state."""
+    x, y = data
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        with faults.inject("nan_grad", round=2):
+            b = Booster(_cfg(numeric_check="warn_skip")).fit(
+                DeviceDMatrix(x, label=y, max_bins=32)
+            )
+    assert b.skipped_rounds == [2]
+    assert any("zeroed" in str(m.message) for m in w)
+    assert b.n_rounds_trained == 6
+    pred = np.asarray(b.predict(x))
+    assert np.isfinite(pred).all()
+    # the skipped tree contributes nothing: leaf values all zero at round 2
+    leaf = np.asarray(b.ensemble.leaf_value).reshape(6, -1)
+    assert (leaf[2] == 0).all()
+    assert (leaf[3] != 0).any()
+    assert [e["event"] for e in b.resilience_events] == ["rounds_skipped"]
+
+
+def test_numeric_check_clamp(data):
+    x, y = data
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        with faults.inject("nan_grad", round=2):
+            b = Booster(_cfg(numeric_check="clamp")).fit(
+                DeviceDMatrix(x, label=y, max_bins=32)
+            )
+    assert any("clip" in str(m.message) for m in w)
+    assert np.isfinite(np.asarray(b.predict(x))).all()
+    assert [e["event"] for e in b.resilience_events] == ["gradients_clamped"]
+
+
+def test_numeric_check_off_is_default_and_validated(data):
+    x, y = data
+    assert BoosterConfig().numeric_check == "off"
+    with pytest.raises(ValueError, match="numeric_check"):
+        BoosterConfig(numeric_check="nope")
+    # off + armed fault: NaNs flow through unchecked (policy off means the
+    # sentinel adds nothing to the traced program)
+    with faults.inject("nan_grad", round=0):
+        b = Booster(_cfg()).fit(DeviceDMatrix(x, label=y, max_bins=32))
+    assert not np.isfinite(np.asarray(b.predict_margins(x))).all()
+
+
+def test_sentinel_clean_fit_unchanged(data):
+    """With no fault armed, every policy trains the identical model — the
+    sentinel observes, it must not perturb."""
+    x, y = data
+    ref = Booster(_cfg()).fit(DeviceDMatrix(x, label=y, max_bins=32))
+    for policy in ("raise", "warn_skip", "clamp"):
+        b = Booster(_cfg(numeric_check=policy)).fit(
+            DeviceDMatrix(x, label=y, max_bins=32)
+        )
+        assert bool(jnp.all(ref.ensemble.leaf_value == b.ensemble.leaf_value))
+        assert b.skipped_rounds == []
+
+
+# --------------------------------------------------------------------------
+# External-memory chunk integrity + retry + OOM degradation
+# --------------------------------------------------------------------------
+
+def test_chunk_corruption_detected(data):
+    x, y = data
+    ext = ExternalDMatrix.from_arrays(x, y, chunk_rows=128, max_bins=32)
+    with faults.inject("chunk_corrupt", times=None, chunk=1, index=7, bit=3):
+        with pytest.raises(ChunkIntegrityError, match=r"chunk\(s\) \[1\]"):
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                ext.packed_bins()
+
+
+def test_chunk_corruption_transient_retried(data):
+    """One corrupted transfer followed by a clean one: retry absorbs it."""
+    x, y = data
+    ext = ExternalDMatrix.from_arrays(x, y, chunk_rows=128, max_bins=32)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        with faults.inject("chunk_corrupt", times=1, chunk=0, index=2) as spec:
+            pb = ext.packed_bins()
+    assert spec.fired == 1
+    assert pb.n_rows == x.shape[0]
+    assert any("retry" in str(m.message) for m in w)
+
+
+def test_chunk_load_transient_retried(data):
+    x, y = data
+    ext = ExternalDMatrix.from_arrays(x, y, chunk_rows=128, max_bins=32)
+    with warnings.catch_warnings(record=True):
+        warnings.simplefilter("always")
+        with faults.inject("chunk_load", error=faults.TransientLoadError,
+                           times=2) as spec:
+            pb = ext.packed_bins()
+    assert spec.fired == 2  # default load_retries=2 absorbs both
+    assert pb.n_rows == x.shape[0]
+
+
+def test_chunk_load_persistent_raises(data):
+    x, y = data
+    ext = ExternalDMatrix.from_arrays(x, y, chunk_rows=128, max_bins=32,
+                                      load_retries=1, load_backoff=0.0)
+    with faults.inject("chunk_load", error=faults.TransientLoadError,
+                       times=None):
+        with pytest.raises(faults.TransientLoadError):
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                ext.packed_bins()
+
+
+def test_verify_chunks_off_skips_crc(data):
+    x, y = data
+    ext = ExternalDMatrix.from_arrays(x, y, chunk_rows=128, max_bins=32,
+                                      verify_chunks=False)
+    with faults.inject("chunk_corrupt", times=None, chunk=0, index=0):
+        ext.packed_bins()  # corruption sails through unverified
+
+
+def test_rechunk_and_from_dmatrix_bit_identical(data):
+    """The OOM degradation paths (DeviceDMatrix -> external, external ->
+    smaller chunks) train bit-identical models on the same data."""
+    x, y = data
+    cfg = _cfg(n_rounds=4)
+    dm = DeviceDMatrix(x, label=y, max_bins=32)
+    ref = Booster(cfg).fit(dm)
+    ext = ExternalDMatrix.from_dmatrix(dm, chunk_rows=200)
+    b1 = Booster(cfg).fit(ext)
+    assert bool(jnp.all(ref.ensemble.leaf_value == b1.ensemble.leaf_value))
+    b2 = Booster(cfg).fit(ext.rechunk(100))
+    assert bool(jnp.all(ref.ensemble.leaf_value == b2.ensemble.leaf_value))
+
+
+def test_on_oom_external_completes(data):
+    x, y = data
+    cfg = _cfg(n_rounds=5)
+    ref = Booster(cfg).fit(DeviceDMatrix(x, label=y, max_bins=32))
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        with faults.inject("oom", error=faults.SimulatedOOM, times=1):
+            b = Booster(cfg).fit(DeviceDMatrix(x, label=y, max_bins=32),
+                                 on_oom="external")
+    assert b.n_rounds_trained == 5
+    assert any("external-memory" in str(m.message) for m in w)
+    assert [e["event"] for e in b.resilience_events] == ["oom_fallback"]
+    # bit-identical to the in-memory fit (same bins, same cuts)
+    assert bool(jnp.all(ref.ensemble.leaf_value == b.ensemble.leaf_value))
+
+
+def test_on_oom_external_halves_until_fits(data):
+    x, y = data
+    ext = ExternalDMatrix.from_arrays(x, y, chunk_rows=256, max_bins=32)
+    with warnings.catch_warnings(record=True):
+        warnings.simplefilter("always")
+        with faults.inject("oom", error=faults.SimulatedOOM, times=2):
+            b = Booster(_cfg(n_rounds=3)).fit(ext, on_oom="external")
+    assert b.n_rounds_trained == 3
+    rows = [e["chunk_rows"] for e in b.resilience_events
+            if e["event"] == "oom_fallback"]
+    assert rows == [128, 64]
+
+
+def test_on_oom_raise_default(data):
+    x, y = data
+    with faults.inject("oom", error=faults.SimulatedOOM, times=1):
+        with pytest.raises(faults.SimulatedOOM):
+            Booster(_cfg(n_rounds=3)).fit(
+                DeviceDMatrix(x, label=y, max_bins=32)
+            )
+
+
+# --------------------------------------------------------------------------
+# In-run checkpointing + resume (in-process; kill-based tests live in
+# test_kill_resume.py)
+# --------------------------------------------------------------------------
+
+class _Stop(Exception):
+    pass
+
+
+def _interrupted_fit(cfg, mk, path, stop_round, evals=False, es=None,
+                     every=3):
+    """Fit with checkpointing, aborting from the round callback — the
+    in-process stand-in for a kill."""
+    b = Booster(cfg)
+
+    def cb(r, rec):
+        if r >= stop_round:
+            raise _Stop
+
+    kw = dict(checkpoint_every=every, checkpoint_path=path, callback=cb)
+    d = mk()
+    ev = [(mk.eval(d), "val")] if evals else []
+    try:
+        b.fit(d, evals=ev, early_stopping_rounds=es, **kw)
+    except _Stop:
+        pass
+
+
+def _mk_factory(x, y, xv=None, yv=None, external=False):
+    def mk():
+        if external:
+            return ExternalDMatrix.from_arrays(x, y, chunk_rows=128,
+                                               max_bins=32, cuts="exact")
+        return DeviceDMatrix(x, label=y, max_bins=32)
+
+    def mk_eval(d):
+        return DeviceDMatrix(xv, label=yv, ref=d)
+
+    mk.eval = mk_eval
+    return mk
+
+
+@pytest.fixture(scope="module")
+def eval_data():
+    rng = np.random.default_rng(11)
+    xv = rng.normal(size=(200, 6)).astype(np.float32)
+    yv = (xv @ rng.normal(size=6) > 0).astype(np.float32)
+    return xv, yv
+
+
+@pytest.mark.parametrize("variant", ["plain", "subsample", "es", "external"])
+def test_resume_bit_identical(tmp_path, data, eval_data, variant):
+    x, y = data
+    xv, yv = eval_data
+    kw = {}
+    es = None
+    evals = False
+    external = False
+    if variant == "subsample":
+        kw = dict(subsample=0.7, colsample_bytree=0.8)
+    elif variant == "es":
+        es, evals = 3, True
+    elif variant == "external":
+        external = True
+    cfg = _cfg(n_rounds=10, **kw)
+    mk = _mk_factory(x, y, xv, yv, external=external)
+
+    d = mk()
+    ev = [(mk.eval(d), "val")] if evals else []
+    ref = Booster(cfg).fit(d, evals=ev, early_stopping_rounds=es)
+
+    p = str(tmp_path / "run.ckpt")
+    _interrupted_fit(cfg, mk, p, stop_round=5, evals=evals, es=es)
+    assert os.path.exists(p)
+    d2 = mk()
+    ev2 = [(mk.eval(d2), "val")] if evals else []
+    r = Booster.resume(p, d2, evals=ev2)
+
+    assert r.n_rounds_trained == ref.n_rounds_trained
+    assert r.best_iteration == ref.best_iteration
+    for f in ("feature", "split_bin", "threshold", "leaf_value", "is_leaf"):
+        assert bool(jnp.all(getattr(ref.ensemble, f)
+                            == getattr(r.ensemble, f))), f
+    np.testing.assert_array_equal(np.asarray(ref.predict(x)),
+                                  np.asarray(r.predict(x)))
+
+
+def test_resume_completed_checkpoint_rejected(tmp_path, data):
+    x, y = data
+    p = str(tmp_path / "done.ckpt")
+    b = Booster(_cfg(n_rounds=3)).fit(DeviceDMatrix(x, label=y, max_bins=32))
+    b.save(p)
+    with pytest.raises(CheckpointError, match="COMPLETED"):
+        Booster.resume(p, DeviceDMatrix(x, label=y, max_bins=32))
+
+
+def test_resume_wrong_cuts_rejected(tmp_path, data):
+    x, y = data
+    p = str(tmp_path / "run.ckpt")
+    mk = _mk_factory(x, y)
+    _interrupted_fit(_cfg(n_rounds=8), mk, p, stop_round=4)
+    with pytest.raises(ValueError, match="cuts"):
+        Booster.resume(p, DeviceDMatrix(x, label=y, max_bins=16))
+
+
+def test_final_checkpoint_is_complete(tmp_path, data):
+    """After an uninterrupted checkpointed fit, the file holds a COMPLETED
+    model (no resume section) loadable with Booster.load."""
+    x, y = data
+    p = str(tmp_path / "run.ckpt")
+    b = Booster(_cfg(n_rounds=5)).fit(DeviceDMatrix(x, label=y, max_bins=32),
+                                      checkpoint_every=2, checkpoint_path=p)
+    bst, rs = CIO.load_booster_with_resume(p)
+    assert rs is None
+    assert bst.n_rounds_trained == 5
+    np.testing.assert_array_equal(np.asarray(b.predict(x)),
+                                  np.asarray(bst.predict(x)))
+
+
+def test_checkpoint_write_failure_does_not_kill_training(tmp_path, data):
+    x, y = data
+    p = str(tmp_path / "run.ckpt")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        with faults.inject("checkpoint_write", error=OSError, times=None):
+            b = Booster(_cfg(n_rounds=5)).fit(
+                DeviceDMatrix(x, label=y, max_bins=32),
+                checkpoint_every=2, checkpoint_path=p,
+            )
+    assert b.n_rounds_trained == 5
+    assert any("training continues" in str(m.message) for m in w)
+    assert any(e["event"] == "checkpoint_write_failed"
+               for e in b.resilience_events)
+    assert not os.path.exists(p)
+
+
+def test_checkpoint_every_validation(data):
+    x, y = data
+    d = DeviceDMatrix(x, label=y, max_bins=32)
+    with pytest.raises(ValueError, match="checkpoint_path"):
+        Booster(_cfg()).fit(d, checkpoint_every=2)
+    with pytest.raises(ValueError, match="positive"):
+        Booster(_cfg()).fit(d, checkpoint_every=0, checkpoint_path="x.ckpt")
+    with pytest.raises(ValueError, match="on_oom"):
+        Booster(_cfg()).fit(d, on_oom="panic")
+
+
+# --------------------------------------------------------------------------
+# Fault harness self-tests
+# --------------------------------------------------------------------------
+
+def test_fault_harness_contract():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        faults.arm("no_such_site")
+    spec = faults.arm("oom", times=2, after=1)
+    assert not spec.should_fire()  # skipped by after=1
+    assert spec.should_fire()
+    assert spec.should_fire()
+    assert not spec.should_fire()  # budget exhausted
+    faults.reset()
+    assert faults.active("oom") is None
+    # corrupt_array never mutates its input
+    a = np.arange(8, dtype=np.uint32).reshape(2, 4)
+    with faults.inject("chunk_corrupt", chunk=1, index=2, bit=5):
+        out = faults.corrupt_array("chunk_corrupt", a)
+    assert (a == np.arange(8, dtype=np.uint32).reshape(2, 4)).all()
+    assert (out != a).sum() == 1
+    # trace_key distinguishes payloads and clears on disarm
+    with faults.inject("nan_grad", round=3):
+        k1 = faults.trace_key("nan_grad")
+    with faults.inject("nan_grad", round=4):
+        k2 = faults.trace_key("nan_grad")
+    assert k1 != k2 and k1 is not None
+    assert faults.trace_key("nan_grad") is None
