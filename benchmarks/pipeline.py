@@ -36,6 +36,12 @@ tracked across PRs (EXPERIMENTS.md §Perf):
    round, the worst-case cadence) vs the plain fit, plus the snapshot
    size on disk. Acceptance: overhead < 5% per round at 1M x 50.
 
+7. Serving — batch-inference timings (ISSUE 7): fused all-trees-one-
+   launch traversal vs the per-tree scan loop on a >= 512-tree ensemble
+   (raw and packed inputs), plus p50/p99 request latency and rows/s
+   through the shape-bucketed PredictEngine under mixed batch sizes,
+   with a zero-recompiles-after-warmup counter.
+
 `--sections` runs a subset (e.g. only external_memory) and MERGES the
 result into an existing --out file, so the artifact of record can be
 refreshed incrementally.
@@ -475,8 +481,88 @@ def resilience_split(xj, yj, max_bins, max_depth, n_rounds):
     }
 
 
+SERVE_ROWS_CAP = 50_000  # traversal throughput saturates well below 1M rows
+SERVE_MIN_TREES = 512  # ISSUE 7 acceptance: fused wins on a >= 500-tree model
+
+
+def serving_split(xj, yj, max_bins, max_depth, n_rounds):
+    """Batch-inference timings (ISSUE 7): the fused all-trees-one-launch
+    traversal vs the per-tree scan loop it replaced, on a >= 512-tree
+    ensemble (a small trained model tiled out — traversal cost depends on
+    tree count and depth, not on how the leaves were fitted), plus
+    request-level p50/p99 latency through the shape-bucketed PredictEngine
+    under mixed batch sizes. recompiles_after_warmup must stay 0: the
+    bucket ladder, not the traffic, decides what gets compiled."""
+    import dataclasses
+
+    from repro.serve import PredictEngine
+    from repro.serve import traversal as ST
+
+    cap = min(SERVE_ROWS_CAP, xj.shape[0])
+    xr, yr = xj[:cap], yj[:cap]
+    dtrain = DeviceDMatrix(xr, label=yr, max_bins=max_bins)
+    bst = Booster(n_rounds=16, max_depth=max_depth, max_bins=max_bins,
+                  objective="binary:logistic").fit(dtrain)
+    ens = bst.ensemble
+    reps = -(-SERVE_MIN_TREES // ens.feature.shape[0])
+    if reps > 1:
+        tiled = {
+            f: jnp.tile(getattr(ens, f),
+                        (reps,) + (1,) * (getattr(ens, f).ndim - 1))
+            for f in PR._ENSEMBLE_ARRAY_FIELDS
+        }
+        ens = dataclasses.replace(ens, **tiled)
+    n_trees = int(ens.feature.shape[0])
+
+    pb = dtrain.matrix.as_packed_bins()
+    mb = max_bins - 1
+
+    t_loop_raw = _time(
+        lambda e, a: PR.predict_raw(e, a, max_depth), ens, xr)
+    t_fused_raw = _time(
+        lambda e, a: ST.predict_margins_fused(e, a, max_depth), ens, xr)
+    t_loop_packed = _time(
+        lambda e, p: PR.predict_binned_packed(e, p, pb.bits, cap, mb,
+                                              max_depth), ens, pb.packed)
+    t_fused_packed = _time(
+        lambda e, p: ST.predict_margins_fused_packed(e, p, pb.bits, cap, mb,
+                                                     max_depth),
+        ens, pb.packed)
+
+    # Request-level latency: mixed batch sizes through the bucketed engine,
+    # serving the tiled 512-tree ensemble.
+    bst.ensemble = ens
+    engine = PredictEngine(bst, buckets=(16, 64, 256, 1024, 4096))
+    engine.warmup()
+    traces_after_warmup = engine.trace_count
+    engine.reset_stats()
+    x_np = np.asarray(xr)
+    sizes = [1, 7, 16, 33, 100, 250, 777, 1024, 3000, 4096] * 3
+    off = 0
+    for n in sizes:
+        engine.predict(x_np[off:off + n])
+        off = (off + n) % max(cap - 4096, 1)
+    stats = engine.stats()
+    stats["recompiles_after_warmup"] = (
+        engine.trace_count - traces_after_warmup
+    )
+
+    return {
+        "rows": cap,
+        "n_trees": n_trees,
+        "max_depth": max_depth,
+        "tree_loop_raw_s": t_loop_raw,
+        "fused_raw_s": t_fused_raw,
+        "fused_speedup_raw": t_loop_raw / t_fused_raw,
+        "tree_loop_packed_s": t_loop_packed,
+        "fused_packed_s": t_fused_packed,
+        "fused_speedup_packed": t_loop_packed / t_fused_packed,
+        "engine": stats,
+    }
+
+
 SECTIONS = ("phases", "api", "round_loop", "objectives", "external_memory",
-            "stochastic", "resilience")
+            "stochastic", "resilience", "serving")
 
 
 def run(rows, features, max_bins, max_depth, n_rounds,
@@ -507,6 +593,9 @@ def run(rows, features, max_bins, max_depth, n_rounds,
         if "resilience" in sections:
             result["resilience"] = resilience_split(xj, yj, max_bins,
                                                     max_depth, n_rounds)
+        if "serving" in sections:
+            result["serving"] = serving_split(xj, yj, max_bins, max_depth,
+                                              n_rounds)
         del xj, yj, x, y
     if "external_memory" in sections:
         ext_rows = external_rows or 4 * rows
@@ -584,6 +673,8 @@ def main(argv=None):
             print(f"stochastic_{k}_per_round_s,{v['per_round_s']:.4f}")
     for k, v in r.get("external_memory", {}).items():
         print(f"external_{k},{v}")
+    for k, v in r.get("serving", {}).items():
+        print(f"serving_{k},{v}")
     with open(args.out, "w") as f:
         json.dump(r, f, indent=2)
     print(f"wrote {args.out}")

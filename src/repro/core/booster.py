@@ -1176,12 +1176,29 @@ class Booster:
             })
 
     # --- inference ---------------------------------------------------------
-    def predict_margins(self, data) -> jax.Array:
+    def predict_margins(
+        self, data, iteration_range: tuple[int, int] = (0, 0)
+    ) -> jax.Array:
         """Raw margins (n_rows, n_outputs). `data` may be a numpy array, a
         jax array (one float32 conversion, done here and nowhere else) or a
         DeviceDMatrix (bin-space traversal on the packed words — exact, since
-        thresholds are cut values and quantisation is searchsorted-left)."""
+        thresholds are cut values and quantisation is searchsorted-left).
+
+        Batch inference runs the fused ensemble traversal (all trees x all
+        rows per level; serve/traversal.py) — bit-identical to the per-tree
+        scan the training loop uses, in max_depth launches instead of
+        n_trees scan steps.
+
+        iteration_range=(a, b) restricts to boosting rounds [a, b), XGBoost
+        semantics (b=0 means "through the last round"); the default is the
+        whole model.
+        """
+        from repro.serve import traversal as ST
+
         self._require_fitted()
+        ens = self.ensemble
+        if iteration_range != (0, 0):
+            ens = PR.slice_rounds(ens, *iteration_range)
         if isinstance(data, (DeviceDMatrix, ExternalDMatrix)):
             if not self._cuts_match(data.cuts):
                 raise ValueError(
@@ -1189,22 +1206,40 @@ class Booster:
                     "than this booster; build it with ref= the training matrix"
                 )
             if isinstance(data, ExternalDMatrix):
-                cpb = data.packed_bins()
-                return PR.predict_binned_chunked(
-                    self.ensemble, cpb.packed, cpb.bits, cpb.chunk_rows,
-                    cpb.n_rows, self.cfg.max_bins - 1, self.cfg.max_depth,
-                )
-            return PR.predict_binned_packed(
-                self.ensemble, data.matrix.packed, data.bits, data.n_rows,
+                return self._predict_margins_external(ens, data)
+            return ST.predict_margins_fused_packed(
+                ens, data.matrix.packed, data.bits, data.n_rows,
                 self.cfg.max_bins - 1, self.cfg.max_depth,
             )
         x = jnp.asarray(data, jnp.float32)
-        return PR.predict_raw(self.ensemble, x, self.cfg.max_depth)
+        return ST.predict_margins_fused(ens, x, self.cfg.max_depth)
 
-    def predict(self, data, output_margin: bool = False) -> jax.Array:
+    def _predict_margins_external(self, ens, data: ExternalDMatrix):
+        """Margins over an ExternalDMatrix by streaming packed chunks
+        through the fused traversal one at a time: the full chunk stack is
+        never paged in for inference — device transients stay bounded by
+        one chunk's words plus one chunk's margins (DESIGN.md §14). When
+        training already left the stack device-resident the cached chunks
+        are served from it instead of the host."""
+        from repro.serve import traversal as ST
+
+        missing_bin = self.cfg.max_bins - 1
+        parts = []
+        for words in data.iter_device_chunks():
+            parts.append(ST.predict_margins_fused_packed(
+                ens, words, data.bits, data.chunk_rows, missing_bin,
+                self.cfg.max_depth,
+            ))
+        return jnp.concatenate(parts, axis=0)[: data.n_rows]
+
+    def predict(
+        self, data, output_margin: bool = False,
+        iteration_range: tuple[int, int] = (0, 0),
+    ) -> jax.Array:
         """Transformed predictions (probabilities / values / class ids) —
-        the model knows its own objective, depth and class count."""
-        m = self.predict_margins(data)
+        the model knows its own objective, depth and class count.
+        output_margin / iteration_range follow XGBoost's predict knobs."""
+        m = self.predict_margins(data, iteration_range=iteration_range)
         return m if output_margin else self.obj.transform(m)
 
     def eval(self, dmat: DeviceDMatrix, name: str = "eval",

@@ -580,6 +580,42 @@ class ExternalDMatrix:
             retry_on=(OSError, RES.ChunkIntegrityError), on_retry=note,
         )
 
+    def iter_device_chunks(self):
+        """Yield each packed chunk as a device array, ONE at a time — the
+        streaming predict path (DESIGN.md §14). Unlike `packed_bins()` the
+        full device stack is never materialised: device transients stay
+        bounded by one chunk's words, and `nbytes_device` stays 0. Each
+        chunk's crc32 is verified on page-in with the same retry/backoff
+        policy as training (when the stack is already device-resident the
+        cached copy is served instead — it was verified when paged in)."""
+        if self._device_stack is not None:
+            for i in range(self.n_chunks):
+                yield self._device_stack[i]
+            return
+
+        for i in range(self.n_chunks):
+            def attempt(i=i):
+                FA.check("chunk_load")
+                chunk = FA.corrupt_array("chunk_corrupt", self._host_packed[i])
+                if self.verify_chunks:
+                    RES.verify_chunk_crcs(
+                        chunk[None], self._chunk_crcs[i : i + 1],
+                        context=f"ExternalDMatrix chunk {i}",
+                    )
+                return jnp.asarray(chunk)
+
+            def note(n, exc, i=i):
+                warnings.warn(
+                    f"chunk {i} page-in failed ({exc}); "
+                    f"retry {n + 1}/{self.load_retries}"
+                )
+
+            yield RES.with_retries(
+                attempt, retries=self.load_retries,
+                backoff=self.load_backoff,
+                retry_on=(OSError, RES.ChunkIntegrityError), on_retry=note,
+            )
+
     def unload(self) -> None:
         """Drop the device copy of the chunk stack (page out). The host
         stack is retained; the next `packed_bins()` pages back in."""

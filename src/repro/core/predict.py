@@ -109,6 +109,24 @@ def truncate_rounds(ens: Ensemble, n_rounds: int) -> Ensemble:
     )
 
 
+def slice_rounds(ens: Ensemble, start: int, end: int) -> Ensemble:
+    """Keep boosting rounds [start, end) — XGBoost `iteration_range`
+    semantics (end=0 means "through the last round"). base_score is part of
+    the model, not of any round, so it survives the slice unchanged."""
+    n_rounds = ens.n_trees // ens.n_classes
+    if end == 0:
+        end = n_rounds
+    if not (0 <= start < end <= n_rounds):
+        raise ValueError(
+            f"iteration_range ({start}, {end}) out of range for a model "
+            f"with {n_rounds} rounds"
+        )
+    lo, hi = start * ens.n_classes, end * ens.n_classes
+    return ens._replace(
+        **{f: getattr(ens, f)[lo:hi] for f in _ENSEMBLE_ARRAY_FIELDS}
+    )
+
+
 def _traverse(tree_arrays, x_row_lookup, max_depth: int) -> jax.Array:
     """Level-wise traversal for one stacked tree over all rows at once.
 

@@ -4,6 +4,8 @@ histogram   — gradient histogram build from the bit-packed matrix
               (one-hot MXU matmul replacing CUDA atomicAdd, DESIGN.md §4)
 split_scan  — fused prefix-sum split-gain evaluation
 decompress  — runtime bit-unpack of the compressed matrix
+ensemble_traversal — fused all-trees x row-block inference traversal for
+              the serving path (one-hot MXU selects, DESIGN.md §14)
 
 Each has a pure-jnp oracle in ref.py and a jit wrapper in ops.py; validated
 with interpret=True on CPU (TPU is the target).

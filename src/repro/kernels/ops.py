@@ -20,6 +20,7 @@ from repro.core import compress as C
 from repro.kernels.histogram import histogram_packed
 from repro.kernels.split_scan import split_scan
 from repro.kernels.decompress import decompress
+from repro.kernels.ensemble_traversal import ensemble_margins_kernel
 
 
 @functools.partial(jax.jit, static_argnames=("n_nodes", "max_bins", "bits"))
@@ -65,3 +66,16 @@ def split_scan_op(hist, parent_sum, reg_lambda: float = 1.0, min_child_weight: f
 @functools.partial(jax.jit, static_argnames=("bits", "n_rows"))
 def decompress_op(packed, bits: int, n_rows: int):
     return decompress(packed, bits, n_rows)
+
+
+@functools.partial(jax.jit, static_argnames=("n_classes", "max_depth"))
+def ensemble_margins_op(
+    feature, threshold, default_left, leaf_value, is_leaf,
+    x, n_classes: int, max_depth: int,
+):
+    """Raw-input serving margins (minus base_score) via the fused
+    ensemble-traversal kernel (one launch for all trees x all rows)."""
+    return ensemble_margins_kernel(
+        feature, threshold, default_left, leaf_value, is_leaf,
+        x, n_classes, max_depth,
+    )

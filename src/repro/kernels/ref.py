@@ -31,6 +31,30 @@ def decompress_ref(packed: jax.Array, bits: int, n_rows: int) -> jax.Array:
     return _unpack(packed, bits, n_rows)
 
 
+def ensemble_margins_ref(
+    feature: jax.Array,  # (T, A) int32
+    threshold: jax.Array,  # (T, A) f32
+    default_left: jax.Array,  # (T, A) bool
+    leaf_value: jax.Array,  # (T, A) f32
+    is_leaf: jax.Array,  # (T, A) bool
+    x: jax.Array,  # (N, F) f32, NaN = missing
+    n_classes: int,
+    max_depth: int,
+) -> jax.Array:
+    """Oracle for kernels.ensemble_traversal: the XLA fused traversal
+    (= serve.traversal, itself bit-identical to core.predict's scan) minus
+    base_score, which the kernel also leaves to its caller."""
+    from repro.serve.traversal import traverse_ensemble_raw
+
+    leaves = traverse_ensemble_raw(
+        feature, threshold, default_left, leaf_value, is_leaf, x, max_depth
+    )  # (T, N)
+    n_trees, n_rows = leaves.shape
+    n_rounds = n_trees // n_classes
+    per_class = leaves.reshape(n_rounds, n_classes, n_rows).sum(axis=0)
+    return per_class.T
+
+
 def split_scan_ref(
     hist: jax.Array,  # (n_nodes, F, B, 2)
     parent_sum: jax.Array,  # (n_nodes, 2)

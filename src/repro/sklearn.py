@@ -118,6 +118,7 @@ class _BoosterEstimator(BaseEstimator):
         on_oom: str = "raise",
         checkpoint_every: int | None = None,
         checkpoint_path: str | None = None,
+        serve: bool = False,
     ):
         self.n_estimators = n_estimators
         self.learning_rate = learning_rate
@@ -153,6 +154,10 @@ class _BoosterEstimator(BaseEstimator):
         self.on_oom = on_oom
         self.checkpoint_every = checkpoint_every
         self.checkpoint_path = checkpoint_path
+        # serve=True routes predict through repro.serve.PredictEngine:
+        # shape-bucketed compiled caches keep mixed batch sizes from
+        # recompiling (DESIGN.md §14). Predictions are identical either way.
+        self.serve = serve
 
     # --- fit plumbing ------------------------------------------------------
     def _fit_objective(self, y: np.ndarray) -> tuple[str, int, np.ndarray]:
@@ -217,6 +222,7 @@ class _BoosterEstimator(BaseEstimator):
         )
         self.n_features_in_ = X.shape[1]
         self.evals_result_ = list(self.booster_.history)
+        self._engines_ = {}  # serve=True engine cache; stale after refit
         return self
 
     def _encode_labels(self, y) -> np.ndarray:
@@ -227,6 +233,38 @@ class _BoosterEstimator(BaseEstimator):
             raise RuntimeError(
                 f"{type(self).__name__} is not fitted yet — call fit() first"
             )
+
+    # --- serving (serve=True) ----------------------------------------------
+    def _serve_engine(self, output_margin: bool):
+        """Lazily-built PredictEngine per output mode (margins for the
+        classifier's decision path, transformed values otherwise)."""
+        key = "margin" if output_margin else "value"
+        engines = getattr(self, "_engines_", None)
+        if engines is None:
+            engines = self._engines_ = {}
+        if key not in engines:
+            from repro.serve import PredictEngine
+
+            engines[key] = PredictEngine(
+                self.booster_, output_margin=output_margin
+            )
+        return engines[key]
+
+    def _predict_values(self, X) -> np.ndarray:
+        """Transformed predictions, through the serving engine when
+        serve=True (bucketed, recompile-free) else the booster directly."""
+        self._check_fitted()
+        if self.serve:
+            return self._serve_engine(output_margin=False).predict(X)
+        return np.asarray(self.booster_.predict(np.asarray(X, np.float32)))
+
+    def _predict_margins(self, X) -> np.ndarray:
+        self._check_fitted()
+        if self.serve:
+            return self._serve_engine(output_margin=True).predict(X)
+        return np.asarray(
+            self.booster_.predict_margins(np.asarray(X, np.float32))
+        )
 
     # --- common fitted surface ---------------------------------------------
     @property
@@ -267,8 +305,7 @@ class XGBRegressor(RegressorMixin, _BoosterEstimator):
         return self._fit(X, y, eval_set=eval_set)
 
     def predict(self, X) -> np.ndarray:
-        self._check_fitted()
-        return np.asarray(self.booster_.predict(np.asarray(X, np.float32)))
+        return self._predict_values(X)
 
 
 class XGBClassifier(ClassifierMixin, _BoosterEstimator):
@@ -304,10 +341,7 @@ class XGBClassifier(ClassifierMixin, _BoosterEstimator):
         return self._fit(X, y, eval_set=eval_set)
 
     def predict(self, X) -> np.ndarray:
-        self._check_fitted()
-        margins = np.asarray(
-            self.booster_.predict_margins(np.asarray(X, np.float32))
-        )
+        margins = self._predict_margins(X)
         if margins.shape[1] == 1:
             idx = (margins[:, 0] > 0.0).astype(int)
         else:
@@ -315,10 +349,9 @@ class XGBClassifier(ClassifierMixin, _BoosterEstimator):
         return self.classes_[idx]
 
     def predict_proba(self, X) -> np.ndarray:
-        self._check_fitted()
         import jax
 
-        margins = self.booster_.predict_margins(np.asarray(X, np.float32))
+        margins = self._predict_margins(X)
         if margins.shape[1] == 1:
             p = np.asarray(jax.nn.sigmoid(margins[:, 0]))
             return np.column_stack([1.0 - p, p])
@@ -364,8 +397,7 @@ class XGBRanker(_BoosterEstimator):
                          eval_group_ids=eval_gids)
 
     def predict(self, X) -> np.ndarray:
-        self._check_fitted()
-        return np.asarray(self.booster_.predict(np.asarray(X, np.float32)))
+        return self._predict_values(X)
 
 
 __all__ = [

@@ -1,0 +1,448 @@
+"""XGBoost model-format interop (DESIGN.md §14).
+
+The real `xgboost` package is an OPTIONAL dev dependency (pyproject's
+`interop` extra); the tests that train genuine xgboost models skip when it
+is absent. Everything else runs against two xgboost-independent witnesses:
+
+  * schema fixtures — hand-built JSON documents in the exact
+    `xgboost.Booster.save_model` schema, and
+  * `_oracle_margins` — an independent numpy interpreter of that schema
+    (pointer-following, strict `x < t` routing, default_left on NaN,
+    probability-space base_score), written against xgboost's documented
+    semantics rather than against our import code.
+
+Import correctness = our predict matches the oracle on the same document;
+export correctness = the oracle run on OUR exported document matches our
+predictions (i.e. a strict-less evaluator reproduces us — which is what
+stock xgboost will do when it loads the file).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import Booster, DeviceDMatrix
+from repro.serve import export_xgboost_json, import_xgboost_json
+
+
+# --- independent schema interpreter -----------------------------------------
+
+def _prob_to_margin(p, objective):
+    if objective == "binary:logistic":
+        return float(np.log(p / (1.0 - p)))
+    if objective == "count:poisson":
+        return float(np.log(p))
+    return float(p)
+
+
+def _oracle_margins(doc, x):
+    """Margins per xgboost's documented semantics: strict x < t goes left,
+    NaN follows default_left, leaf values accumulate per tree_info class,
+    base_score enters margin space via the objective's link."""
+    learner = doc["learner"]
+    objective = learner["objective"]["name"]
+    lmp = learner["learner_model_param"]
+    k = max(int(lmp.get("num_class", "0")), 1)
+    base = _prob_to_margin(float(lmp["base_score"]), objective)
+    model = learner["gradient_booster"]["model"]
+    trees = model["trees"]
+    tree_info = model.get("tree_info", [0] * len(trees))
+
+    out = np.full((x.shape[0], k), np.float32(base), np.float32)
+    for t, tree in enumerate(trees):
+        cls = int(tree_info[t]) if k > 1 else 0
+        lc, rc = tree["left_children"], tree["right_children"]
+        sc = np.asarray(tree["split_conditions"], np.float32)
+        si, dl = tree["split_indices"], tree["default_left"]
+        for r in range(x.shape[0]):
+            nid = 0
+            while lc[nid] != -1:
+                v = x[r, si[nid]]
+                if np.isnan(v):
+                    nid = lc[nid] if dl[nid] else rc[nid]
+                elif np.float32(v) < sc[nid]:
+                    nid = lc[nid]
+                else:
+                    nid = rc[nid]
+            out[r, cls] += sc[nid]
+    return out
+
+
+# --- schema fixture builders ------------------------------------------------
+
+def _leaf(value):
+    return {"leaf": float(value)}
+
+
+def _split(feature, threshold, left, right, default_left=True, gain=1.0):
+    return {"f": int(feature), "t": float(threshold), "l": left, "r": right,
+            "dl": bool(default_left), "g": float(gain)}
+
+
+def _tree_doc(spec, num_feature):
+    """Nested spec -> an xgboost-schema tree dict (preorder node ids)."""
+    nodes = []
+
+    def place(s, parent):
+        nid = len(nodes)
+        nodes.append(None)
+        if "leaf" in s:
+            nodes[nid] = dict(leaf=s["leaf"], parent=parent)
+        else:
+            nodes[nid] = dict(split=s, parent=parent)
+            nodes[nid]["left"] = place(s["l"], nid)
+            nodes[nid]["right"] = place(s["r"], nid)
+        return nid
+
+    place(spec, 2147483647)
+    n = len(nodes)
+    tree = {
+        "base_weights": [0.0] * n,
+        "categories": [], "categories_nodes": [],
+        "categories_segments": [], "categories_sizes": [],
+        "default_left": [0] * n,
+        "id": 0,
+        "left_children": [-1] * n,
+        "loss_changes": [0.0] * n,
+        "parents": [nd["parent"] for nd in nodes],
+        "right_children": [-1] * n,
+        "split_conditions": [0.0] * n,
+        "split_indices": [0] * n,
+        "split_type": [0] * n,
+        "sum_hessian": [1.0] * n,
+        "tree_param": {
+            "num_deleted": "0", "num_feature": str(num_feature),
+            "num_nodes": str(n), "size_leaf_vector": "1",
+        },
+    }
+    for nid, nd in enumerate(nodes):
+        if "leaf" in nd:
+            tree["split_conditions"][nid] = nd["leaf"]
+            tree["base_weights"][nid] = nd["leaf"]
+        else:
+            s = nd["split"]
+            tree["left_children"][nid] = nd["left"]
+            tree["right_children"][nid] = nd["right"]
+            tree["split_conditions"][nid] = s["t"]
+            tree["split_indices"][nid] = s["f"]
+            tree["default_left"][nid] = int(s["dl"])
+            tree["loss_changes"][nid] = s["g"]
+    return tree
+
+
+def _model_doc(tree_specs, *, objective, num_feature, base_score,
+               num_class=0, tree_info=None):
+    trees = [_tree_doc(s, num_feature) for s in tree_specs]
+    for i, t in enumerate(trees):
+        t["id"] = i
+    k = max(num_class, 1)
+    return {
+        "learner": {
+            "attributes": {},
+            "feature_names": [], "feature_types": [],
+            "gradient_booster": {
+                "model": {
+                    "gbtree_model_param": {
+                        "num_parallel_tree": "1",
+                        "num_trees": str(len(trees)),
+                    },
+                    "iteration_indptr": list(
+                        range(0, len(trees) + 1, k)
+                    ),
+                    "tree_info": tree_info if tree_info is not None
+                    else [i % k for i in range(len(trees))],
+                    "trees": trees,
+                },
+                "name": "gbtree",
+            },
+            "learner_model_param": {
+                "base_score": repr(base_score),
+                "boost_from_average": "1",
+                "num_class": str(num_class),
+                "num_feature": str(num_feature),
+                "num_target": "1",
+            },
+            "objective": {"name": objective},
+        },
+        "version": [2, 0, 0],
+    }
+
+
+@pytest.fixture
+def rng_x():
+    rng = np.random.default_rng(11)
+    x = rng.normal(size=(300, 4)).astype(np.float32)
+    x[rng.random(x.shape) < 0.15] = np.nan
+    return x
+
+
+# --- import: fixtures vs the oracle -----------------------------------------
+
+def test_import_regression_matches_oracle(rng_x):
+    doc = _model_doc(
+        [
+            _split(0, 0.1, _split(1, -0.5, _leaf(1.0), _leaf(2.0)),
+                   _leaf(-1.0), default_left=False),
+            _split(2, 0.7, _leaf(0.25), _split(3, 0.0, _leaf(-0.5),
+                   _leaf(0.5), default_left=True)),
+        ],
+        objective="reg:squarederror", num_feature=4, base_score=1.5,
+    )
+    bst = import_xgboost_json(doc)
+    got = np.asarray(bst.predict_margins(rng_x))
+    np.testing.assert_allclose(
+        got, _oracle_margins(doc, rng_x), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_import_strict_less_boundary():
+    """x == threshold must go RIGHT (xgboost is strict less); x one float32
+    ulp below must go left — the nextafter nudge, at the exact boundary."""
+    t = np.float32(0.75)
+    doc = _model_doc(
+        [_split(0, float(t), _leaf(-7.0), _leaf(7.0))],
+        objective="reg:squarederror", num_feature=1, base_score=0.0,
+    )
+    bst = import_xgboost_json(doc)
+    x = np.array(
+        [[t], [np.nextafter(t, np.float32(-np.inf), dtype=np.float32)]],
+        np.float32,
+    )
+    got = np.asarray(bst.predict_margins(x))[:, 0]
+    np.testing.assert_array_equal(got, [7.0, -7.0])
+    np.testing.assert_array_equal(_oracle_margins(doc, x)[:, 0], got)
+
+
+def test_import_nan_default_direction():
+    doc = _model_doc(
+        [
+            _split(0, 0.0, _leaf(-1.0), _leaf(1.0), default_left=True),
+            _split(0, 0.0, _leaf(-10.0), _leaf(10.0), default_left=False),
+        ],
+        objective="reg:squarederror", num_feature=1, base_score=0.0,
+    )
+    bst = import_xgboost_json(doc)
+    x = np.array([[np.nan]], np.float32)
+    # tree 1: NaN -> left (-1); tree 2: NaN -> right (+10).
+    np.testing.assert_allclose(np.asarray(bst.predict_margins(x)), [[9.0]])
+
+
+def test_import_binary_logistic_base_score(rng_x):
+    doc = _model_doc(
+        [_split(0, 0.0, _leaf(-0.4), _leaf(0.6))],
+        objective="binary:logistic", num_feature=4, base_score=0.2,
+    )
+    bst = import_xgboost_json(doc)
+    want = _oracle_margins(doc, rng_x)
+    np.testing.assert_allclose(
+        np.asarray(bst.predict_margins(rng_x)), want, rtol=1e-5, atol=1e-6
+    )
+    # predict applies the sigmoid, like xgboost's predict on this objective
+    np.testing.assert_allclose(
+        np.asarray(bst.predict(rng_x)),
+        1.0 / (1.0 + np.exp(-want[:, 0])), rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_import_multiclass_reorders_tree_info(rng_x):
+    """Trees arrive class-shuffled within each iteration; import must map
+    them onto the arena's round-robin layout by tree_info."""
+    specs = [
+        _split(0, 0.0, _leaf(0.1), _leaf(0.2)),   # iter 0, class 1
+        _split(1, 0.0, _leaf(0.3), _leaf(0.4)),   # iter 0, class 0
+        _split(2, 0.0, _leaf(0.5), _leaf(0.6)),   # iter 0, class 2
+        _split(3, 0.0, _leaf(0.7), _leaf(0.8)),   # iter 1, class 2
+        _split(0, 0.5, _leaf(0.9), _leaf(1.0)),   # iter 1, class 0
+        _split(1, 0.5, _leaf(1.1), _leaf(1.2)),   # iter 1, class 1
+    ]
+    doc = _model_doc(
+        specs, objective="multi:softmax", num_feature=4, base_score=0.5,
+        num_class=3, tree_info=[1, 0, 2, 2, 0, 1],
+    )
+    bst = import_xgboost_json(doc)
+    np.testing.assert_allclose(
+        np.asarray(bst.predict_margins(rng_x)),
+        _oracle_margins(doc, rng_x), rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_import_from_string_and_file(tmp_path, rng_x):
+    doc = _model_doc(
+        [_leaf(2.0)], objective="reg:squarederror", num_feature=4,
+        base_score=0.0,
+    )
+    from_dict = import_xgboost_json(doc)
+    from_str = import_xgboost_json(json.dumps(doc))
+    path = tmp_path / "model.json"
+    path.write_text(json.dumps(doc))
+    from_file = import_xgboost_json(str(path))
+    for bst in (from_dict, from_str, from_file):
+        np.testing.assert_allclose(
+            np.asarray(bst.predict_margins(rng_x[:5])), 2.0
+        )
+
+
+def test_import_rejections():
+    base = _model_doc(
+        [_leaf(1.0)], objective="reg:squarederror", num_feature=2,
+        base_score=0.0,
+    )
+    dart = json.loads(json.dumps(base))
+    dart["learner"]["gradient_booster"]["name"] = "dart"
+    with pytest.raises(ValueError, match="gbtree"):
+        import_xgboost_json(dart)
+
+    forest = json.loads(json.dumps(base))
+    forest["learner"]["gradient_booster"]["model"]["gbtree_model_param"][
+        "num_parallel_tree"] = "4"
+    with pytest.raises(ValueError, match="num_parallel_tree"):
+        import_xgboost_json(forest)
+
+    cat = _model_doc(
+        [_split(0, 0.0, _leaf(1.0), _leaf(2.0))],
+        objective="reg:squarederror", num_feature=2, base_score=0.0,
+    )
+    cat["learner"]["gradient_booster"]["model"]["trees"][0][
+        "split_type"][0] = 1
+    with pytest.raises(ValueError, match="categorical"):
+        import_xgboost_json(cat)
+
+    alien = json.loads(json.dumps(base))
+    alien["learner"]["objective"]["name"] = "survival:cox"
+    with pytest.raises(ValueError, match="unsupported objective"):
+        import_xgboost_json(alien)
+
+
+# --- export: oracle on our documents ----------------------------------------
+
+def _train(objective, n_classes=1, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(500, 5)).astype(np.float32)
+    x[rng.random(x.shape) < 0.1] = np.nan
+    if n_classes > 1:
+        y = ((np.nan_to_num(x[:, 0]) > 0)
+             + (np.nan_to_num(x[:, 1]) > 0.5)).astype(np.float32)
+    elif objective == "binary:logistic":
+        y = (np.nan_to_num(x[:, 0]) > 0).astype(np.float32)
+    else:
+        y = (np.nan_to_num(x[:, 0])
+             + 0.2 * rng.normal(size=500)).astype(np.float32)
+    d = DeviceDMatrix(x, label=y, max_bins=32)
+    bst = Booster(n_rounds=4, max_depth=3, max_bins=32,
+                  objective=objective, n_classes=n_classes, seed=seed).fit(d)
+    return bst, x
+
+
+@pytest.mark.parametrize("objective,k", [
+    ("reg:squarederror", 1),
+    ("binary:logistic", 1),
+    ("multi:softmax", 3),
+])
+def test_export_semantics_under_strict_less(objective, k):
+    """The oracle (strict-less evaluator, as stock xgboost) run on OUR
+    exported JSON must reproduce our margins — the ulp-up nudge at work."""
+    bst, x = _train(objective, k)
+    doc = export_xgboost_json(bst)
+    np.testing.assert_allclose(
+        _oracle_margins(doc, x), np.asarray(bst.predict_margins(x)),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+@pytest.mark.parametrize("objective,k", [
+    ("reg:squarederror", 1),
+    ("binary:logistic", 1),
+    ("multi:softmax", 3),
+])
+def test_export_import_round_trip_bit_exact(objective, k):
+    bst, x = _train(objective, k)
+    back = import_xgboost_json(export_xgboost_json(bst))
+    np.testing.assert_array_equal(
+        np.asarray(back.predict_margins(x)),
+        np.asarray(bst.predict_margins(x)),
+    )
+    # thresholds survive a second hop unchanged (pred/succ are inverses)
+    d1 = export_xgboost_json(bst)
+    d2 = export_xgboost_json(back)
+    for t1, t2 in zip(
+        d1["learner"]["gradient_booster"]["model"]["trees"],
+        d2["learner"]["gradient_booster"]["model"]["trees"],
+    ):
+        assert t1["split_conditions"] == t2["split_conditions"]
+        assert t1["left_children"] == t2["left_children"]
+
+
+def test_export_writes_file(tmp_path):
+    bst, x = _train("reg:squarederror")
+    path = tmp_path / "model.json"
+    doc = export_xgboost_json(bst, str(path))
+    on_disk = json.loads(path.read_text())
+    assert on_disk == json.loads(json.dumps(doc))
+
+
+def test_export_unfitted_raises():
+    with pytest.raises(RuntimeError, match="not fitted"):
+        export_xgboost_json(Booster())
+
+
+# --- against real xgboost (optional dep, skip-if-absent) --------------------
+
+try:
+    import xgboost as xgb
+except ImportError:  # pragma: no cover - exercised when the extra is absent
+    xgb = None
+
+requires_xgboost = pytest.mark.skipif(
+    xgb is None, reason="xgboost not installed (pip install .[interop])"
+)
+
+
+def _xgb_train(objective, x, y, k=0):
+    params = {"objective": objective, "max_depth": 3, "eta": 0.3,
+              "base_score": 0.5, "tree_method": "hist"}
+    if k:
+        params["num_class"] = k
+    dtrain = xgb.DMatrix(x, label=y)
+    return xgb.train(params, dtrain, num_boost_round=5)
+
+
+@requires_xgboost
+@pytest.mark.parametrize("objective,k", [
+    ("reg:squarederror", 0),
+    ("binary:logistic", 0),
+    ("multi:softprob", 3),
+])
+def test_real_xgboost_import_parity(tmp_path, objective, k):
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(400, 6)).astype(np.float32)
+    x[rng.random(x.shape) < 0.1] = np.nan
+    if k:
+        y = ((np.nan_to_num(x[:, 0]) > 0)
+             + (np.nan_to_num(x[:, 1]) > 0.5)).astype(np.float32)
+    elif objective == "binary:logistic":
+        y = (np.nan_to_num(x[:, 0]) > 0).astype(np.float32)
+    else:
+        y = np.nan_to_num(x[:, 0]).astype(np.float32)
+    model = _xgb_train(objective, x, y, k)
+    path = tmp_path / "xgb.json"
+    model.save_model(str(path))
+
+    bst = import_xgboost_json(str(path))
+    ours = np.asarray(bst.predict_margins(x))
+    theirs = model.predict(xgb.DMatrix(x), output_margin=True)
+    np.testing.assert_allclose(
+        ours, theirs.reshape(ours.shape), rtol=1e-5, atol=1e-5
+    )
+
+
+@requires_xgboost
+def test_real_xgboost_loads_our_export(tmp_path):
+    bst, x = _train("binary:logistic")
+    path = tmp_path / "ours.json"
+    export_xgboost_json(bst, str(path))
+    model = xgb.Booster(model_file=str(path))
+    theirs = model.predict(xgb.DMatrix(x), output_margin=True)
+    np.testing.assert_allclose(
+        theirs, np.asarray(bst.predict_margins(x))[:, 0],
+        rtol=1e-5, atol=1e-5,
+    )
