@@ -2,15 +2,19 @@
 
 The container has ONE physical core, so wall-clock cannot show real
 speedup; what CAN be measured faithfully is the Algorithm-1 distribution
-itself: per-device row count, per-device histogram work, and the AllReduce
-bytes per boosting round, for p in {1, 2, 4, 8} virtual devices. Each p
+itself: a rows x devices grid recording rows/s and the per-round
+communication profile (wire bytes, collective calls, compression fallbacks
+— `Booster.comm_stats`, DESIGN.md §15) for each collective strategy
+(psum / ring / hier) and compression mode (f32 / f16 / q16). Each cell
 runs in a subprocess (XLA_FLAGS must precede jax init).
 
-AllReduce bytes/round (analytic, verified against the HLO in the dry-run):
-  sum over levels l of 2^l * F * B * 2 * 4 bytes  (histogram f32 pairs)
+`--merge-into BENCH_pipeline.json` folds the results into the shared BENCH
+file as a `scaling` section, including the headline comm-bytes reduction of
+the compressed histogram allreduce vs exact f32.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import subprocess
@@ -32,52 +36,164 @@ cfg = BoosterConfig(n_rounds={rounds}, max_depth=6, max_bins=256,
                     objective=spec.objective)
 mesh = make_mesh((p,), ("data",))
 dtrain = DeviceDMatrix(x, label=y)
+fit_kw = dict(mesh=mesh, collective={collective!r},
+              compression={compression!r})
+# untimed warm-up fit compiles the round program
+Booster(BoosterConfig(n_rounds=1, max_depth=6, max_bins=256,
+                      objective=spec.objective)).fit(dtrain, **fit_kw)
 t0 = time.perf_counter()
-bst = Booster(cfg).fit(dtrain, mesh=mesh)
+bst = Booster(cfg).fit(dtrain, **fit_kw)
 jax.block_until_ready(bst.margins)
 dt = time.perf_counter() - t0
-print(json.dumps(dict(p=p, time_s=dt, rows_per_device=len(x)//p)))
+rec = dict(p=p, rows={rows}, time_s=dt, rows_per_device=len(x)//p,
+           rows_per_s=len(x) * {rounds} / dt, collective={collective!r},
+           compression={compression!r})
+rec.update(bst.comm_stats)
+print(json.dumps(rec))
 """
 
 
 def allreduce_bytes_per_round(max_depth=6, n_features=13, max_bins=256):
+    """Legacy single-number model: full-histogram f32 payload per round
+    (sum over levels of 2^l * F * B * 2 * 4 bytes)."""
     total = 0
     for level in range(max_depth):
         total += (2**level) * n_features * max_bins * 2 * 4
     return total
 
 
-def run(rows=32_768, rounds=5, device_counts=(1, 2, 4, 8)):
-    results = []
-    for p in device_counts:
-        env = dict(os.environ)
-        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p}"
-        env["PYTHONPATH"] = os.path.join(ROOT, "src")
-        res = subprocess.run(
-            [sys.executable, "-c", textwrap.dedent(_SCRIPT.format(
-                p=p, rows=rows, rounds=rounds))],
-            capture_output=True, text=True, timeout=900, env=env,
-        )
-        if res.returncode != 0:
-            results.append({"p": p, "error": res.stderr[-300:]})
+def _cell(p, rows, rounds, collective, compression):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    res = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_SCRIPT.format(
+            p=p, rows=rows, rounds=rounds, collective=collective,
+            compression=compression))],
+        capture_output=True, text=True, timeout=1200, env=env,
+    )
+    if res.returncode != 0:
+        return {"p": p, "rows": rows, "collective": collective,
+                "compression": compression, "error": res.stderr[-300:]}
+    rec = json.loads(res.stdout.strip().splitlines()[-1])
+    rec["hist_bytes_per_round"] = sum(rec.pop("hist_bytes_per_level"))
+    return rec
+
+
+def run(rows_list=(32_768,), rounds=5, device_counts=(1, 2, 4, 8),
+        collectives=("psum", "ring", "hier"),
+        compressions=(None, "q16")):
+    """The rows x devices x (collective, compression) grid.
+
+    f32 runs cover every collective; compressed runs go through the ring
+    (the strategy whose wire dtype actually narrows). p=1 runs only psum
+    f32 (the single-device baseline row).
+    """
+    grid = []
+    for rows in rows_list:
+        for p in device_counts:
+            cells = [("psum", None)]
+            if p > 1:
+                cells += [(c, None) for c in collectives if c != "psum"]
+                cells += [("ring", comp) for comp in compressions
+                          if comp is not None]
+            for coll, comp in cells:
+                grid.append(_cell(p, rows, rounds, coll, comp))
+    return grid
+
+
+def summarise(grid):
+    """Headline: compressed ring vs exact f32 ring at the largest grid cell
+    — histogram-payload and total wire-byte reduction factors."""
+    ok = [g for g in grid if "error" not in g]
+    ring_f32 = {(g["rows"], g["p"]): g for g in ok
+                if g["collective"] == "ring" and g["compression"] is None}
+    best = None
+    for g in ok:
+        if g["compression"] is None:
             continue
-        rec = json.loads(res.stdout.strip().splitlines()[-1])
-        rec["allreduce_bytes_per_round"] = allreduce_bytes_per_round()
-        results.append(rec)
-    return results
+        ref = ring_f32.get((g["rows"], g["p"]))
+        if ref is None:
+            continue
+        red_total = ref["bytes_per_round"] / g["bytes_per_round"]
+        red_hist = ref["hist_bytes_per_round"] / g["hist_bytes_per_round"]
+        cand = {
+            "rows": g["rows"], "devices": g["p"],
+            "collective": g["collective"], "compression": g["compression"],
+            "bytes_per_round": g["bytes_per_round"],
+            "bytes_per_round_f32": ref["bytes_per_round"],
+            "reduction_hist": round(red_hist, 4),
+            "reduction_total": round(red_total, 4),
+            "fallback_events": g["fallback_events"],
+        }
+        if best is None or (cand["devices"], cand["reduction_hist"]) > (
+                best["devices"], best["reduction_hist"]):
+            best = cand
+    return best
 
 
-def main():
-    rows = run()
-    print("# Figure 2 (airline-shaped, virtual devices on 1 core):")
-    print("devices,time_s,rows_per_device,allreduce_bytes_per_round")
-    for r in rows:
-        if "error" in r:
-            print(f"{r['p']},ERROR,{r['error'][:80]}")
+def merge_into(path, section):
+    """Fold the scaling section into an existing BENCH json (created if
+    missing), leaving every other section untouched."""
+    data = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    data["scaling"] = section
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=1)
+        f.write("\n")
+    os.replace(tmp, path)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rows", type=int, nargs="+", default=[32_768])
+    ap.add_argument("--devices", type=int, nargs="+", default=[1, 2, 4, 8])
+    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--compressions", nargs="+", default=["q16", "f16"])
+    ap.add_argument("--out", default=None, help="write the grid json here")
+    ap.add_argument("--merge-into", default=None,
+                    help="BENCH json to receive the `scaling` section")
+    args = ap.parse_args(argv)
+
+    grid = run(rows_list=tuple(args.rows), rounds=args.rounds,
+               device_counts=tuple(args.devices),
+               compressions=tuple(args.compressions))
+    print("# Figure 2 grid (airline-shaped, virtual devices on 1 core):")
+    print("rows,devices,collective,compression,time_s,rows_per_s,"
+          "bytes_per_round,hist_bytes_per_round,fallbacks")
+    for g in grid:
+        if "error" in g:
+            print(f"{g['rows']},{g['p']},{g['collective']},"
+                  f"{g['compression']},ERROR,{g['error'][:80]}")
         else:
-            print(f"{r['p']},{r['time_s']:.2f},{r['rows_per_device']},"
-                  f"{r['allreduce_bytes_per_round']}")
-    return rows
+            print(f"{g['rows']},{g['p']},{g['collective']},"
+                  f"{g['compression']},{g['time_s']:.2f},"
+                  f"{g['rows_per_s']:.0f},{g['bytes_per_round']},"
+                  f"{g['hist_bytes_per_round']},{g['fallback_events']}")
+    section = {
+        "note": "virtual devices on one core: rows/s is NOT a speedup "
+                "claim; comm bytes/round is the faithful signal "
+                "(Booster.comm_stats, DESIGN.md §15)",
+        "rounds": args.rounds,
+        "grid": grid,
+        "comm_reduction": summarise(grid),
+    }
+    if section["comm_reduction"]:
+        cr = section["comm_reduction"]
+        print(f"# comm reduction ({cr['collective']}+{cr['compression']}, "
+              f"p={cr['devices']}): hist x{cr['reduction_hist']}, "
+              f"total x{cr['reduction_total']}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(section, f, indent=1)
+            f.write("\n")
+    if args.merge_into:
+        merge_into(args.merge_into, section)
+        print(f"# merged `scaling` into {args.merge_into}")
+    return grid
 
 
 if __name__ == "__main__":

@@ -478,6 +478,9 @@ class Booster:
         # runtime absorbed (OOM fallback, failed checkpoint writes, clamps).
         self.skipped_rounds: list[int] = []
         self.resilience_events: list[dict] = []
+        # Per-fit communication profile of the latest mesh= fit (DESIGN.md
+        # §15): wire bytes/round, collective calls, compression fallbacks.
+        self.comm_stats: dict | None = None
 
     # --- small surface -----------------------------------------------------
     @property
@@ -541,6 +544,9 @@ class Booster:
         callback: Callable[[int, dict], None] | None = None,
         mesh=None,
         data_axes: Sequence[str] = ("data",),
+        collective="psum",
+        compression: str | None = None,
+        comm_tolerance: float = 0.05,
         checkpoint_every: int | None = None,
         checkpoint_path: str | None = None,
         on_oom: str = "raise",
@@ -565,7 +571,15 @@ class Booster:
         custom_metric: one extra metric spec (callable or (name, fn[,
           maximize]) tuple), appended after eval_metric.
         mesh: optional jax Mesh — rows are sharded over `data_axes` and
-          histograms combined with psum (paper Algorithm 1); same Booster out.
+          histograms combined per level (paper Algorithm 1); same Booster out.
+        collective: histogram-reduction strategy with mesh= — a registry name
+          ("psum" | "ring" | "hier"), a repro.dist.Collective subclass, or an
+          instance (DESIGN.md §15). f32 mode trains identically to
+          single-device fits for every strategy.
+        compression: None | "f16" | "q16" — compressed per-level histogram
+          bin sums with an on-device max-error check that falls back to
+          exact f32 when `comm_tolerance` (relative) is exceeded. Per-fit
+          wire accounting lands on `self.comm_stats`.
         checkpoint_every: write an atomic resumable snapshot every this many
           rounds to `checkpoint_path` (DESIGN.md §13). `Booster.resume(path,
           dtrain)` continues a killed fit to a bit-identical booster.
@@ -610,7 +624,10 @@ class Booster:
                                  early_stopping_rounds, verbose_every,
                                  callback, mesh, data_axes,
                                  checkpoint_every=checkpoint_every,
-                                 checkpoint_path=checkpoint_path)
+                                 checkpoint_path=checkpoint_path,
+                                 collective=collective,
+                                 compression=compression,
+                                 comm_tolerance=comm_tolerance)
                 return self
             except Exception as exc:
                 if on_oom != "external" or not RES.is_oom(exc):
@@ -657,6 +674,9 @@ class Booster:
         callback: Callable[[int, dict], None] | None = None,
         mesh=None,
         data_axes: Sequence[str] = ("data",),
+        collective="psum",
+        compression: str | None = None,
+        comm_tolerance: float = 0.05,
         checkpoint_every: int | None = None,
         checkpoint_path: str | None = None,
     ) -> "Booster":
@@ -682,7 +702,9 @@ class Booster:
         self._run_rounds(dtrain, n_rounds, evals, early_stopping_rounds,
                          verbose_every, callback, mesh, data_axes,
                          checkpoint_every=checkpoint_every,
-                         checkpoint_path=checkpoint_path)
+                         checkpoint_path=checkpoint_path,
+                         collective=collective, compression=compression,
+                         comm_tolerance=comm_tolerance)
         return self
 
     @classmethod
@@ -698,6 +720,9 @@ class Booster:
         checkpoint_path: str | None = None,
         mesh=None,
         data_axes: Sequence[str] = ("data",),
+        collective="psum",
+        compression: str | None = None,
+        comm_tolerance: float = 0.05,
     ) -> "Booster":
         """Continue a killed fit from an in-run checkpoint (DESIGN.md §13).
 
@@ -759,7 +784,9 @@ class Booster:
         es = int(rs.get("early_stopping_rounds", 0)) or None
         bst._run_rounds(dtrain, remaining, evals_n, es, ve, callback, mesh,
                         tuple(data_axes), checkpoint_every=ck,
-                        checkpoint_path=cpath, resume_state=rs)
+                        checkpoint_path=cpath, resume_state=rs,
+                        collective=collective, compression=compression,
+                        comm_tolerance=comm_tolerance)
         return bst
 
     def _cuts_match(self, cuts: jax.Array) -> bool:
@@ -804,7 +831,8 @@ class Booster:
     def _run_rounds(self, dtrain, n_rounds, evals, early_stopping_rounds,
                     verbose_every, callback, mesh, data_axes,
                     checkpoint_every=None, checkpoint_path=None,
-                    resume_state=None):
+                    resume_state=None, collective="psum", compression=None,
+                    comm_tolerance=0.05):
         if n_rounds <= 0:
             raise ValueError(f"n_rounds must be positive, got {n_rounds}")
         cfg, obj = self.cfg, self.obj
@@ -879,11 +907,13 @@ class Booster:
                 raise NotImplementedError(
                     "group_ids (rank:pairwise) is single-device only"
                 )
-            from repro.core import distributed as D
+            from repro import dist as D
 
             run_chunk = D.make_chunk_runner(
                 cfg, obj, dtrain, mesh, data_axes, eval_pbs, eval_ys,
                 eval_extras, metrics, track_metric,
+                collective=collective, compression=compression,
+                comm_tolerance=comm_tolerance,
             )
         else:
             external = isinstance(dtrain, ExternalDMatrix)
@@ -931,6 +961,13 @@ class Booster:
                               eval_ys, eval_extras)
                 return fn(data, margins, y, extra, eval_pbs, eval_margins,
                           eval_ys, eval_extras)
+
+        # Per-fit communication accounting (DESIGN.md §15): analytic wire
+        # bytes / collective calls for the chosen strategy, plus the
+        # measured compressed-allreduce fallback count (filled post-loop).
+        self.comm_stats = (
+            run_chunk.comm_stats.as_dict() if mesh is not None else None
+        )
 
         FA.check("oom")
         # The scan runs in compiled chunks delimited by the next early-
@@ -1002,6 +1039,10 @@ class Booster:
                     eval_names=eval_names,
                 )
         jax.block_until_ready(margins)
+        if self.comm_stats is not None:
+            self.comm_stats["fallback_events"] = int(
+                run_chunk.fallback_events
+            )
 
         # Deferred final history record: the cadence above records round r
         # when r % record_every == 0, but the last trained round is recorded

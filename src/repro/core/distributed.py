@@ -1,372 +1,23 @@
-"""Multi-device GBDT training (paper §2.3, Algorithm 1) via shard_map.
+"""Back-compat shim: the multi-device training round moved to `repro.dist`.
 
-Rows are partitioned across the `data` (and `pod`) mesh axes — the paper's
-"each GPU processes a subset of training instances". Each shard builds
-partial histograms; jax.lax.psum combines them (the NCCL AllReduceHistograms
-call); split evaluation and tree state are replicated, positions stay
-shard-local. The per-round function is a single shard_map body, so XLA sees
-one SPMD program with exactly one all-reduce per tree level.
-
-Beyond-paper option (`feature_shards` > 1): histograms are additionally
-sharded over features on the `model` axis, turning the full-histogram
-all-reduce into a reduce-scatter-shaped psum of 1/p of the bytes, with each
-shard evaluating only its features and an argmax-allgather of the (tiny)
-per-node best-split records. See EXPERIMENTS.md §Perf.
+The shard_map round runner grew into a subsystem — pluggable collectives
+(psum / ring / hierarchical), compressed histogram allreduce, device-sharded
+sketch construction, per-round communication accounting — and lives in
+`repro/dist/` (DESIGN.md §15). This module re-exports the old names so
+existing imports keep working; new code should import `repro.dist`.
 """
-from __future__ import annotations
+from repro.dist.runner import (  # noqa: F401
+    _APPLY_EVAL_CACHE,
+    _ROUND_FN_CACHE,
+    RoundInputs,
+    make_chunk_runner,
+    make_distributed_round,
+    train_distributed,
+)
 
-from typing import Sequence
-
-import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-
-from repro import jaxcompat
-from repro.core import compress as C
-from repro.core import objectives as O
-from repro.core import resilience as RES
-from repro.core import sampling as SMP
-from repro.core import tree as T
-
-
-# Compiled per-round shard_map programs and eval-margin updaters, keyed by
-# static config (cuts/data are traced arguments) — mirrors
-# booster._TRAIN_FN_CACHE so refits with mesh= skip recompilation too.
-_ROUND_FN_CACHE: dict = {}
-_APPLY_EVAL_CACHE: dict = {}
-
-
-def make_distributed_round(
-    cfg,
-    obj: O.Objective,
-    mesh: jax.sharding.Mesh,
-    data_axes: Sequence[str] = ("data",),
-    n_rows_per_shard: int | None = None,
-    bits: int | None = None,
-    chunk_rows: int | None = None,
-):
-    """Returns a jit'd per-round function over row-sharded data.
-
-    Inputs to the returned fn: bins_or_packed row-sharded over data_axes,
-    margins/y row-sharded, cuts replicated; replicated tree output. Cached
-    by static config so repeated fits reuse the compiled program.
-
-    `chunk_rows` set means external-memory data: each shard holds a stack
-    of independently packed chunks (its row shard), and the per-level
-    histogram is a chunk-scan on-shard followed by the usual psum — the
-    chunk loop composes with Algorithm 1's AllReduce unchanged.
-    """
-    # Objective is a hashable NamedTuple; registry lookups return singletons,
-    # so registered (incl. custom-registered) objectives key stably.
-    key = (cfg, obj, mesh, tuple(data_axes), n_rows_per_shard, bits,
-           chunk_rows)
-    cached = _ROUND_FN_CACHE.get(key)
-    if cached is not None:
-        return cached
-    k = obj.n_outputs(cfg.n_classes)
-    axis0, extra = data_axes[0], tuple(data_axes[1:])
-    cfg_kw = O.config_kwargs(cfg)  # static under shard_map (cfg keys cache)
-    chunked = chunk_rows is not None
-    stoch = SMP.stochastic_params(cfg)
-    sentinel = cfg.numeric_check != "off"
-    # Static shard geometry for the shared-key sampling (DESIGN.md §12):
-    # every shard draws the SAME global row selection / feature masks from
-    # the replicated per-round key, then slices its own rows — identical to
-    # the single-device sample, no extra collective, psum unchanged.
-    axis_sizes = tuple(mesh.shape[a] for a in data_axes)
-    n_shards = 1
-    for s in axis_sizes:
-        n_shards *= s
-
-    def _shard_offset(n_local):
-        lin = jnp.int32(0)
-        for a, s in zip(data_axes, axis_sizes):
-            lin = lin * s + jax.lax.axis_index(a)
-        return lin * n_local
-
-    def round_body(data, margins, y, cuts, rkey=None):
-        from repro.core import booster as B  # lazy: avoid import cycle
-
-        if chunked:
-            # External-memory: this shard's chunk stack is its matrix.
-            rep = C.ChunkedPackedBins(
-                packed=data, bits=bits, chunk_rows=chunk_rows,
-                n_rows=n_rows_per_shard,
-            )
-        elif cfg.compress_matrix:
-            # Packed-native: each shard's words ARE its training matrix —
-            # no per-round unpack, no dense (n, f) bins (DESIGN.md §2).
-            rep = C.PackedBins(packed=data, bits=bits, n_rows=n_rows_per_shard)
-        else:
-            rep = data
-        n_features = (
-            rep.n_features if cfg.compress_matrix or chunked
-            else rep.shape[1]
-        )
-        gh_all = obj.grad(margins, y, **cfg_kw)
-        gh_raw = gh_all
-        if cfg.numeric_check == "clamp":
-            gh_all = RES.clamp_gradients(gh_all)
-        trees = []
-        for c in range(k):
-            gh_c = gh_all[:, c, :]
-            ctx = None
-            if stoch is not None:
-                n_local = margins.shape[0]
-                ctx, gh_c = SMP.make_tree_context(
-                    stoch, jax.random.fold_in(rkey, c), gh_c, n_features,
-                    compact=False,
-                    n_total=n_local * n_shards,
-                    row_offset=_shard_offset(n_local),
-                )
-            tr = T.grow_tree(
-                rep,
-                gh_c,
-                cuts,
-                cfg.max_depth,
-                cfg.max_bins,
-                cfg.split_params,
-                growth=cfg.growth,
-                max_leaves=cfg.max_leaves or 2**cfg.max_depth,
-                axis_name=axis0,
-                extra_axes=extra,
-                ctx=ctx,
-            )
-            # Materialise tree arrays before the margin update (same
-            # barrier as booster._round_step_fn — see DESIGN.md §11).
-            trees.append(jax.lax.optimization_barrier(tr))
-        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
-        # One barriered add for all k columns, shared with the
-        # single-device scan so both compile the update identically.
-        new_margins = B._apply_stacked_trees(cfg, stacked, rep, margins)
-        if not sentinel:
-            return stacked, new_margins
-        # Gradients/margins are shard-local; a shard seeing non-finite
-        # values must poison the round globally (trees are replicated), so
-        # the bad count is psum-all-reduced before the policy applies.
-        ok_local = RES.finite_flags(gh_raw, stacked.leaf_value, new_margins)
-        bad = jax.lax.psum(
-            jnp.where(ok_local, 0, 1).astype(jnp.int32), tuple(data_axes)
-        )
-        ok = bad == 0
-        if cfg.numeric_check == "warn_skip":
-            # Same neutralisation as booster._round_step_fn: zero leaves,
-            # -inf gains, round-start margins carried forward.
-            stacked = stacked._replace(
-                leaf_value=jnp.where(ok, stacked.leaf_value,
-                                     jnp.zeros_like(stacked.leaf_value)),
-                gain=jnp.where(ok, stacked.gain,
-                               jnp.full_like(stacked.gain, -jnp.inf)),
-            )
-            new_margins = jnp.where(ok, new_margins, margins)
-        return stacked, new_margins, ok
-
-    axes = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
-    row_spec = P(axes)
-    if chunked:
-        # chunk stack is (C, F, W): rows live in whole chunks on axis 0.
-        data_spec = P(axes, None, None)
-    elif cfg.compress_matrix:
-        # packed matrix is (F, W): rows live in the words axis.
-        data_spec = P(None, axes)
-    else:
-        data_spec = P(axes, None)
-
-    in_specs = (data_spec, row_spec, row_spec, P())
-    if stoch is not None:
-        in_specs = in_specs + (P(),)  # per-round key, replicated
-    out_specs = (P(), row_spec)
-    if sentinel:
-        out_specs = out_specs + (P(),)  # psum'd ok flag, replicated
-    shard_fn = jaxcompat.shard_map(
-        round_body,
-        mesh=mesh,
-        in_specs=in_specs,
-        out_specs=out_specs,
-    )
-    fn = _ROUND_FN_CACHE[key] = jax.jit(shard_fn)
-    return fn
-
-
-def make_chunk_runner(
-    cfg,
-    obj: O.Objective,
-    dmat,
-    mesh: jax.sharding.Mesh,
-    data_axes: Sequence[str],
-    eval_pbs: tuple = (),
-    eval_ys: tuple = (),
-    eval_extras: tuple = (),
-    metrics: tuple = (),
-    track_metric: bool = False,
-):
-    """The multi-device strategy behind Booster.fit(dtrain, mesh=...).
-
-    Shards the DeviceDMatrix's rows over the data axes (re-packing the words
-    per shard so each shard decodes independently), then exposes the same
-    chunk interface as the single-device scan:
-
-        run(length, start_round, margins, eval_margins) ->
-            (margins, stacked_trees (length, k, arena...),
-             train_metrics tuple-per-metric of (length,), eval_margins,
-             eval_metrics tuple-per-set of tuple-per-metric of (length,),
-             sentinel flags ((length,) bool, or () when numeric_check="off"))
-
-    The per-round loop dispatches one shard_map'd program per round (one
-    psum per tree level, Algorithm 1); eval-set margins are maintained
-    incrementally on replicated eval data, and every requested metric is
-    evaluated per round with values staying on device until the Booster
-    reads them at chunk granularity — the same multi-metric stack as the
-    single-device scan.
-    """
-    from repro.core.dmatrix import ExternalDMatrix
-
-    n = dmat.n_rows
-    n_shards = 1
-    for a in data_axes:
-        n_shards *= mesh.shape[a]
-    if n % n_shards != 0:
-        raise ValueError(
-            f"n_rows={n} must be divisible by the {n_shards} data shards "
-            "(truncate or pad upstream)"
-        )
-    cuts = dmat.cuts
-    if isinstance(dmat, ExternalDMatrix):
-        # External-memory + multi-device: whole chunks are the sharding
-        # unit (each chunk already decodes independently, so no per-shard
-        # re-packing is needed). Shard boundaries must align with chunk
-        # boundaries so each shard's rows are exactly its chunks' rows.
-        if n % dmat.chunk_rows != 0:
-            raise ValueError(
-                f"external-memory training with mesh= requires n_rows={n} "
-                f"to be a multiple of chunk_rows={dmat.chunk_rows} (the "
-                "last chunk must be full so shards get whole chunks)"
-            )
-        if dmat.n_chunks % n_shards != 0:
-            raise ValueError(
-                f"n_chunks={dmat.n_chunks} must be divisible by the "
-                f"{n_shards} data shards; pick chunk_rows so chunks "
-                "distribute evenly"
-            )
-        bits, n_per = dmat.bits, n // n_shards
-        data = dmat.packed_bins().packed
-        chunk_rows = dmat.chunk_rows
-    elif cfg.compress_matrix:
-        # Re-pack per shard so each shard's words decode independently.
-        # Cached on the DeviceDMatrix: the dense-bins transient (the matrix
-        # DESIGN.md §2 bans from steady state) exists once per shard count,
-        # not once per fit.
-        bits = dmat.bits
-        n_per = n // n_shards
-        chunk_rows = None
-        data = dmat._shard_pack_cache.get(n_shards)
-        if data is None:
-            bins = dmat.matrix.unpack()
-            packed_shards = [
-                C.pack(bins[i * n_per : (i + 1) * n_per], bits)
-                for i in range(n_shards)
-            ]
-            data = jnp.concatenate(packed_shards, axis=1)  # (F, n_shards*W)
-            dmat._shard_pack_cache[n_shards] = data
-    else:
-        data = dmat.matrix.unpack()
-        bits, n_per, chunk_rows = None, None, None
-
-    axes = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
-    row_sharding = jax.NamedSharding(mesh, P(axes))
-    if chunk_rows is not None:
-        data_spec = P(axes, None, None)  # whole chunks per shard
-    elif cfg.compress_matrix:
-        data_spec = P(None, axes)
-    else:
-        data_spec = P(axes, None)
-    data_sharding = jax.NamedSharding(mesh, data_spec)
-    y = jax.device_put(dmat.label, row_sharding)
-    data = jax.device_put(data, data_sharding)
-    round_fn = make_distributed_round(
-        cfg, obj, mesh, data_axes, n_rows_per_shard=n_per, bits=bits,
-        chunk_rows=chunk_rows,
-    )
-
-    from repro.core import booster as B  # lazy: avoid import cycle
-
-    apply_eval = _APPLY_EVAL_CACHE.get(cfg)
-    if apply_eval is None:
-        apply_eval = _APPLY_EVAL_CACHE[cfg] = jax.jit(
-            lambda stacked, pb, m, _cfg=cfg:
-                B._apply_stacked_trees(_cfg, stacked, pb, m)
-        )
-
-    train_kw = O.config_kwargs(cfg)  # group_ids is single-device only
-    stoch = SMP.stochastic_params(cfg)
-    base_key = jax.random.PRNGKey(cfg.seed) if stoch is not None else None
-
-    sentinel = cfg.numeric_check != "off"
-
-    def run(length, start_round, margins, eval_margins):
-        margins = jax.device_put(margins, row_sharding)
-        trees, tr_rows, ev_rows, ok_rows = [], [], [], []
-        for r in range(length):
-            if stoch is None:
-                out = round_fn(data, margins, y, cuts)
-            else:
-                # Same fold path as the single-device scan body, from the
-                # ABSOLUTE round index — single- and multi-device fits draw
-                # identical samples/masks (DESIGN.md §12).
-                rkey = jax.random.fold_in(
-                    base_key, jnp.asarray(start_round + r, jnp.int32)
-                )
-                out = round_fn(data, margins, y, cuts, rkey)
-            if sentinel:
-                stacked, margins, ok = out
-                ok_rows.append(ok)
-            else:
-                stacked, margins = out
-            trees.append(stacked)
-            eval_margins = tuple(
-                apply_eval(stacked, pb, em)
-                for pb, em in zip(eval_pbs, eval_margins)
-            )
-            if track_metric:
-                tr_rows.append(tuple(
-                    m.fn(margins, y, **train_kw).astype(jnp.float32)
-                    for m in metrics
-                ))
-            ev_rows.append(tuple(
-                tuple(m.fn(em, ey, **ex).astype(jnp.float32) for m in metrics)
-                for em, ey, ex in zip(eval_margins, eval_ys, eval_extras)
-            ))
-        all_trees = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
-        tr_metrics = tuple(
-            jnp.stack([row[j] for row in tr_rows])
-            for j in range(len(metrics))
-        ) if track_metric else ()
-        ev_metrics = tuple(
-            tuple(jnp.stack([row[i][j] for row in ev_rows])
-                  for j in range(len(metrics)))
-            for i in range(len(eval_pbs))
-        )
-        flags = jnp.stack(ok_rows) if sentinel else ()
-        return margins, all_trees, tr_metrics, eval_margins, ev_metrics, flags
-
-    return run
-
-
-def train_distributed(
-    x,
-    y,
-    cfg,
-    mesh: jax.sharding.Mesh,
-    data_axes: Sequence[str] = ("data",),
-    verbose_every: int = 0,
-):
-    """Deprecated shim: quantises x and runs Booster.fit(dtrain, mesh=mesh).
-
-    Returns the same Booster object as single-device training (the old
-    (ensemble, margins, history) tuple is reachable as attributes)."""
-    from repro.core.booster import Booster
-    from repro.core.dmatrix import DeviceDMatrix
-
-    dtrain = DeviceDMatrix(x, label=y, max_bins=cfg.max_bins)
-    return Booster(cfg).fit(dtrain, verbose_every=verbose_every, mesh=mesh,
-                            data_axes=data_axes)
+__all__ = [
+    "RoundInputs",
+    "make_chunk_runner",
+    "make_distributed_round",
+    "train_distributed",
+]

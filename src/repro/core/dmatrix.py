@@ -166,6 +166,9 @@ class DeviceDMatrix:
       max_bins: total bins per feature incl. the reserved missing bin.
       ref: another DeviceDMatrix whose cut points (and max_bins) to reuse —
         required for evaluation sets so bin-space traversal is exact.
+      cuts: optional precomputed (n_features, n_value_bins - 1) cut array —
+        e.g. from `repro.dist.sharded_sketch_cuts` (device-sharded sketch
+        build, paper §quantiles). Mutually exclusive with `ref`.
     """
 
     def __init__(
@@ -176,6 +179,7 @@ class DeviceDMatrix:
         group_ids=None,
         max_bins: int = Q.DEFAULT_MAX_BINS,
         ref: "DeviceDMatrix | None" = None,
+        cuts=None,
     ):
         x = jnp.asarray(x, jnp.float32)
         if x.ndim != 2:
@@ -197,11 +201,24 @@ class DeviceDMatrix:
                 "quantisation"
             )
         if ref is not None:
+            if cuts is not None:
+                raise ValueError(
+                    "pass either ref= or cuts=, not both (ref already "
+                    "carries its cut points)"
+                )
             cuts = ref.cuts
             max_bins = ref.max_bins
             if x.shape[1] != ref.n_features:
                 raise ValueError(
                     f"ref has {ref.n_features} features, x has {x.shape[1]}"
+                )
+        elif cuts is not None:
+            cuts = jnp.asarray(cuts, jnp.float32)
+            nvb = Q.n_value_bins(max_bins)
+            if cuts.shape != (x.shape[1], nvb - 1):
+                raise ValueError(
+                    f"cuts must have shape ({x.shape[1]}, {nvb - 1}) for "
+                    f"max_bins={max_bins}, got {cuts.shape}"
                 )
         else:
             cuts = Q.compute_cuts(x, max_bins)
@@ -330,6 +347,13 @@ class ExternalDMatrix:
         artificially chunked data and parity testing), or a precomputed
         (n_features, n_value_bins - 1) cut array.
       sketch_capacity: per-feature summary size for cuts="sketch".
+      sketch_shards: with cuts="sketch", build one sketch per shard of the
+        chunk list and combine them by repro.dist's log-depth tree merge
+        (the paper's distributed sketch build) instead of one sequential
+        fold — fewer prune rounds on any leaf-to-root path, and the
+        host-side analogue of the device-sharded build
+        (`repro.dist.sharded_sketch_cuts`). 1 (default) keeps the
+        sequential stream.
       verify_chunks: verify each chunk's crc32 (recorded at build) on every
         device page-in, so bit-flips between build and load surface as a
         ChunkIntegrityError instead of silently training on garbage
@@ -348,6 +372,7 @@ class ExternalDMatrix:
         ref=None,
         cuts="sketch",
         sketch_capacity: int = 1024,
+        sketch_shards: int = 1,
         verify_chunks: bool = True,
         load_retries: int = 2,
         load_backoff: float = 0.05,
@@ -372,12 +397,32 @@ class ExternalDMatrix:
                     jnp.asarray(np.concatenate(xs)), max_bins
                 )
             elif cuts == "sketch":
-                sketch = Q.StreamingQuantileSketch(
-                    n_features, max_bins, capacity=sketch_capacity
-                )
-                for chunk in xs:
-                    sketch.push(chunk)
-                cut_arr = sketch.get_cuts()
+                if sketch_shards < 1:
+                    raise ValueError(
+                        f"sketch_shards must be >= 1, got {sketch_shards}"
+                    )
+                shards = min(sketch_shards, len(xs))
+                if shards > 1:
+                    # Distributed-style build: one sketch per chunk shard,
+                    # combined by log-depth tree merge (repro.dist.sketch).
+                    from repro.dist.sketch import tree_merge
+
+                    sketches = []
+                    for s in range(shards):
+                        sk = Q.StreamingQuantileSketch(
+                            n_features, max_bins, capacity=sketch_capacity
+                        )
+                        for chunk in xs[s::shards]:
+                            sk.push(chunk)
+                        sketches.append(sk)
+                    cut_arr = tree_merge(sketches).get_cuts()
+                else:
+                    sketch = Q.StreamingQuantileSketch(
+                        n_features, max_bins, capacity=sketch_capacity
+                    )
+                    for chunk in xs:
+                        sketch.push(chunk)
+                    cut_arr = sketch.get_cuts()
             else:
                 raise ValueError(
                     f"cuts must be 'sketch', 'exact' or an array, got {cuts!r}"

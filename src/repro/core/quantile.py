@@ -139,6 +139,26 @@ def _exact_summary(values: np.ndarray, weights: np.ndarray):
     return vu, rmax - wu, rmax, wu
 
 
+def _exact_summary_presorted(values: np.ndarray):
+    """Exact unit-weight summary of an already-sorted finite value array.
+
+    The device-sharded sketch build (repro.dist.sketch) sorts columns on
+    device under shard_map; this skips the host-side re-sort that
+    `_exact_summary` would do.
+    """
+    v = np.asarray(values, np.float32)
+    if v.size == 0:
+        return _EMPTY_SUMMARY
+    newgrp = np.empty(v.size, bool)
+    newgrp[0] = True
+    np.not_equal(v[1:], v[:-1], out=newgrp[1:])
+    starts = np.flatnonzero(newgrp)
+    vu = v[starts]
+    counts = np.diff(np.append(starts, v.size)).astype(np.float64)
+    rmax = np.cumsum(counts)
+    return vu, rmax - counts, rmax, counts
+
+
 def _summary_contrib(summary, vu: np.ndarray):
     """This summary's (rmin, rmax, w) contribution at each union value."""
     vals, rmin, rmax, w = summary
@@ -248,6 +268,40 @@ class StreamingQuantileSketch:
             if not finite.any():
                 continue
             batch_summary = _exact_summary(col[finite], w[finite])
+            self._summaries[j] = _prune_summary(
+                _combine_summaries(self._summaries[j], batch_summary),
+                self.capacity,
+            )
+        self.n_pushed += x.shape[0]
+        return self
+
+    def push_sorted(self, cols_sorted, n_valid) -> "StreamingQuantileSketch":
+        """Fold pre-sorted unit-weight columns into the sketch.
+
+        Args:
+          cols_sorted: (rows, n_features) with every column ascending and
+            non-finite entries (missing markers / +inf padding) sorted to
+            the tail — exactly what a device-side `jnp.sort` of a
+            NaN->+inf-filled shard produces.
+          n_valid: (n_features,) count of finite entries per column.
+
+        Equivalent to `push` on the unsorted data (same summaries), minus
+        the host-side argsort.
+        """
+        x = np.asarray(cols_sorted, np.float32)
+        if x.ndim != 2 or x.shape[1] != self.n_features:
+            raise ValueError(
+                f"cols_sorted must be (rows, {self.n_features}), got {x.shape}"
+            )
+        nv = np.asarray(n_valid, np.int64).reshape(-1)
+        if nv.shape != (self.n_features,):
+            raise ValueError(
+                f"n_valid must be ({self.n_features},), got {nv.shape}"
+            )
+        for j in range(self.n_features):
+            if nv[j] == 0:
+                continue
+            batch_summary = _exact_summary_presorted(x[: nv[j], j])
             self._summaries[j] = _prune_summary(
                 _combine_summaries(self._summaries[j], batch_summary),
                 self.capacity,

@@ -73,6 +73,7 @@ def grow_tree(
     hist_block_rows: int = 65536,  # packed fallback's dense-tile bound
     hist_subtraction: bool = True,  # smaller-child build + sibling = parent - child
     ctx: SMP.TreeContext | None = None,  # stochastic/constrained growth
+    collective=None,  # repro.dist.Collective reduction strategy
 ) -> Tree:
     """When `bins` is a compress.PackedBins, the tree grows *packed-native*
     (DESIGN.md §2): histograms are built straight from the uint32 words
@@ -97,6 +98,12 @@ def grow_tree(
     (per tree/level/node) and monotone bounds are applied in
     split.evaluate_splits; bounds propagate down the arena. `ctx=None`
     compiles to the exact pre-stochastic program."""
+    if collective is not None:
+        # A dist.Collective owns the reduction topology (and optional
+        # payload compression); its mesh axes drive the same sharded-growth
+        # gating as plain axis_name (no subtraction trick, masked-mode
+        # subsampling only).
+        axis_name, extra_axes = collective.axes[0], collective.axes[1:]
     packed_mode = isinstance(bins, C.PackedBins)
     chunked_mode = isinstance(bins, C.ChunkedPackedBins)
     if packed_mode or chunked_mode:
@@ -184,7 +191,9 @@ def grow_tree(
 
     positions = jnp.zeros(n, jnp.int32)  # all rows start at the root
     root_sum = jnp.sum(gh, axis=0)
-    if axis_name is not None:
+    if collective is not None:
+        root_sum = collective.allreduce(root_sum)
+    elif axis_name is not None:
         root_sum = jax.lax.psum(root_sum, (axis_name, *extra_axes))
     node_sum = node_sum.at[0].set(root_sum)
     active = jnp.zeros(na, bool).at[0].set(True)
@@ -221,8 +230,11 @@ def grow_tree(
             )
         else:
             hist = build(bins, gh, local, n_nodes, max_bins)
-            # --- AllReduceHistograms (paper: NCCL; here: psum) -----------
-            if axis_name is not None:
+            # --- AllReduceHistograms (paper: NCCL; here: psum, or a
+            # dist.Collective strategy with optional compressed payload) ---
+            if collective is not None:
+                hist = collective.allreduce_hist(hist)
+            elif axis_name is not None:
                 hist = jax.lax.psum(hist, (axis_name, *extra_axes))
         hist_prev = hist
 

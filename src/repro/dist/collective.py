@@ -1,0 +1,503 @@
+"""Pluggable collectives for distributed histogram aggregation (DESIGN.md §15).
+
+The per-level histogram AllReduce is the distributed hot path of Algorithm 1
+(the paper's NCCL AllReduceHistograms call; Zhang et al. 1706.08359 measure
+inter-device histogram traffic as the scaling bottleneck). This module makes
+that collective a strategy object so `Booster.fit(mesh=, collective=)` can
+pick the reduction topology, and makes the payload compressible (f16 or
+fixed-point int16 bin sums) with an on-device error check that falls back to
+the exact f32 reduction when the compression error exceeds tolerance.
+
+Three strategies live behind one registry:
+
+  * ``psum`` — `jax.lax.psum`, XLA's fused all-reduce. The default; with
+    compression off it compiles to the exact pre-subsystem program.
+  * ``ring`` — an explicit segmented reduce-scatter + all-gather built from
+    `jax.lax.ppermute` (NCCL's ring algorithm, spelled out). Each of the p
+    devices sends 2*(p-1)/p of the payload, and — unlike psum — the wire
+    dtype is under our control, so compressed hops genuinely halve bytes.
+  * ``hier`` — two-level: intra-host psum over contiguous device groups
+    (cheap links), then a ring over one lane of group leaders (expensive
+    links), then an intra-host broadcast. Compression applies to the
+    inter-host hops only, mirroring how real multi-host topologies are
+    provisioned.
+
+Compression modes (``compression=`` on any collective):
+
+  * ``None``  — exact f32 payloads (bit-identical to the pre-subsystem psum
+    path when the collective is ``psum``).
+  * ``"f16"`` — bin sums cast to float16 for transport. Per-shard cast
+    error is measured on device; accumulation error is not modelled (ring/
+    hier accumulate in f32, plain psum accumulates in f16).
+  * ``"q16"`` — fixed-point int16: a shared scale is derived from the
+    psum of per-shard max magnitudes (so no partial sum can overflow
+    int16), each shard quantises to integers, and the integer reduction is
+    exact and order-independent — every collective produces bit-identical
+    quantised results.
+
+Error model: elementwise, |compressed_sum - exact_sum| <= sum over shards of
+that shard's own max compression error, so ``psum(max |decode(encode(x)) -
+x|)`` is an on-device upper bound on the true error, available *without*
+computing the exact reduction. When the bound exceeds
+``tolerance * psum(max|x|)`` the level falls back to the exact f32
+reduction via `lax.cond` (the predicate is a psum result, hence replicated,
+so every device takes the same branch). Fallback events are tallied at
+trace time and surfaced per fit in `Booster.comm_stats`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+_COMPRESSIONS = (None, "f16", "q16")
+
+
+def _check_compression(compression):
+    if compression not in _COMPRESSIONS:
+        raise ValueError(
+            f"compression must be one of {_COMPRESSIONS}, got {compression!r}"
+        )
+
+
+class Collective:
+    """Reduction strategy for shard-partial arrays inside shard_map.
+
+    Subclasses implement `_reduce_exact` (f32/any-dtype exact allreduce) and
+    `_reduce_wire` (allreduce whose wire dtype is `wire`, accumulating in
+    `acc`), plus the analytic `bytes_allreduce` wire model. The compressed
+    encode/check/fallback logic is shared here in `allreduce_hist`.
+    """
+
+    name = "?"
+
+    def __init__(
+        self,
+        mesh: jax.sharding.Mesh,
+        data_axes: Sequence[str] = ("data",),
+        *,
+        compression: str | None = None,
+        tolerance: float = 0.05,
+    ):
+        _check_compression(compression)
+        if tolerance < 0:
+            raise ValueError(f"tolerance must be >= 0, got {tolerance}")
+        self.mesh = mesh
+        self.axes = tuple(data_axes)
+        self.sizes = tuple(mesh.shape[a] for a in self.axes)
+        self.n_devices = math.prod(self.sizes)
+        self.compression = compression
+        self.tolerance = float(tolerance)
+        self._tally: list | None = None
+
+    # --- identity (compiled-fn cache key component) ------------------------
+    @property
+    def key(self):
+        return (type(self).__name__, self.axes, self.compression,
+                self.tolerance)
+
+    # --- trace-time fallback tally -----------------------------------------
+    def begin_round(self) -> None:
+        """Reset the fallback tally; call at the top of a traced round."""
+        self._tally = []
+
+    def fallback_count(self) -> jax.Array:
+        """Traced count of compressed allreduces that fell back to f32 this
+        round (replicated scalar; 0 when compression is off)."""
+        if not self._tally:
+            return jnp.zeros((), jnp.int32)
+        return sum(self._tally)
+
+    # --- reduction entry points (called inside shard_map) ------------------
+    def allreduce(self, x: jax.Array) -> jax.Array:
+        """Exact allreduce (root sums, fallbacks, non-hot-path payloads)."""
+        return self._reduce_exact(x)
+
+    def allreduce_hist(self, hist: jax.Array) -> jax.Array:
+        """The per-level histogram allreduce — compressed when configured,
+        with the on-device error check and f32 fallback."""
+        if self.compression is None:
+            return self._reduce_exact(hist)
+        axes = self.axes
+        m_local = jnp.max(jnp.abs(hist))
+        if self.compression == "f16":
+            comp = hist.astype(jnp.float16)
+            err_local = jnp.max(jnp.abs(comp.astype(jnp.float32) - hist))
+            # One tiny collective: [max-magnitude, per-shard-error] together.
+            m_sum, err_bound = jax.lax.psum(
+                jnp.stack([m_local, err_local]), axes
+            )
+
+            def compressed():
+                return self._reduce_wire(hist, jnp.float16, jnp.float32)
+        else:  # q16 fixed point
+            m_sum = jax.lax.psum(m_local, axes)
+            # |sum_s x_s| <= sum_s max|x_s| = m_sum elementwise, so scaling
+            # by m_sum/32766 keeps every partial sum inside int16.
+            scale = jnp.maximum(m_sum, jnp.float32(1e-30)) / jnp.float32(32766.0)
+            q = jnp.clip(
+                jnp.round(hist / scale), -32767.0, 32767.0
+            ).astype(jnp.int32)
+            err_local = jnp.max(jnp.abs(q.astype(jnp.float32) * scale - hist))
+            err_bound = jax.lax.psum(err_local, axes)
+
+            def compressed():
+                total = self._reduce_wire(q, jnp.int16, jnp.int32)
+                return total.astype(jnp.float32) * scale
+
+        ok = err_bound <= self.tolerance * m_sum + jnp.float32(1e-30)
+        out = jax.lax.cond(ok, compressed, lambda: self._reduce_exact(hist))
+        if self._tally is not None:
+            self._tally.append(jnp.where(ok, 0, 1).astype(jnp.int32))
+        return out
+
+    # --- strategy internals ------------------------------------------------
+    def _reduce_exact(self, x: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def _reduce_wire(self, x, wire, acc) -> jax.Array:
+        raise NotImplementedError
+
+    # --- analytic wire model (DESIGN.md §15) -------------------------------
+    def wire_bytes_elem(self) -> int:
+        """Bytes per element actually moved for a compressed hist allreduce
+        (4 when the strategy cannot shrink its wire dtype)."""
+        return 4
+
+    def bytes_allreduce(self, n_elems: int, elem_bytes: int = 4) -> int:
+        """Total wire bytes (summed over every device) for one allreduce of
+        n_elems, under the bandwidth-optimal 2*(p-1)/p-per-device model."""
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        comp = f", compression={self.compression}" if self.compression else ""
+        return f"{type(self).__name__}({self.n_devices} devices{comp})"
+
+
+class PsumCollective(Collective):
+    """`jax.lax.psum` — XLA's fused all-reduce (the pre-subsystem path).
+
+    f16 compression psums the f16 array directly (f16 on the wire *and* in
+    the accumulation). q16 must psum int32 (int16 partial sums are not
+    expressible through psum), so its wire bytes stay 4 — pick ``ring`` or
+    ``hier`` for genuinely narrower q16 transport.
+    """
+
+    name = "psum"
+
+    def _reduce_exact(self, x):
+        return jax.lax.psum(x, self.axes)
+
+    def _reduce_wire(self, x, wire, acc):
+        if wire == jnp.int16:  # psum cannot carry int16 partials
+            return jax.lax.psum(x.astype(jnp.int32), self.axes)
+        return jax.lax.psum(x.astype(wire), self.axes).astype(acc)
+
+    def wire_bytes_elem(self) -> int:
+        return 2 if self.compression == "f16" else 4
+
+    def bytes_allreduce(self, n_elems, elem_bytes=4):
+        p = self.n_devices
+        return 2 * (p - 1) * n_elems * elem_bytes
+
+
+def _ring_allreduce(x, axis_name, n, perm, ring_pos, wire, acc):
+    """Segmented ring reduce-scatter + all-gather via ppermute.
+
+    Payload is split into n segments; over n-1 hops each device accumulates
+    one segment's full sum (partials travel in `wire` dtype, adds happen in
+    `acc`), then n-1 more hops broadcast the finished segments. Total traffic
+    is 2*(n-1)/n of the payload per participating device — NCCL's ring.
+    """
+    if n == 1:
+        return x.astype(acc)
+    shape = x.shape
+    flat = x.reshape(-1).astype(acc)
+    pad = (-flat.size) % n
+    flat = jnp.pad(flat, (0, pad))
+    segs = flat.reshape(n, -1)
+
+    def rs_step(t, segs):
+        send = jnp.take(segs, (ring_pos - t) % n, axis=0).astype(wire)
+        recv = jax.lax.ppermute(send, axis_name, perm)
+        return segs.at[(ring_pos - t - 1) % n].add(recv.astype(acc))
+
+    segs = jax.lax.fori_loop(0, n - 1, rs_step, segs)
+
+    def ag_step(t, segs):
+        send = jnp.take(segs, (ring_pos + 1 - t) % n, axis=0).astype(wire)
+        recv = jax.lax.ppermute(send, axis_name, perm)
+        return segs.at[(ring_pos - t) % n].set(recv.astype(acc))
+
+    segs = jax.lax.fori_loop(0, n - 1, ag_step, segs)
+    return segs.reshape(-1)[: x.size].reshape(shape)
+
+
+class RingCollective(Collective):
+    """Explicit segmented ring over a single data axis.
+
+    Sends exactly 2*(p-1)/p of the payload per device per allreduce and
+    carries compressed dtypes on the wire: f16 hops accumulate locally in
+    f32; q16 hops are int16 with int32 local accumulation (exact — the
+    shared scale bounds every partial inside int16).
+    """
+
+    name = "ring"
+
+    def __init__(self, mesh, data_axes=("data",), **kw):
+        super().__init__(mesh, data_axes, **kw)
+        if len(self.axes) != 1:
+            raise ValueError(
+                f"ring collective runs over exactly one mesh axis, got "
+                f"{self.axes}; use 'hier' for multi-axis meshes"
+            )
+        self._perm = [(i, (i + 1) % self.n_devices)
+                      for i in range(self.n_devices)]
+
+    def _ring(self, x, wire, acc):
+        pos = jax.lax.axis_index(self.axes[0]).astype(jnp.int32)
+        return _ring_allreduce(x, self.axes[0], self.n_devices, self._perm,
+                               pos, wire, acc)
+
+    def _reduce_exact(self, x):
+        return self._ring(x, x.dtype, x.dtype)
+
+    def _reduce_wire(self, x, wire, acc):
+        return self._ring(x.astype(acc), wire, acc)
+
+    def wire_bytes_elem(self) -> int:
+        return 2 if self.compression in ("f16", "q16") else 4
+
+    def bytes_allreduce(self, n_elems, elem_bytes=4):
+        p = self.n_devices
+        seg = -(-n_elems // p)  # padded segment length
+        return 2 * (p - 1) * p * seg * elem_bytes
+
+
+class HierarchicalCollective(Collective):
+    """Two-level reduction: intra-host psum, inter-host ring, intra-host
+    broadcast.
+
+    On a two-axis mesh ``(inter, intra)`` the group structure is the mesh's;
+    on a single axis of size p the devices are factored into contiguous
+    groups of ``group_size`` (default: the largest divisor <= sqrt(p)).
+    Only lane 0 of each group participates in the inter-host ring (the
+    ppermute permutation names no other lanes, so they exchange nothing),
+    and a final grouped psum broadcasts lane 0's totals group-wide.
+    Compression applies to the inter-host hops only — the intra-host psum
+    stays f32/int32 — matching how multi-host bandwidth is actually tiered.
+    """
+
+    name = "hier"
+
+    def __init__(self, mesh, data_axes=("data",), *, group_size=None, **kw):
+        super().__init__(mesh, data_axes, **kw)
+        if len(self.axes) == 2:
+            self.n_hosts, self.group_size = self.sizes
+            if group_size is not None and group_size != self.group_size:
+                raise ValueError(
+                    f"group_size={group_size} conflicts with the inner mesh "
+                    f"axis {self.axes[1]} of size {self.sizes[1]}"
+                )
+        elif len(self.axes) == 1:
+            p = self.n_devices
+            if group_size is None:
+                group_size = max(
+                    (d for d in range(1, int(math.isqrt(p)) + 1)
+                     if p % d == 0),
+                    default=1,
+                )
+            if p % group_size != 0:
+                raise ValueError(
+                    f"group_size={group_size} must divide the "
+                    f"{p}-device data axis"
+                )
+            self.group_size, self.n_hosts = group_size, p // group_size
+        else:
+            raise ValueError(
+                f"hier collective supports 1- or 2-axis meshes, got {self.axes}"
+            )
+        g, h = self.group_size, self.n_hosts
+        self._intra_groups = [list(range(i * g, (i + 1) * g))
+                              for i in range(h)]
+        # Inter-host ring over lane 0 of each group only.
+        self._inter_perm = [(i * g, ((i + 1) % h) * g) for i in range(h)]
+
+    @property
+    def key(self):
+        return super().key + (self.group_size,)
+
+    def _two_level(self, x, wire, acc):
+        axis = self.axes[0]
+        g, h = self.group_size, self.n_hosts
+        if len(self.axes) == 2:
+            y = jax.lax.psum(x.astype(acc), self.axes[1])
+            pos = jax.lax.axis_index(self.axes[0]).astype(jnp.int32)
+            perm = [(i, (i + 1) % h) for i in range(h)]
+            return _ring_allreduce(y, self.axes[0], h, perm, pos, wire, acc)
+        # Single axis, factored groups: intra reduce -> lane-0 ring ->
+        # intra broadcast. Lanes != 0 run the same ppermute program but the
+        # permutation never addresses them, so they send/receive nothing
+        # meaningful and are masked out of the broadcast.
+        idx = jax.lax.axis_index(axis).astype(jnp.int32)
+        lane = idx % g
+        host = idx // g
+        y = jax.lax.psum(x.astype(acc), axis,
+                         axis_index_groups=self._intra_groups)
+        t = _ring_allreduce(y, axis, h, self._inter_perm, host, wire, acc)
+        masked = jnp.where(lane == 0, t, jnp.zeros_like(t))
+        return jax.lax.psum(masked, axis,
+                            axis_index_groups=self._intra_groups)
+
+    def _reduce_exact(self, x):
+        return self._two_level(x, x.dtype, x.dtype).astype(x.dtype)
+
+    def _reduce_wire(self, x, wire, acc):
+        return self._two_level(x.astype(acc), wire, acc)
+
+    def wire_bytes_elem(self) -> int:
+        # Blended per-element cost: intra hops stay 4B, inter hops shrink.
+        return 2 if self.compression in ("f16", "q16") else 4
+
+    def bytes_allreduce(self, n_elems, elem_bytes=4):
+        g, h = self.group_size, self.n_hosts
+        seg = -(-n_elems // h)
+        intra = 2 * h * 2 * (g - 1) * n_elems * 4  # reduce + broadcast, f32
+        inter = 2 * (h - 1) * h * seg * elem_bytes  # lane-0 ring
+        return intra + inter
+
+
+_REGISTRY: dict[str, type[Collective]] = {
+    "psum": PsumCollective,
+    "ring": RingCollective,
+    "hier": HierarchicalCollective,
+    "hierarchical": HierarchicalCollective,
+}
+
+
+def register_collective(name: str, cls: type[Collective]) -> type[Collective]:
+    """Register a Collective strategy under a `fit(collective=...)` name."""
+    if not issubclass(cls, Collective):
+        raise TypeError(f"{cls} must subclass Collective")
+    _REGISTRY[name] = cls
+    return cls
+
+
+def collective_names() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_collective(
+    spec,
+    mesh: jax.sharding.Mesh,
+    data_axes: Sequence[str] = ("data",),
+    *,
+    compression: str | None = None,
+    tolerance: float = 0.05,
+    **kw,
+) -> Collective:
+    """Resolve `fit(collective=...)`: a registry name, a Collective subclass,
+    or an already-constructed Collective (returned as-is)."""
+    if isinstance(spec, Collective):
+        return spec
+    if isinstance(spec, type) and issubclass(spec, Collective):
+        return spec(mesh, data_axes, compression=compression,
+                    tolerance=tolerance, **kw)
+    if isinstance(spec, str):
+        cls = _REGISTRY.get(spec)
+        if cls is None:
+            raise ValueError(
+                f"unknown collective {spec!r}; registered: "
+                f"{', '.join(collective_names())}"
+            )
+        return cls(mesh, data_axes, compression=compression,
+                   tolerance=tolerance, **kw)
+    raise TypeError(
+        f"collective must be a name, Collective subclass or instance, "
+        f"got {type(spec)}"
+    )
+
+
+# --- per-round communication accounting (DESIGN.md §15) ---------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CommStats:
+    """Analytic per-round communication profile of a distributed fit.
+
+    Bytes are wire totals summed over all devices under the strategy's
+    documented model; `fallback_events` is measured (traced tally) and
+    filled in after the fit.
+    """
+
+    collective: str
+    compression: str | None
+    devices: int
+    bytes_per_round: int
+    bytes_per_round_f32: int
+    collective_calls_per_round: int
+    hist_bytes_per_level: tuple[int, ...]
+    fallback_events: int = 0
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["hist_bytes_per_level"] = list(self.hist_bytes_per_level)
+        return d
+
+
+def round_comm_stats(
+    collective: Collective,
+    *,
+    max_depth: int,
+    n_features: int,
+    max_bins: int,
+    n_trees_per_round: int = 1,
+    sentinel: bool = False,
+) -> CommStats:
+    """Bytes and collective calls for ONE boosting round under Algorithm 1:
+    per tree, one tiny root-sum allreduce plus one histogram allreduce per
+    level (sharded growth always builds full levels — the histogram-
+    subtraction shortcut is a single-shard optimisation), plus the
+    compression side-channel (scale/error scalars) and the optional numeric
+    sentinel's count psum."""
+    comp = collective.compression
+    wire = collective.wire_bytes_elem()
+    per_level, per_level_f32 = [], []
+    calls = 0
+    for level in range(max_depth):
+        n_elems = (2 ** level) * n_features * max_bins * 2
+        per_level.append(collective.bytes_allreduce(n_elems, wire))
+        per_level_f32.append(collective.bytes_allreduce(n_elems, 4))
+        calls += 1
+        if comp == "f16":
+            calls += 1  # stacked [max, err] scalar psum
+        elif comp == "q16":
+            calls += 2  # max psum, then err psum (scale-dependent)
+    overhead = 0
+    if comp is not None:
+        # Scale/error side-channel scalars travel via plain psum (not the
+        # strategy): bandwidth-optimal model 2*(p-1)*N*B.
+        scalars = 2 * max_depth
+        overhead = 2 * (collective.n_devices - 1) * scalars * 4
+    root = collective.bytes_allreduce(2, 4)
+    k = n_trees_per_round
+    bytes_round = k * (sum(per_level) + overhead + root)
+    bytes_round_f32 = k * (sum(per_level_f32) + root)
+    calls = k * (calls + 1)  # +1 root sum per tree
+    if sentinel:
+        bytes_round += collective.bytes_allreduce(1, 4)
+        bytes_round_f32 += collective.bytes_allreduce(1, 4)
+        calls += 1
+    return CommStats(
+        collective=collective.name,
+        compression=comp,
+        devices=collective.n_devices,
+        bytes_per_round=int(bytes_round),
+        bytes_per_round_f32=int(bytes_round_f32),
+        collective_calls_per_round=int(calls),
+        hist_bytes_per_level=tuple(int(b) for b in per_level),
+    )

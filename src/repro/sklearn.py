@@ -119,6 +119,9 @@ class _BoosterEstimator(BaseEstimator):
         checkpoint_every: int | None = None,
         checkpoint_path: str | None = None,
         serve: bool = False,
+        mesh=None,
+        collective: str = "psum",
+        compression: str | None = None,
     ):
         self.n_estimators = n_estimators
         self.learning_rate = learning_rate
@@ -158,6 +161,14 @@ class _BoosterEstimator(BaseEstimator):
         # shape-bucketed compiled caches keep mixed batch sizes from
         # recompiling (DESIGN.md §14). Predictions are identical either way.
         self.serve = serve
+        # Scale-out knobs (DESIGN.md §15): mesh shards rows across devices;
+        # collective picks the histogram allreduce strategy ("psum" | "ring"
+        # | "hier"); compression (None | "f16" | "q16") shrinks the wire
+        # payload with an f32 fallback. Per-fit wire accounting is exposed
+        # as `est.comm_stats_` after fitting with a mesh.
+        self.mesh = mesh
+        self.collective = collective
+        self.compression = compression
 
     # --- fit plumbing ------------------------------------------------------
     def _fit_objective(self, y: np.ndarray) -> tuple[str, int, np.ndarray]:
@@ -219,6 +230,9 @@ class _BoosterEstimator(BaseEstimator):
             on_oom=self.on_oom,
             checkpoint_every=self.checkpoint_every,
             checkpoint_path=self.checkpoint_path,
+            mesh=self.mesh,
+            collective=self.collective,
+            compression=self.compression,
         )
         self.n_features_in_ = X.shape[1]
         self.evals_result_ = list(self.booster_.history)
@@ -280,6 +294,14 @@ class _BoosterEstimator(BaseEstimator):
     def get_booster(self) -> Booster:
         self._check_fitted()
         return self.booster_
+
+    @property
+    def comm_stats_(self) -> dict | None:
+        """Communication accounting of the latest fit (DESIGN.md §15):
+        wire bytes/round, collective calls/round, compression fallback
+        events. None for single-device fits (mesh=None)."""
+        self._check_fitted()
+        return self.booster_.comm_stats
 
     @property
     def feature_importances_(self) -> np.ndarray:
