@@ -13,6 +13,24 @@ Usage:
 
 The baseline file maps dotted JSON paths to reference seconds:
     {"metrics": {"round_loop.packed_scan_per_round_s": 0.123, ...}}
+
+It may also carry hard INVARIANTS — within-run relations that must hold
+regardless of runner speed (both sides are measured on the same machine
+in the same process, so no variance allowance is needed):
+
+    {"invariants": [
+        {"name": "packed histogram <= dense",
+         "left": "kernels.packed_total_s",
+         "right": "kernels.dense_total_s", "max_ratio": 1.0},
+        {"name": "per-depth packed/dense ratio bound",
+         "path": "kernels.packed_vs_dense_max_ratio", "max": 1.1}
+    ]}
+
+`left`/`right` form: fail unless bench[left] <= max_ratio * bench[right].
+`path`/`max` form: fail unless bench[path] <= max. These enforce the
+ISSUE 9 acceptance relations (packed histogram no slower than dense;
+dispatched cut construction >= 3x faster than the XLA reference) on
+every CI run, not just against a stale baseline number.
 """
 from __future__ import annotations
 
@@ -60,6 +78,48 @@ def main(argv=None) -> int:
                 f"REGRESSED {path}: {value:.4f}s is {ratio:.2f}x the "
                 f"baseline {ref:.4f}s (limit {args.max_ratio}x)"
             )
+    for inv in baseline.get("invariants", []):
+        name = inv.get("name", json.dumps(inv, sort_keys=True))
+        if "left" in inv:
+            lv = lookup(bench, inv["left"])
+            rv = lookup(bench, inv["right"])
+            if lv is None or rv is None:
+                failures.append(
+                    f"MISSING  invariant '{name}': "
+                    f"{inv['left']}={lv} {inv['right']}={rv}"
+                )
+                continue
+            checked += 1
+            limit = inv.get("max_ratio", 1.0)
+            ok = lv <= limit * rv
+            print(
+                f"{'OK' if ok else 'VIOLATED':9s} invariant '{name}': "
+                f"{inv['left']}={lv:.4f} vs {limit} * {inv['right']}="
+                f"{limit * rv:.4f}"
+            )
+            if not ok:
+                failures.append(
+                    f"VIOLATED invariant '{name}': {lv:.4f} > "
+                    f"{limit} * {rv:.4f}"
+                )
+        else:
+            v = lookup(bench, inv["path"])
+            if v is None:
+                failures.append(
+                    f"MISSING  invariant '{name}': {inv['path']} absent"
+                )
+                continue
+            checked += 1
+            ok = v <= inv["max"]
+            print(
+                f"{'OK' if ok else 'VIOLATED':9s} invariant '{name}': "
+                f"{inv['path']}={v:.4f} (max {inv['max']})"
+            )
+            if not ok:
+                failures.append(
+                    f"VIOLATED invariant '{name}': {inv['path']}={v:.4f} "
+                    f"exceeds {inv['max']}"
+                )
     if not checked and not failures:
         failures.append("baseline lists no metrics")
     for line in failures:

@@ -1,0 +1,105 @@
+"""Markdown diff of two BENCH_pipeline.json artifacts (perf trend step).
+
+CI downloads the BENCH artifact of the last successful main-branch run,
+diffs it against the artifact this run just produced, and appends the
+rendered markdown to $GITHUB_STEP_SUMMARY — so every PR shows its perf
+delta without anyone re-running benchmarks locally.
+
+Numeric leaves are flattened to dotted paths (the same addressing scheme
+check_regression.py uses) and joined on path. Deltas beyond +/-10% get a
+direction marker so regressions stand out in the table; paths present on
+only one side are listed separately (new/removed metrics, e.g. a section
+added by the current PR).
+
+Usage:
+    python benchmarks/diff_bench.py OLD.json NEW.json [--threshold 0.10]
+
+Exit code is always 0 — the trend step is informational; hard gating is
+check_regression.py's job.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def flatten(tree, prefix=""):
+    """Dotted-path -> numeric leaf map (bools and strings are skipped)."""
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(flatten(v, f"{prefix}{k}."))
+    elif isinstance(tree, (int, float)) and not isinstance(tree, bool):
+        out[prefix[:-1]] = float(tree)
+    return out
+
+
+def fmt(v: float) -> str:
+    return f"{v:.4g}"
+
+
+def render(old: dict, new: dict, threshold: float) -> str:
+    fo, fn = flatten(old), flatten(new)
+    shared = sorted(set(fo) & set(fn))
+    added = sorted(set(fn) - set(fo))
+    removed = sorted(set(fo) - set(fn))
+
+    lines = ["## Benchmark trend", ""]
+    if shared:
+        lines += [
+            "| metric | previous | current | delta |",
+            "|---|---:|---:|---:|",
+        ]
+        for path in shared:
+            o, n = fo[path], fn[path]
+            if o == 0.0:
+                delta = "n/a" if n == 0.0 else "+inf"
+                mark = ""
+            else:
+                rel = n / o - 1.0
+                delta = f"{rel:+.1%}"
+                mark = (
+                    " :small_red_triangle:" if rel > threshold
+                    else " :white_check_mark:" if rel < -threshold
+                    else ""
+                )
+            lines.append(
+                f"| `{path}` | {fmt(o)} | {fmt(n)} | {delta}{mark} |")
+    else:
+        lines.append("_No shared numeric metrics between the two files._")
+    if added:
+        lines += ["", f"**New metrics ({len(added)}):** "
+                  + ", ".join(f"`{p}`" for p in added[:40])
+                  + (" …" if len(added) > 40 else "")]
+    if removed:
+        lines += ["", f"**Removed metrics ({len(removed)}):** "
+                  + ", ".join(f"`{p}`" for p in removed[:40])
+                  + (" …" if len(removed) > 40 else "")]
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("old", help="previous BENCH json (e.g. main artifact)")
+    ap.add_argument("new", help="current BENCH json")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="relative delta beyond which a row is flagged")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.old) as f:
+            old = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"## Benchmark trend\n\n_No previous benchmark artifact "
+              f"available ({e.__class__.__name__}); nothing to diff._\n")
+        return 0
+    with open(args.new) as f:
+        new = json.load(f)
+    print(render(old, new, args.threshold))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -42,6 +42,12 @@ tracked across PRs (EXPERIMENTS.md §Perf):
    through the shape-bucketed PredictEngine under mixed batch sizes,
    with a zero-recompiles-after-warmup counter.
 
+8. Kernels — packed vs dense histogram build across a tree-depth sweep
+   (CI-enforced invariant: packed <= dense at every depth, best-of-N),
+   a 1/2/4-deep scratch-buffer sweep of the privatised DMA-pipelined
+   Pallas kernel (interpret mode on CPU), and dispatched cut
+   construction vs the pure-XLA reference (ISSUE 9).
+
 `--sections` runs a subset (e.g. only external_memory) and MERGES the
 result into an existing --out file, so the artifact of record can be
 refreshed incrementally.
@@ -139,6 +145,101 @@ def phase_split(xj, yj, max_bins, max_depth, objective="binary:logistic"):
         "predict_packed_ms": t_pred * 1e3,
         "full_tree_packed_ms": t_tree * 1e3,
     }
+
+
+def _best(fn, *args, reps=3):
+    """Best-of-N single-run timing (after one warmup run).
+
+    Used for the kernels section's packed-vs-dense invariant: min-of-N is
+    far less noise-sensitive than mean-of-N for a CI-enforced A<=B
+    assertion on shared runners."""
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def kernels_split(xj, yj, max_bins, max_depth):
+    """ISSUE 9 kernel section: the packed histogram builder vs the dense
+    one across a tree-depth sweep (n_nodes in {1, 8, 32}), a buffer-depth
+    sweep (1/2/4-deep scratch) of the privatised DMA-pipelined Pallas
+    kernel in interpret mode, and the dispatched cut construction vs the
+    pure-XLA reference. The depth sweep feeds the CI invariant: packed
+    must be <= dense at EVERY benchmarked depth (best-of-N timings).
+    """
+    rows, features = xj.shape
+    del yj
+    cuts = Q.compute_cuts(xj, max_bins)
+    bins = Q.quantize(xj, cuts)
+    bits = C.bits_needed(max_bins - 1)
+    packed = C.pack(bins, bits)
+    rng = np.random.default_rng(0)
+    gh = jnp.asarray(rng.standard_normal((rows, 2), dtype=np.float32))
+    reps = 3 if rows > 200_000 else 5
+
+    out = {}
+    depth_sweep = {}
+    max_ratio = 0.0
+    dense_total = packed_total = 0.0
+    for n_nodes in (1, 8, 32):
+        pos = jnp.asarray(
+            rng.integers(0, n_nodes, rows).astype(np.int32))
+        t_dense = _best(
+            lambda b, g, p, n=n_nodes: H.build_histograms(
+                b, g, p, n, max_bins),
+            bins, gh, pos, reps=reps)
+        t_packed = _best(
+            lambda pk, g, p, n=n_nodes: H.build_histograms_packed(
+                pk, g, p, n, max_bins, bits, rows),
+            packed, gh, pos, reps=reps)
+        ratio = t_packed / t_dense
+        depth_sweep[str(n_nodes)] = {
+            "dense_s": t_dense, "packed_s": t_packed, "ratio": ratio,
+        }
+        max_ratio = max(max_ratio, ratio)
+        dense_total += t_dense
+        packed_total += t_packed
+    out["depth_sweep"] = depth_sweep
+    out["packed_vs_dense_max_ratio"] = max_ratio
+    out["dense_total_s"] = dense_total
+    out["packed_total_s"] = packed_total
+    out["packed_vs_dense_total_ratio"] = packed_total / dense_total
+
+    # Buffer-depth sweep of the privatised Pallas kernel. On CPU this runs
+    # in interpret mode, so absolute numbers only characterise the DMA
+    # schedule's overhead structure, not silicon throughput — a small
+    # capped slice keeps it cheap.
+    from repro.kernels import ops as KO
+
+    cap_rows = min(rows, 4096)
+    cap_f = min(features, 8)
+    bins_s = bins[:cap_rows, :cap_f]
+    packed_s = C.pack(bins_s, bits)
+    gh_s = gh[:cap_rows]
+    pos_s = jnp.asarray(rng.integers(0, 4, cap_rows).astype(np.int32))
+    sweep = {}
+    for depth in (1, 2, 4):
+        t = _best(
+            lambda pk, g, p, d=depth: KO.histogram_private_op(
+                pk, g, p, 4, max_bins, bits, n_private=4, buffer_depth=d),
+            packed_s, gh_s, pos_s, reps=3)
+        sweep[str(depth)] = t
+    out["buffer_depth_sweep_s"] = sweep
+    out["buffer_sweep_rows"] = cap_rows
+    out["buffer_sweep_mode"] = (
+        "interpret" if jax.default_backend() == "cpu" else "compiled")
+
+    # Cut construction: dispatched fast path (ops.compute_cuts_op) vs the
+    # single-jit XLA reference it replaced.
+    out["cuts_s"] = _time(
+        lambda a: Q.compute_cuts(a, max_bins), xj, iters=1)
+    out["cuts_reference_s"] = _time(
+        lambda a: Q.compute_cuts_reference(a, max_bins), xj, iters=1)
+    out["cuts_speedup"] = out["cuts_reference_s"] / out["cuts_s"]
+    return out
 
 
 def _make_seed_dense_round(cfg, obj, cuts, n_rows, bits):
@@ -289,11 +390,25 @@ def api_split(xj, yj, max_bins, max_depth, n_rounds):
     """Quantise-once vs fit, at the public-API level: DeviceDMatrix build
     time (cuts + quantise + compress, paid ONCE) reported separately from
     Booster.fit time, plus a second fit on the same matrix showing the
-    amortisation (no re-quantisation)."""
+    amortisation (no re-quantisation). The build is additionally split
+    into its three stages (cuts_s / quantize_s / compress_s) so the
+    dominant term is attributable — cut construction used to be the
+    whole-build blob's hidden 80% (ISSUE 9)."""
     t0 = time.perf_counter()
     dtrain = DeviceDMatrix(xj, label=yj, max_bins=max_bins)
     jax.block_until_ready(dtrain.matrix.packed)
     t_build = time.perf_counter() - t0
+
+    # Stage split: the same three calls the constructor just ran, timed
+    # individually (cold timings would double-count compilation; these are
+    # warm, so they attribute the steady-state build cost).
+    t_cuts = _time(lambda a: Q.compute_cuts(a, max_bins), xj, iters=1)
+    cuts = Q.compute_cuts(xj, max_bins)
+    t_quant = _time(lambda a: Q.quantize(a, cuts), xj, iters=1)
+    bins = Q.quantize(xj, cuts)
+    bits = C.bits_needed(max_bins - 1)
+    t_comp = _time(lambda b: C.pack(b, bits), bins, iters=1)
+    del cuts, bins
 
     def fit_once():
         bst = Booster(n_rounds=n_rounds, max_depth=max_depth,
@@ -307,6 +422,9 @@ def api_split(xj, yj, max_bins, max_depth, n_rounds):
     t_refit = fit_once()  # same DeviceDMatrix: quantisation fully amortised
     return {
         "dmatrix_build_s": t_build,
+        "cuts_s": t_cuts,
+        "quantize_s": t_quant,
+        "compress_s": t_comp,
         "fit_s": t_fit,
         "refit_same_dmatrix_s": t_refit,
         "dmatrix_build_frac_of_first_fit": t_build / (t_build + t_fit),
@@ -561,8 +679,8 @@ def serving_split(xj, yj, max_bins, max_depth, n_rounds):
     }
 
 
-SECTIONS = ("phases", "api", "round_loop", "objectives", "external_memory",
-            "stochastic", "resilience", "serving")
+SECTIONS = ("phases", "api", "kernels", "round_loop", "objectives",
+            "external_memory", "stochastic", "resilience", "serving")
 
 
 def run(rows, features, max_bins, max_depth, n_rounds,
@@ -581,6 +699,8 @@ def run(rows, features, max_bins, max_depth, n_rounds,
             result["phases"] = phase_split(xj, yj, max_bins, max_depth)
         if "api" in sections:
             result["api"] = api_split(xj, yj, max_bins, max_depth, n_rounds)
+        if "kernels" in sections:
+            result["kernels"] = kernels_split(xj, yj, max_bins, max_depth)
         if "round_loop" in sections:
             result["round_loop"] = round_loop(xj, yj, max_bins, max_depth,
                                               n_rounds)
@@ -664,6 +784,8 @@ def main(argv=None):
         print(f"{k},{v:.2f}")
     for k, v in r.get("api", {}).items():
         print(f"{k},{v}")
+    for k, v in r.get("kernels", {}).items():
+        print(f"kernels_{k},{v}")
     for k, v in r.get("round_loop", {}).items():
         print(f"{k},{v}")
     for k, v in r.get("objectives", {}).items():

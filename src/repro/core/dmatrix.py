@@ -146,6 +146,22 @@ def _collect_batches(batches):
     return xs, label, groups, n_features
 
 
+def _push_chunk_sorted(sk: "Q.StreamingQuantileSketch", chunk: np.ndarray) -> None:
+    """Fold one host chunk into a sketch via the sorted fast path.
+
+    One column-wise np.sort + push_sorted replaces the per-feature host
+    argsort loop that push() runs — same summaries, same cuts (push_sorted
+    is exactly push for unit weights), a large constant factor cheaper on
+    wide chunks. NaNs (the only non-finite values _collect_batches admits)
+    are filled with +inf so they sort to the tail, matching push_sorted's
+    input contract; n_valid counts the finite prefix per column.
+    """
+    filled = np.where(np.isnan(chunk), np.inf, chunk)
+    cols = np.sort(filled, axis=0)
+    n_valid = np.isfinite(cols).sum(axis=0)
+    sk.push_sorted(cols, n_valid)
+
+
 def cuts_equal(a: jax.Array | None, b: jax.Array | None) -> bool:
     """Identity-or-value equality of two cut-point arrays — the single
     definition used by both DeviceDMatrix and Booster validation."""
@@ -413,7 +429,7 @@ class ExternalDMatrix:
                             n_features, max_bins, capacity=sketch_capacity
                         )
                         for chunk in xs[s::shards]:
-                            sk.push(chunk)
+                            _push_chunk_sorted(sk, chunk)
                         sketches.append(sk)
                     cut_arr = tree_merge(sketches).get_cuts()
                 else:
@@ -421,7 +437,7 @@ class ExternalDMatrix:
                         n_features, max_bins, capacity=sketch_capacity
                     )
                     for chunk in xs:
-                        sketch.push(chunk)
+                        _push_chunk_sorted(sketch, chunk)
                     cut_arr = sketch.get_cuts()
             else:
                 raise ValueError(

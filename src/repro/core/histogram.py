@@ -8,6 +8,20 @@ against build_histograms() below.
 positions[i] is the *level-local* node index of row i (0..n_nodes-1), or
 `n_nodes` for rows that are inactive (already in a finalised leaf) — they
 fall into a dump slot that is sliced off.
+
+Two scatter layouts coexist (DESIGN.md §16):
+
+  * row-major (`_scatter_rows`): one flat scatter over a (rows, f) tile,
+    used by the dense builder and the compacted-row subset builders.
+  * feature-major (`_scatter_feature` under a lax.scan over features):
+    used by the packed and chunked full-matrix builders. Each feature's
+    (g, h) pairs land in a private ((n_nodes+1)*max_bins, 2) slab that
+    stays L1/L2-resident, which is what makes the packed build beat the
+    dense one on CPU (the XLA scatter is serial; a cache-resident
+    destination halves its per-update cost). Both layouts add each
+    (node, f, bin) slot's contributions in global row order, so they are
+    bit-identical to each other — tested, and load-bearing for the
+    external-memory identity guarantee (DESIGN.md §11).
 """
 from __future__ import annotations
 
@@ -39,6 +53,42 @@ def _scatter_rows(
     idx = (pos[:, None] * f + fidx) * max_bins + b
     gh_rep = jnp.broadcast_to(gh[:, None, :], (rows, f, 2)).reshape(-1, 2)
     return flat.at[idx.reshape(-1)].add(gh_rep, mode="drop")
+
+
+def _unpack_words(words: jax.Array, bits: int) -> jax.Array:
+    """One feature's packed words (w,) uint32 -> (w * spw,) int32 bins.
+
+    Byte-aligned widths (8/16 bits) use a bitcast instead of shift/mask:
+    pack() stores symbol j at shift j*bits, i.e. little-endian within the
+    word, which is exactly the sub-word lane order bitcast_convert_type
+    exposes. The bitcast halves unpack cost on CPU, which is what tips the
+    packed builder below dense at the root (n_nodes=1) where the scatter
+    itself has no locality advantage. Parity with the shift/mask path is
+    exact (integer bins) and pinned by tests/test_compress.py round trips.
+    """
+    spw = symbols_per_word(bits)
+    if bits in (8, 16):
+        dt = jnp.uint8 if bits == 8 else jnp.uint16
+        return jax.lax.bitcast_convert_type(words, dt).reshape(-1).astype(jnp.int32)
+    shifts = (jnp.arange(spw, dtype=jnp.uint32) * bits)[None, :]
+    mask = jnp.uint32((1 << bits) - 1)
+    return ((words[:, None] >> shifts) & mask).reshape(-1).astype(jnp.int32)
+
+
+def _scatter_feature(
+    slab: jax.Array,  # ((n_nodes + 1) * max_bins, 2) f32 — one feature's slab
+    b: jax.Array,  # (rows,) int32 bin ids of this feature
+    base: jax.Array,  # (rows,) int32 = pos * max_bins (dump slot included)
+    gh: jax.Array,  # (rows, 2) float32
+) -> jax.Array:
+    """Scatter one feature's (g, h) pairs into its private histogram slab.
+
+    The feature-major dual of `_scatter_rows`: index pos * B + bin into a
+    ((n_nodes+1)*B, 2) slab. Per (node, bin) slot the adds happen in row
+    order, the same per-slot order `_scatter_rows` produces, so builders
+    using either layout agree bitwise (tests/test_histogram_split.py).
+    """
+    return slab.at[base + b].add(gh, mode="drop")
 
 
 @functools.partial(jax.jit, static_argnames=("n_nodes", "max_bins"))
@@ -74,44 +124,46 @@ def build_histograms_packed(
     """build_histograms from the bit-packed matrix, without ever
     materialising the full dense (n_rows, n_features) bins array.
 
-    XLA-native fallback for the Pallas kernel (kernels/histogram.py): a
-    lax.scan over row blocks unpacks one (block_rows, f) tile at a time in
-    registers/cache and scatter-adds it into the carried flat histogram.
-    HBM reads of the dominant input stream stay at the compressed size
-    (DESIGN.md §2), and the dense intermediate is bounded by block_rows
-    regardless of n_rows.
+    XLA-native fallback for the Pallas kernel (kernels/histogram.py), in
+    feature-major order: a lax.scan over FEATURES unpacks one (n_rows,)
+    column at a time and scatter-adds it into that feature's private
+    ((n_nodes+1)*max_bins, 2) slab — the histogram-privatisation discipline
+    of the paper's shared-memory kernel (§2.3), expressed at XLA level. The
+    slab stays L1/L2-resident for the whole column, which makes this build
+    faster than the dense one at every depth (BENCH `kernels` section); HBM
+    reads of the dominant input stream stay at the compressed size
+    (DESIGN.md §2), and dense transients are O(n_rows) per feature — the
+    (n, f) matrix never exists. Per (node, f, bin) slot the f32 adds happen
+    in global row order, so the result is bit-identical to
+    build_histograms on the unpacked matrix.
+
+    block_rows is kept for API stability (the dense-tile bound of the old
+    row-blocked formulation); the feature-major build's transients are
+    bounded by one column regardless of its value.
     """
+    del block_rows  # transients are one (n_rows,) column, no tiling needed
     f, w = packed.shape
     spw = symbols_per_word(bits)
-    bw = max(1, min(block_rows // spw, w))  # words per row block
-    w_pad = (-w) % bw
-    n_chunks = (w + w_pad) // bw
-    rows_pc = bw * spw
-    n_padded = n_chunks * rows_pc
+    rows_up = w * spw
 
-    packed_c = jnp.pad(packed, ((0, 0), (0, w_pad)))
-    packed_c = packed_c.reshape(f, n_chunks, bw).transpose(1, 0, 2)
-    gh_c = jnp.pad(gh, ((0, n_padded - n_rows), (0, 0))).reshape(n_chunks, rows_pc, 2)
-    # Padding rows (both word-alignment and block padding) go to the dump
-    # slot n_nodes, exactly like inactive rows.
-    pos_c = jnp.pad(
+    # Padding rows (word-alignment) go to the dump slot n_nodes, exactly
+    # like inactive rows.
+    pos_p = jnp.pad(
         jnp.minimum(positions, n_nodes).astype(jnp.int32),
-        (0, n_padded - n_rows),
+        (0, rows_up - n_rows),
         constant_values=n_nodes,
-    ).reshape(n_chunks, rows_pc)
+    )
+    gh_p = jnp.pad(gh, ((0, rows_up - n_rows), (0, 0)))
+    base = pos_p * max_bins
+    slots = (n_nodes + 1) * max_bins
 
-    shifts = (jnp.arange(spw, dtype=jnp.uint32) * bits)[None, None, :]
-    mask = jnp.uint32((1 << bits) - 1)
+    def per_feature(carry, words):
+        b = _unpack_words(words, bits)  # (rows_up,) — one column
+        slab = jnp.zeros((slots, 2), jnp.float32)
+        return carry, _scatter_feature(slab, b, base, gh_p)
 
-    def body(flat, chunk):
-        words, g, p = chunk
-        b = ((words[:, :, None] >> shifts) & mask).reshape(f, rows_pc)
-        b = b.T.astype(jnp.int32)  # (rows_pc, f) — the only dense tile
-        return _scatter_rows(flat, b, p, g, max_bins), None
-
-    flat = jnp.zeros(((n_nodes + 1) * f * max_bins, 2), jnp.float32)
-    flat, _ = jax.lax.scan(body, flat, (packed_c, gh_c, pos_c))
-    return flat.reshape(n_nodes + 1, f, max_bins, 2)[:n_nodes]
+    _, slabs = jax.lax.scan(per_feature, None, packed)  # (f, slots, 2)
+    return slabs.reshape(f, n_nodes + 1, max_bins, 2).transpose(1, 0, 2, 3)[:n_nodes]
 
 
 @functools.partial(
@@ -129,13 +181,16 @@ def build_histograms_chunked(
     n_rows: int,
 ) -> jax.Array:
     """build_histograms over the chunk-stacked packed matrix (external-
-    memory path, DESIGN.md §11): a lax.scan over CHUNKS accumulates each
-    chunk's scatter-add into the carried flat histogram, so the dense tile
-    is bounded by one chunk and — because the carry threads the partial
-    histogram through chunks in row order, exactly like the row-block scan
-    of build_histograms_packed — the result is bit-identical to the
-    in-memory build on the same rows (per-bin f32 adds happen in the same
-    row order; chunk padding rows land in the dump slot).
+    memory path, DESIGN.md §11): a lax.scan over CHUNKS threads the
+    feature-major slab stack through the chunk axis, so dense transients
+    are bounded by one chunk's column and — because chunk c scatters into
+    the slabs chunk c-1 left behind, feature by feature in the same order
+    as build_histograms_packed's single pass — the result is bit-identical
+    to the in-memory build on the same rows (per-bin f32 adds happen in
+    the same global row order; chunk padding rows land in the dump slot).
+    The inner per-feature scan consumes each feature's running slab as a
+    scanned input and emits the updated slab, so features stay independent
+    while the chunk axis stays sequential.
     """
     n_chunks, f, w_c = packed.shape
     spw = symbols_per_word(bits)
@@ -155,18 +210,23 @@ def build_histograms_chunked(
             pos_c, ((0, 0), (0, rows_up - chunk_rows)), constant_values=n_nodes
         )
 
-    shifts = (jnp.arange(spw, dtype=jnp.uint32) * bits)[None, None, :]
-    mask = jnp.uint32((1 << bits) - 1)
+    slots = (n_nodes + 1) * max_bins
 
-    def body(flat, chunk):
-        words, g, p = chunk
-        b = ((words[:, :, None] >> shifts) & mask).reshape(f, rows_up)
-        b = b.T.astype(jnp.int32)  # (rows_up, f) — the only dense tile
-        return _scatter_rows(flat, b, p, g, max_bins), None
+    def chunk_body(hist, chunk):
+        words_c, g, p = chunk
+        base = p * max_bins
 
-    flat = jnp.zeros(((n_nodes + 1) * f * max_bins, 2), jnp.float32)
-    flat, _ = jax.lax.scan(body, flat, (packed, gh_c, pos_c))
-    return flat.reshape(n_nodes + 1, f, max_bins, 2)[:n_nodes]
+        def per_feature(_, xs):
+            words, slab = xs
+            b = _unpack_words(words, bits)  # (rows_up,) — one chunk column
+            return None, _scatter_feature(slab, b, base, g)
+
+        _, hist = jax.lax.scan(per_feature, None, (words_c, hist))
+        return hist, None
+
+    hist0 = jnp.zeros((f, slots, 2), jnp.float32)
+    hist, _ = jax.lax.scan(chunk_body, hist0, (packed, gh_c, pos_c))
+    return hist.reshape(f, n_nodes + 1, max_bins, 2).transpose(1, 0, 2, 3)[:n_nodes]
 
 
 @functools.partial(

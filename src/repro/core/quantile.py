@@ -43,6 +43,42 @@ def n_value_bins(max_bins: int = DEFAULT_MAX_BINS) -> int:
 
 
 @functools.partial(jax.jit, static_argnames=("max_bins",))
+def select_cuts_from_sorted(
+    srt: jax.Array,  # (n_rows, n_features) column-sorted f32, +inf tail
+    n_valid: jax.Array,  # (n_features,) finite count per column
+    max_bins: int = DEFAULT_MAX_BINS,
+) -> jax.Array:
+    """Selection stage of compute_cuts: weighted-rank pick + interpolation
+    + dedup over pre-sorted columns. Split out so the sort stage can
+    dispatch independently (host sort on CPU, device sort / Pallas
+    selection kernel elsewhere — kernels/quantile_cuts.py reproduces this
+    arithmetic operation for operation and is parity-tested against it).
+    """
+    nvb = n_value_bins(max_bins)
+    n = srt.shape[0]
+
+    def per_feature(col: jax.Array, nv: jax.Array) -> jax.Array:
+        # Quantile positions: interior boundaries between nvb equal-mass bins.
+        qs = (jnp.arange(1, nvb, dtype=jnp.float32) / nvb) * jnp.maximum(
+            nv - 1, 1
+        ).astype(jnp.float32)
+        lo = jnp.clip(jnp.floor(qs).astype(jnp.int32), 0, n - 1)
+        hi = jnp.clip(lo + 1, 0, n - 1)
+        frac = qs - lo.astype(jnp.float32)
+        lov, hiv = col[lo], col[hi]
+        # Linear interpolation, guarding the all-missing / +inf tail case.
+        hiv = jnp.where(jnp.isfinite(hiv), hiv, lov)
+        cand = lov + frac * (hiv - lov)
+        cand = jnp.where(jnp.isfinite(cand), cand, jnp.inf)
+        # Deduplicate: a cut equal to its predecessor is useless; push to +inf
+        # so searchsorted collapses duplicate-mass bins (low-cardinality cols).
+        prev = jnp.concatenate([jnp.array([-jnp.inf], cand.dtype), cand[:-1]])
+        cand = jnp.where(cand > prev, cand, jnp.inf)
+        return jnp.sort(cand)  # keep +inf padding at the tail
+
+    return jax.vmap(per_feature, in_axes=(1, 0))(srt, n_valid)
+
+
 def compute_cuts(x: jax.Array, max_bins: int = DEFAULT_MAX_BINS) -> jax.Array:
     """Per-feature quantile cut points.
 
@@ -54,45 +90,61 @@ def compute_cuts(x: jax.Array, max_bins: int = DEFAULT_MAX_BINS) -> jax.Array:
       cuts: (n_features, n_value_bins - 1) float32, ascending; value bin b
         holds x <= cuts[b] (and x > cuts[b-1]). Unused tail cuts are +inf so
         quantize() naturally maps everything into the used prefix.
+
+    Dispatches through kernels.ops.compute_cuts_op: the sort stage runs on
+    the host (np.sort) when the backend is CPU — an order of magnitude
+    faster than XLA's CPU sort at 1M rows, see BENCH `kernels` section —
+    and on device otherwise, where the selection stage additionally uses
+    the Pallas kernel when the matrix fits VMEM. Every path produces
+    bit-identical cuts to `compute_cuts_reference` (tested): the sorted
+    multiset is the same array no matter who sorts it, and the selection
+    arithmetic is shared.
     """
-    nvb = n_value_bins(max_bins)
-    n = x.shape[0]
+    from repro.kernels import ops as KO  # lazy: ops imports core modules
 
-    def per_feature(col: jax.Array) -> jax.Array:
-        finite = jnp.isfinite(col)
-        # Push NaNs to the end of the sort; count of valid entries.
-        filled = jnp.where(finite, col, jnp.inf)
-        srt = jnp.sort(filled)
-        n_valid = jnp.sum(finite)
-        # Quantile positions: interior boundaries between nvb equal-mass bins.
-        qs = (jnp.arange(1, nvb, dtype=jnp.float32) / nvb) * jnp.maximum(
-            n_valid - 1, 1
-        ).astype(jnp.float32)
-        lo = jnp.clip(jnp.floor(qs).astype(jnp.int32), 0, n - 1)
-        hi = jnp.clip(lo + 1, 0, n - 1)
-        frac = qs - lo.astype(jnp.float32)
-        lov, hiv = srt[lo], srt[hi]
-        # Linear interpolation, guarding the all-missing / +inf tail case.
-        hiv = jnp.where(jnp.isfinite(hiv), hiv, lov)
-        cand = lov + frac * (hiv - lov)
-        cand = jnp.where(jnp.isfinite(cand), cand, jnp.inf)
-        # Deduplicate: a cut equal to its predecessor is useless; push to +inf
-        # so searchsorted collapses duplicate-mass bins (low-cardinality cols).
-        prev = jnp.concatenate([jnp.array([-jnp.inf], cand.dtype), cand[:-1]])
-        cand = jnp.where(cand > prev, cand, jnp.inf)
-        return jnp.sort(cand)  # keep +inf padding at the tail
-
-    return jax.vmap(per_feature, in_axes=1)(x.astype(jnp.float32))
+    return KO.compute_cuts_op(x, max_bins)
 
 
-@jax.jit
+@functools.partial(jax.jit, static_argnames=("max_bins",))
+def compute_cuts_reference(
+    x: jax.Array, max_bins: int = DEFAULT_MAX_BINS
+) -> jax.Array:
+    """The original single-pass compute_cuts (vmapped per-feature device
+    sort + selection). Kept as the oracle for the dispatching fast path and
+    the Pallas selection kernel; also exercises the pure-jnp route on
+    backends without host callbacks.
+    """
+    x = x.astype(jnp.float32)
+    finite = jnp.isfinite(x)
+    # Push NaNs to the end of the sort; count of valid entries.
+    filled = jnp.where(finite, x, jnp.inf)
+    srt = jnp.sort(filled, axis=0)
+    n_valid = jnp.sum(finite, axis=0)
+    return select_cuts_from_sorted(srt, n_valid, max_bins)
+
+
 def quantize(x: jax.Array, cuts: jax.Array) -> jax.Array:
     """Map raw features to bin ids. NaN -> missing bin (= n_cuts + 1).
 
     bin = #cuts strictly below x, i.e. x <= cuts[b] lands in bin b. The last
     value bin is everything above the final finite cut; missing bin id is
     cuts.shape[1] + 1 == n_value_bins - ... == max_bins - 1 by construction.
+
+    Dispatches through kernels.ops.quantize_op: on CPU (and outside a jit
+    trace) the binary search runs as host-side np.searchsorted — the same
+    exact float comparisons, bit-identical bins, no XLA compile/dispatch
+    overhead on the DMatrix build path. Everywhere else the jitted
+    `quantize_reference` below runs.
     """
+    from repro.kernels import ops as KO  # lazy: ops imports core modules
+
+    return KO.quantize_op(x, cuts)
+
+
+@jax.jit
+def quantize_reference(x: jax.Array, cuts: jax.Array) -> jax.Array:
+    """The original all-device quantize (vmapped searchsorted). Oracle for
+    the dispatching fast path; also the route taken under jit traces."""
     n_cuts = cuts.shape[1]
 
     def per_feature(col: jax.Array, c: jax.Array) -> jax.Array:

@@ -34,6 +34,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(
@@ -144,3 +145,213 @@ def histogram_packed(
         interpret=interpret,
     )(packed_p, gh_p, pos_p)
     return out[:n_nodes, :f]
+
+
+# --- privatised kernel with explicit DMA pipelining (DESIGN.md §16) ----------
+
+
+def _private_kernel(
+    packed_hbm,  # (F_pad, W_pad) uint32, whole array in HBM/ANY
+    gh_hbm,  # (N_pad, 2) f32, whole array
+    pos_hbm,  # (N_pad, 1) i32, whole array
+    out_ref,  # (1, F_BLK, width, 2) f32 — this program's partial histogram
+    words_buf,  # VMEM (buffer_depth, F_BLK, W_BLK) uint32 scratch
+    gh_buf,  # VMEM (buffer_depth, ROWS_BLK, 2) f32 scratch
+    pos_buf,  # VMEM (buffer_depth, ROWS_BLK, 1) i32 scratch
+    acc_ref,  # VMEM (F_BLK, width, 2) f32 scratch — the privatised histogram
+    sem,  # DMA semaphores (3, buffer_depth)
+    *,
+    bits: int,
+    max_bins: int,
+    width: int,
+    f_blk: int,
+    w_blk: int,
+    chunks_per_private: int,
+    buffer_depth: int,
+):
+    pid = pl.program_id(0)  # which private row group
+    fb = pl.program_id(1)  # which feature block
+    spw = 32 // bits
+    rows_blk = w_blk * spw
+
+    def copies(chunk, slot):
+        """The three DMAs that stage row-chunk `chunk` into buffer `slot`."""
+        word0 = (pid * chunks_per_private + chunk) * w_blk
+        row0 = (pid * chunks_per_private + chunk) * rows_blk
+        return (
+            pltpu.make_async_copy(
+                packed_hbm.at[pl.ds(fb * f_blk, f_blk), pl.ds(word0, w_blk)],
+                words_buf.at[slot],
+                sem.at[0, slot],
+            ),
+            pltpu.make_async_copy(
+                gh_hbm.at[pl.ds(row0, rows_blk), :], gh_buf.at[slot], sem.at[1, slot]
+            ),
+            pltpu.make_async_copy(
+                pos_hbm.at[pl.ds(row0, rows_blk), :], pos_buf.at[slot], sem.at[2, slot]
+            ),
+        )
+
+    def start(chunk, slot):
+        for c in copies(chunk, slot):
+            c.start()
+
+    def wait(chunk, slot):
+        for c in copies(chunk, slot):
+            c.wait()
+
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    start(0, 0)
+
+    shifts = (jnp.arange(spw, dtype=jnp.uint32) * bits)[None, None, :]
+    mask = jnp.uint32((1 << bits) - 1)
+    iota = jnp.arange(width, dtype=jnp.int32)[None, :]
+
+    def body(chunk, carry):
+        slot = chunk % buffer_depth
+
+        # Prefetch the next chunk into the next slot before blocking on this
+        # one — with buffer_depth >= 2 the DMA overlaps this chunk's compute.
+        if buffer_depth > 1:
+
+            @pl.when(chunk + 1 < chunks_per_private)
+            def _prefetch():
+                start(chunk + 1, (chunk + 1) % buffer_depth)
+
+        wait(chunk, slot)
+
+        words = words_buf[slot]  # (F_BLK, W_BLK)
+        bins = ((words[:, :, None] >> shifts) & mask).reshape(f_blk, rows_blk)
+        bins = bins.astype(jnp.int32)
+        gh = gh_buf[slot]  # (ROWS_BLK, 2)
+        # pos <= n_nodes always (dump slot included in width), no masking.
+        base = pos_buf[slot][:, 0] * max_bins  # (ROWS_BLK,)
+
+        for f in range(f_blk):  # static unroll: F_BLK small
+            onehot = ((base + bins[f])[:, None] == iota).astype(jnp.float32)
+            acc_ref[f, :, :] += jnp.dot(
+                onehot.T, gh, preferred_element_type=jnp.float32
+            )
+
+        # Single-buffer pipeline: the slot is free only now.
+        if buffer_depth == 1:
+
+            @pl.when(chunk + 1 < chunks_per_private)
+            def _next():
+                start(chunk + 1, 0)
+
+        return carry
+
+    jax.lax.fori_loop(0, chunks_per_private, body, jnp.int32(0))
+    out_ref[0] = acc_ref[...]
+
+
+def _tree_add(parts: jax.Array) -> jax.Array:
+    """Merge per-group partial histograms with a binary tree of adds.
+
+    Log-depth, pairwise — the epilogue the paper runs after per-block
+    shared-memory histograms are flushed. The summation order is fixed by
+    the (static) number of groups, so results are deterministic run-to-run.
+    """
+    while parts.shape[0] > 1:
+        half = parts.shape[0] // 2
+        even = parts[0 : 2 * half : 2] + parts[1 : 2 * half : 2]
+        if parts.shape[0] % 2:
+            even = jnp.concatenate([even, parts[-1:]], axis=0)
+        parts = even
+    return parts[0]
+
+
+def build_histograms_packed_kernel(
+    packed: jax.Array,  # (F, W) uint32, W*spw rows (padded)
+    gh: jax.Array,  # (N, 2) f32
+    positions: jax.Array,  # (N,) i32; value n_nodes = inactive
+    n_nodes: int,
+    max_bins: int,
+    bits: int,
+    *,
+    f_blk: int = 8,
+    w_blk: int = 64,
+    n_private: int = 8,
+    buffer_depth: int = 2,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Privatised packed-histogram kernel: grid (row_groups, feature_blocks).
+
+    The CUDA kernel's shared-memory privatisation (paper §2.3) mapped to
+    TPU: each of `n_private` row groups accumulates its own full
+    (F_BLK, (n_nodes+1)*max_bins, 2) histogram in a VMEM scratch
+    accumulator — never contending with other groups — while packed words,
+    (g, h) pairs and positions are staged HBM->VMEM with explicit
+    `make_async_copy` DMAs, `buffer_depth` chunks in flight (1 = serial,
+    2 = classic double buffering, 4 = deeper pipeline; BENCH sweeps all
+    three). The per-group partials are merged by a log-depth tree-add
+    epilogue (`_tree_add`), the analogue of the CUDA grid-wide flush.
+
+    VMEM bound: the accumulator is f_blk * (n_nodes+1) * max_bins * 2 * 4
+    bytes (~0.5 MB at depth 6 defaults) plus a (ROWS_BLK, width) one-hot
+    transient, which caps practical n_nodes at ~32 (DESIGN.md §16); deeper
+    levels use the XLA feature-major builder instead.
+
+    Returns hist (n_nodes, F, max_bins, 2) f32.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    f, w = packed.shape
+    n = gh.shape[0]
+    spw = 32 // bits
+    rows_blk = w_blk * spw
+    width = (n_nodes + 1) * max_bins
+
+    n_fblk = -(-f // f_blk)
+    f_pad = n_fblk * f_blk - f
+    chunks_per_private = max(1, -(-w // (n_private * w_blk)))
+    w_padded = n_private * chunks_per_private * w_blk
+    n_rows_padded = w_padded * spw
+
+    packed_p = jnp.pad(packed, ((0, f_pad), (0, w_padded - w)))
+    gh_p = jnp.pad(gh, ((0, n_rows_padded - n), (0, 0)))
+    # Padding rows -> dump slot n_nodes (sliced off below), like inactive
+    # rows; clamp real inactive markers the same way.
+    pos_p = jnp.pad(
+        jnp.minimum(positions, n_nodes).astype(jnp.int32),
+        (0, n_rows_padded - n),
+        constant_values=n_nodes,
+    )[:, None]
+
+    kern = functools.partial(
+        _private_kernel,
+        bits=bits,
+        max_bins=max_bins,
+        width=width,
+        f_blk=f_blk,
+        w_blk=w_blk,
+        chunks_per_private=chunks_per_private,
+        buffer_depth=buffer_depth,
+    )
+    partials = pl.pallas_call(
+        kern,
+        grid=(n_private, n_fblk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, f_blk, width, 2), lambda pid, fb: (pid, fb, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(
+            (n_private, n_fblk * f_blk, width, 2), jnp.float32
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((buffer_depth, f_blk, w_blk), jnp.uint32),
+            pltpu.VMEM((buffer_depth, rows_blk, 2), jnp.float32),
+            pltpu.VMEM((buffer_depth, rows_blk, 1), jnp.int32),
+            pltpu.VMEM((f_blk, width, 2), jnp.float32),
+            pltpu.SemaphoreType.DMA((3, buffer_depth)),
+        ],
+        interpret=interpret,
+    )(packed_p, gh_p, pos_p)
+    merged = _tree_add(partials)  # (F_pad, width, 2)
+    hist = merged.reshape(n_fblk * f_blk, n_nodes + 1, max_bins, 2)
+    return hist.transpose(1, 0, 2, 3)[:n_nodes, :f]

@@ -20,10 +20,29 @@ def histogram_ref(
     max_bins: int,
     bits: int,
 ) -> jax.Array:
-    """Oracle for kernels.histogram: unpack then scatter-add."""
+    """Oracle for kernels.histogram — both the MXU-matmul kernel
+    (histogram_packed) and the privatised DMA-pipelined kernel
+    (build_histograms_packed_kernel) target this contract: unpack then
+    scatter-add. Kernels differ from it only by f32 summation order."""
     n = gh.shape[0]
     bins = _unpack(packed, bits, n)
     return H.build_histograms(bins, gh, positions, n_nodes, max_bins)
+
+
+def quantile_cuts_ref(
+    srt: jax.Array,  # (n, F) f32 column-sorted, +inf tail
+    n_valid: jax.Array,  # (F,) finite count per column
+    max_bins: int,
+) -> jax.Array:
+    """Oracle for kernels.quantile_cuts: the shared XLA selection stage.
+    The kernel reproduces this arithmetic operation for operation; parity
+    is to ~1 ulp of arithmetic (compiled XLA may contract mul+add into FMA
+    where the kernel's evaluation does not; at exact integer rank
+    boundaries that can select the neighbouring order statistic), pinned
+    by tests/test_kernels_cuts.py."""
+    from repro.core.quantile import select_cuts_from_sorted
+
+    return select_cuts_from_sorted(srt, n_valid, max_bins)
 
 
 def decompress_ref(packed: jax.Array, bits: int, n_rows: int) -> jax.Array:

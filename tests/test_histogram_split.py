@@ -120,3 +120,47 @@ def test_no_valid_split_gives_neg_inf():
                               jnp.zeros(50, jnp.int32), 1, 8)
     sp = S.evaluate_splits(hist, jnp.asarray([[50.0, 50.0]]), S.SplitParams())
     assert not np.isfinite(float(sp.gain[0])) or float(sp.gain[0]) <= 1e-5
+
+
+# --------------------------------------------------------------------------
+# Packed-builder bit-identity (ISSUE 9): the feature-major packed scatter
+# and the chunk-stacked scatter must reproduce the dense row-major build
+# EXACTLY — per (node, feature, bin) slot the f32 adds occur in global row
+# order in all three layouts, so not even summation order differs. The
+# subtraction trick and the external-memory scan rely on this.
+# --------------------------------------------------------------------------
+
+def test_packed_feature_major_bitwise_vs_dense(rng):
+    from repro.core import compress as C
+
+    for n, f, max_bins, nodes in [
+        (1000, 7, 16, 5), (513, 3, 256, 8), (257, 4, 64, 1), (2048, 9, 32, 13),
+    ]:
+        bits = C.bits_needed(max_bins - 1)
+        bins = jnp.asarray(rng.integers(0, max_bins, size=(n, f)), jnp.int32)
+        gh = jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)
+        pos = jnp.asarray(rng.integers(0, nodes + 1, size=n), jnp.int32)
+        dense = H.build_histograms(bins, gh, pos, nodes, max_bins)
+        packed = C.pack(bins, bits)
+        got = H.build_histograms_packed(packed, gh, pos, nodes, max_bins,
+                                        bits, n)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(dense))
+
+
+def test_chunked_bitwise_vs_dense(rng):
+    from repro.core import compress as C
+
+    n, f, max_bins, nodes, chunk_rows = 1000, 7, 16, 5, 100
+    bits = C.bits_needed(max_bins - 1)
+    bins_np = rng.integers(0, max_bins, size=(n, f)).astype(np.int32)
+    gh = jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)
+    pos = jnp.asarray(rng.integers(0, nodes + 1, size=n), jnp.int32)
+    chunks = [
+        np.asarray(C.pack(jnp.asarray(bins_np[lo:lo + chunk_rows]), bits))
+        for lo in range(0, n, chunk_rows)
+    ]
+    got = H.build_histograms_chunked(
+        jnp.asarray(np.stack(chunks)), gh, pos, nodes, max_bins, bits,
+        chunk_rows, n)
+    dense = H.build_histograms(jnp.asarray(bins_np), gh, pos, nodes, max_bins)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(dense))

@@ -1,0 +1,86 @@
+"""kernels.quantile_cuts vs the XLA selection oracle (interpret mode).
+
+Parity is NOT bitwise: compiled XLA may contract the interpolation's
+mul+add into an FMA where the kernel's evaluation does not (~1 ulp), and
+at an exact integer rank boundary that ulp can flip a floor() and select
+the NEIGHBOURING order statistic — still a valid boundary of the same
+equal-mass bin. The tolerance below bounds exactly that failure mode:
+one rank-unit of interpolation drift times the largest adjacent-value
+gap in the sorted column, plus ulp-scale slack.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as KR
+from repro.kernels.quantile_cuts import quantile_cuts_from_sorted
+
+
+def _sorted_input(rng, n, f, nan_frac=0.1):
+    x = rng.normal(size=(n, f)).astype(np.float32)
+    x[rng.random((n, f)) < nan_frac] = np.nan
+    srt = np.sort(np.where(np.isnan(x), np.inf, x), axis=0)
+    n_valid = np.isfinite(srt).sum(axis=0).astype(np.int32)
+    return srt, n_valid
+
+
+@pytest.mark.parametrize(
+    "n,f,max_bins",
+    [(1000, 7, 16), (513, 3, 256), (4096, 17, 256), (64, 1, 256),
+     (333, 11, 64)],
+)
+def test_cuts_kernel_parity(rng, n, f, max_bins):
+    srt, n_valid = _sorted_input(rng, n, f)
+    got = np.asarray(
+        quantile_cuts_from_sorted(
+            jnp.asarray(srt), jnp.asarray(n_valid), max_bins,
+            interpret=True))
+    want = np.asarray(
+        KR.quantile_cuts_ref(jnp.asarray(srt), jnp.asarray(n_valid),
+                             max_bins))
+    assert got.shape == want.shape == (f, max_bins - 2)
+    for j in range(f):
+        nv = int(n_valid[j])
+        gap = (float(np.diff(srt[:nv, j]).max()) if nv >= 2 else 0.0)
+        tol = (np.spacing(np.float32(max(nv, 2))) * max(gap, 1.0)
+               + 1e-5 + 1e-5 * np.abs(want[j]))
+        gw, ww = got[j], want[j]
+        # +inf dedup padding must agree exactly; finite cuts to the bound.
+        np.testing.assert_array_equal(np.isfinite(gw), np.isfinite(ww))
+        fin = np.isfinite(ww)
+        assert np.all(np.abs(gw[fin] - ww[fin]) <= tol[fin]), (
+            f"feature {j}: max err "
+            f"{np.max(np.abs(gw[fin] - ww[fin]) - tol[fin])}"
+        )
+
+
+def test_cuts_kernel_structure(rng):
+    """Rows come back ascending with +inf padding at the tail, padded
+    feature blocks are sliced off, and degenerate columns behave."""
+    n, max_bins = 200, 32
+    x = rng.normal(size=(n, 5)).astype(np.float32)
+    x[:, 1] = 3.25  # constant column -> single value, all cuts dedup away
+    x[:, 3] = np.nan  # all-missing column -> zero valid, all +inf
+    srt = np.sort(np.where(np.isnan(x), np.inf, x), axis=0)
+    n_valid = np.isfinite(srt).sum(axis=0).astype(np.int32)
+
+    # f=5 with f_blk=4 forces a ragged padded feature block.
+    got = np.asarray(
+        quantile_cuts_from_sorted(
+            jnp.asarray(srt), jnp.asarray(n_valid), max_bins,
+            f_blk=4, interpret=True))
+    assert got.shape == (5, max_bins - 2)
+    for row in got:
+        r = row[np.isfinite(row)]
+        assert np.all(np.diff(r) >= 0), "cuts must be ascending"
+    # +inf padding is contiguous at the tail (the re-sort guarantees it).
+    for row in got:
+        fin = np.isfinite(row)
+        assert not np.any(fin[np.argmin(fin):]) or np.all(fin)
+    assert np.isfinite(got[1]).sum() == 1, "constant col dedups to one cut"
+    assert got[1, 0] == 3.25
+    assert not np.any(np.isfinite(got[3])), "all-missing col has no cuts"
+    want = np.asarray(
+        KR.quantile_cuts_ref(jnp.asarray(srt), jnp.asarray(n_valid),
+                             max_bins))
+    np.testing.assert_array_equal(np.isfinite(got), np.isfinite(want))

@@ -194,3 +194,26 @@ def test_dense_round_step_detector_sanity():
     n, f = 512, 7
     shapes = _round_step_shapes(n, f, compress_matrix=False, hist_block_rows=128)
     assert any(int(np.prod(s)) == n * f for s in shapes)
+
+
+def test_packed_builder_never_materialises_dense_bins(rng):
+    """Builder-level version of the detector (ISSUE 9): the feature-major
+    packed builder's own jaxpr contains no n_rows * n_features-element
+    intermediate — one unpacked COLUMN at a time is its largest dense
+    transient. Guards the builder directly, independent of how the round
+    step composes it."""
+    from repro.core import histogram as H
+
+    n, f, max_bins, nodes = 512, 7, 16, 3
+    bits = C.bits_needed(max_bins - 1)
+    bins = jnp.asarray(rng.integers(0, max_bins, size=(n, f)), jnp.int32)
+    gh = jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)
+    pos = jnp.asarray(rng.integers(0, nodes + 1, size=n), jnp.int32)
+    packed = C.pack(bins, bits)
+    jaxpr = jax.make_jaxpr(
+        lambda pk, g, p: H.build_histograms_packed(
+            pk, g, p, nodes, max_bins, bits, n)
+    )(packed, gh, pos)
+    shapes = _intermediate_sizes(jaxpr.jaxpr)
+    offenders = [s for s in shapes if int(np.prod(s)) >= n * f]
+    assert not offenders, f"dense-bins-sized intermediates found: {offenders}"
