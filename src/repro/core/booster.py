@@ -96,6 +96,13 @@ class BoosterConfig:
     colsample_bylevel: float = 1.0  # per-level fraction OF the tree's set
     colsample_bynode: float = 1.0  # per-node fraction OF the level's set
     monotone_constraints: tuple | None = None  # per-feature {-1, 0, +1}
+    # GOSS (DESIGN.md §17): sampling_method="goss" keeps the top_rate
+    # fraction of rows by |gradient| and uniformly samples other_rate of
+    # the rest per tree, reweighting the sampled remainder by
+    # (1 - top_rate) / other_rate. Mutually exclusive with subsample < 1.
+    sampling_method: str = "uniform"  # or "goss"
+    top_rate: float = 0.2  # GOSS: kept fraction of largest-|g| rows
+    other_rate: float = 0.1  # GOSS: uniformly sampled fraction of the rest
     seed: int = 0  # PRNG seed; keys fold as (seed, round, class, site)
     # Numeric sentinel (DESIGN.md §13): "off" keeps the exact pre-sentinel
     # compiled program; otherwise a per-round finite flag on grads/hessians/
@@ -120,6 +127,29 @@ class BoosterConfig:
             v = getattr(self, knob)
             if not 0.0 < v <= 1.0:
                 raise ValueError(f"{knob} must be in (0, 1], got {v}")
+        if self.sampling_method not in ("uniform", "goss"):
+            raise ValueError(
+                f"sampling_method must be 'uniform' or 'goss', "
+                f"got {self.sampling_method!r}"
+            )
+        if self.sampling_method == "goss":
+            for knob in ("top_rate", "other_rate"):
+                v = getattr(self, knob)
+                if not 0.0 < v < 1.0:
+                    raise ValueError(
+                        f"{knob} must be in (0, 1) with sampling_method="
+                        f"'goss', got {v}"
+                    )
+            if self.top_rate + self.other_rate > 1.0:
+                raise ValueError(
+                    f"top_rate + other_rate must be <= 1.0, got "
+                    f"{self.top_rate} + {self.other_rate}"
+                )
+            if self.subsample < 1.0:
+                raise ValueError(
+                    "sampling_method='goss' replaces uniform row "
+                    "subsampling — leave subsample at 1.0"
+                )
 
     @property
     def split_params(self) -> S.SplitParams:
@@ -131,7 +161,11 @@ def _tree_margin_delta(cfg: BoosterConfig, tr: T.Tree, data) -> jax.Array:
     all rows, straight from the quantised representation (packed, chunked
     or dense) — no Ensemble construction."""
     mb = cfg.max_bins - 1
-    if isinstance(data, C.ChunkedPackedBins):
+    if getattr(data, "is_streamed", False):
+        # Streaming executor (core/stream.py): per-chunk traversal over the
+        # host-resident stack, same jitted kernel as the chunked scan body.
+        delta = data.traverse_tree(tr, mb, cfg.max_depth)
+    elif isinstance(data, C.ChunkedPackedBins):
         delta = PR.traverse_tree_chunked(
             tr.feature, tr.split_bin, tr.default_left, tr.leaf_value, tr.is_leaf,
             data.packed, data.bits, data.chunk_rows, data.n_rows, mb,
@@ -166,6 +200,25 @@ def _apply_stacked_trees(cfg: BoosterConfig, stacked: T.Tree, data,
     representation's producer graph, silently breaking the bit-identity
     between the in-memory and chunked paths (DESIGN.md §11)."""
     k = stacked.feature.shape[0]
+    if getattr(data, "is_streamed", False):
+        # Streamed executor: the traversals run eagerly per chunk, but the
+        # scale-and-add must compile as ONE jitted program. XLA's CPU
+        # emitter contracts `margins + lr * delta` into a single-rounding
+        # FMA inside compiled programs — optimization_barrier does not
+        # block the instruction-level contraction — while eager op-by-op
+        # dispatch rounds the multiply and the add separately. Compiling
+        # the same mul/barrier/add subgraph standalone reproduces the
+        # scan body's rounding exactly (the bit-identity tests pin this).
+        mb = cfg.max_bins - 1
+        deltas = jnp.stack(
+            [
+                data.traverse_tree(jax.tree.map(lambda a: a[c], stacked),
+                                   mb, cfg.max_depth)
+                for c in range(k)
+            ],
+            axis=1,
+        )
+        return _streamed_margin_update(margins, deltas, cfg.learning_rate)
     updates = jnp.stack(
         [
             _tree_margin_delta(cfg, jax.tree.map(lambda a: a[c], stacked), data)
@@ -174,6 +227,15 @@ def _apply_stacked_trees(cfg: BoosterConfig, stacked: T.Tree, data,
         axis=1,
     )
     return margins + jax.lax.optimization_barrier(updates)
+
+
+@functools.partial(jax.jit, static_argnames=("lr",))
+def _streamed_margin_update(margins: jax.Array, deltas: jax.Array,
+                            lr: float) -> jax.Array:
+    """The margin update's arithmetic tail (scale, barrier, add) compiled
+    standalone — the streamed twin of the in-scan update (see the streamed
+    branch of _apply_stacked_trees for why this must be jitted)."""
+    return margins + jax.lax.optimization_barrier(jnp.float32(lr) * deltas)
 
 
 def _round_step_fn(cfg: BoosterConfig, obj: O.Objective, hist_builder=None):
@@ -217,10 +279,9 @@ def _round_step_fn(cfg: BoosterConfig, obj: O.Objective, hist_builder=None):
         gh_raw = gh_all
         if cfg.numeric_check == "clamp":
             gh_all = RES.clamp_gradients(gh_all)
-        n_features = (
-            data.n_features if isinstance(data, (C.PackedBins, C.ChunkedPackedBins))
-            else data.shape[1]
-        )
+        n_features = getattr(data, "n_features", None)
+        if n_features is None:  # dense (n, f) bins array
+            n_features = data.shape[1]
         trees = []
         for c in range(k):
             gh_c = gh_all[:, c, :]
@@ -799,6 +860,11 @@ class Booster:
         if self.ensemble is None:
             return jnp.full((dmat.n_rows, k), self.base_score, jnp.float32)
         if isinstance(dmat, ExternalDMatrix):
+            if dmat.resolved_paging() == "stream":
+                # Never page the whole stack in just to rebuild margins:
+                # stream chunks through the fused traversal instead
+                # (bit-identical to the per-tree chunked scan).
+                return self._predict_margins_external(self.ensemble, dmat)
             cpb = dmat.packed_bins()
             return PR.predict_binned_chunked(
                 self.ensemble, cpb.packed, cpb.bits, cpb.chunk_rows,
@@ -917,50 +983,63 @@ class Booster:
             )
         else:
             external = isinstance(dtrain, ExternalDMatrix)
-            if external:
-                # External-memory path: the chunk-stacked packed words are
-                # the only representation; a dense matrix never exists.
-                data = dtrain.packed_bins()
+            if cfg.use_kernel_histograms and external:
+                raise NotImplementedError(
+                    "use_kernel_histograms is not supported with "
+                    "ExternalDMatrix (the Pallas kernels are not "
+                    "chunk-aware); train with the default builders"
+                )
+            if external and dtrain.resolved_paging() == "stream":
+                # Streaming out-of-core executor (DESIGN.md §17): rounds run
+                # eagerly, per-chunk kernels pull from the async prefetch
+                # ring; the stack is never device-resident all at once.
+                from repro.core import stream as STRM
+
+                run_chunk = STRM.make_stream_runner(
+                    cfg, obj, self.cuts, dtrain, y, extra, eval_pbs,
+                    eval_ys, eval_extras, metrics, track_metric, base_key,
+                )
             else:
-                data = (
-                    dtrain.packed_bins() if cfg.compress_matrix
-                    else dtrain.matrix.unpack()
-                )
-            hist_builder = None
-            if cfg.use_kernel_histograms:
                 if external:
-                    raise NotImplementedError(
-                        "use_kernel_histograms is not supported with "
-                        "ExternalDMatrix (the Pallas kernels are not "
-                        "chunk-aware); train with the default builders"
+                    # Resident external-memory path: the chunk-stacked
+                    # packed words are the only representation; a dense
+                    # matrix never exists.
+                    data = dtrain.packed_bins()
+                else:
+                    data = (
+                        dtrain.packed_bins() if cfg.compress_matrix
+                        else dtrain.matrix.unpack()
                     )
-                from repro.kernels import ops as KO
+                hist_builder = None
+                if cfg.use_kernel_histograms:
+                    from repro.kernels import ops as KO
 
-                hist_builder = (
-                    KO.build_histograms_kernel_packed
-                    if cfg.compress_matrix
-                    else KO.build_histograms_kernel
-                )
-            fns: dict = {}
-
-            def run_chunk(length, start_round, margins, eval_margins):
-                fkey = FA.trace_key("nan_grad")
-                fn = fns.get((length, fkey))
-                if fn is None:
-                    fn = fns[(length, fkey)] = _make_train_fn(
-                        cfg, obj, self.cuts, hist_builder, metrics,
-                        track_metric, n_rounds=length,
+                    hist_builder = (
+                        KO.build_histograms_kernel_packed
+                        if cfg.compress_matrix
+                        else KO.build_histograms_kernel
                     )
-                if stoch is not None:
-                    return fn(base_key, jnp.asarray(start_round, jnp.int32),
-                              data, margins, y, extra, eval_pbs,
+                fns: dict = {}
+
+                def run_chunk(length, start_round, margins, eval_margins):
+                    fkey = FA.trace_key("nan_grad")
+                    fn = fns.get((length, fkey))
+                    if fn is None:
+                        fn = fns[(length, fkey)] = _make_train_fn(
+                            cfg, obj, self.cuts, hist_builder, metrics,
+                            track_metric, n_rounds=length,
+                        )
+                    if stoch is not None:
+                        return fn(base_key,
+                                  jnp.asarray(start_round, jnp.int32),
+                                  data, margins, y, extra, eval_pbs,
+                                  eval_margins, eval_ys, eval_extras)
+                    if fkey is not None:
+                        return fn(jnp.asarray(start_round, jnp.int32), data,
+                                  margins, y, extra, eval_pbs, eval_margins,
+                                  eval_ys, eval_extras)
+                    return fn(data, margins, y, extra, eval_pbs,
                               eval_margins, eval_ys, eval_extras)
-                if fkey is not None:
-                    return fn(jnp.asarray(start_round, jnp.int32), data,
-                              margins, y, extra, eval_pbs, eval_margins,
-                              eval_ys, eval_extras)
-                return fn(data, margins, y, extra, eval_pbs, eval_margins,
-                          eval_ys, eval_extras)
 
         # Per-fit communication accounting (DESIGN.md §15): analytic wire
         # bytes / collective calls for the chosen strategy, plus the

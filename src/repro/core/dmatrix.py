@@ -33,6 +33,8 @@ Two batch-iterator constructors remove the all-resident-at-once ceiling
 """
 from __future__ import annotations
 
+import queue
+import threading
 import warnings
 
 import jax
@@ -330,6 +332,109 @@ class DeviceDMatrix:
         )
 
 
+class ChunkPager:
+    """Bounded background prefetcher over a sequence of chunk indices.
+
+    A daemon thread walks `indices`, calls `load_fn(i)` for each (the
+    host->device staging step — crc verify + `jnp.asarray` transfer), and
+    parks the results in a queue of at most `depth` staged chunks. The
+    consumer iterates `(index, chunk)` pairs: while it computes on chunk k,
+    the worker is already transferring chunk k+1 (double-buffered at
+    depth=2), hiding host->device latency behind compute. XLA dispatch and
+    the crc32 both release the GIL, so the overlap is genuine even on CPU.
+
+    `depth <= 0` (or a single chunk) degrades to a plain synchronous loop
+    — same yields, same order, no thread — which is the bit-identity
+    anchor: the consumer's arithmetic never depends on the staging mode.
+
+    Exceptions raised by `load_fn` (after its own retry policy is
+    exhausted) are forwarded through the queue and re-raised in the
+    consumer; the worker stops producing past a failure so a broken source
+    cannot keep filling the ring. `close()` (called automatically when
+    iteration ends, breaks, or raises) stops the worker and drains the
+    queue so blocked puts can observe the stop flag.
+    """
+
+    def __init__(self, load_fn, indices, depth: int):
+        self._load = load_fn
+        self._indices = list(indices)
+        self._queue: queue.Queue | None = None
+        self._stop: threading.Event | None = None
+        self._thread: threading.Thread | None = None
+        if depth > 0 and len(self._indices) > 1:
+            self._queue = queue.Queue(maxsize=depth)
+            self._stop = threading.Event()
+            self._thread = threading.Thread(
+                target=self._worker, name="chunk-pager", daemon=True
+            )
+            self._thread.start()
+
+    def _worker(self) -> None:
+        for i in self._indices:
+            if self._stop.is_set():
+                return
+            try:
+                item = (i, self._load(i), None)
+            except BaseException as exc:  # forwarded, not swallowed
+                item = (i, None, exc)
+            while not self._stop.is_set():
+                try:
+                    self._queue.put(item, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            if item[2] is not None:
+                return
+
+    def __iter__(self):
+        try:
+            if self._thread is None:
+                for i in self._indices:
+                    yield i, self._load(i)
+                return
+            for _ in self._indices:
+                i, chunk, exc = self._queue.get()
+                if exc is not None:
+                    raise exc
+                yield i, chunk
+        finally:
+            self.close()
+
+    def close(self) -> None:
+        """Stop the worker and release staged chunks (idempotent)."""
+        if self._thread is not None:
+            self._stop.set()
+            try:
+                while True:
+                    self._queue.get_nowait()
+            except queue.Empty:
+                pass
+            self._thread.join()
+            self._thread = None
+            self._queue = None
+
+    def __enter__(self) -> "ChunkPager":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+
+def _normalize_verify(verify) -> str:
+    """verify_chunks knob -> one of 'once' | 'always' | 'never'."""
+    if verify is True:
+        return "once"
+    if verify is False:
+        return "never"
+    if verify in ("once", "always", "never"):
+        return verify
+    raise ValueError(
+        "verify_chunks must be True ('once'), False ('never'), 'once', "
+        f"'always' or 'never', got {verify!r}"
+    )
+
+
 class ExternalDMatrix:
     """External-memory training matrix: host-resident bit-packed chunks.
 
@@ -370,31 +475,57 @@ class ExternalDMatrix:
         host-side analogue of the device-sharded build
         (`repro.dist.sharded_sketch_cuts`). 1 (default) keeps the
         sequential stream.
-      verify_chunks: verify each chunk's crc32 (recorded at build) on every
-        device page-in, so bit-flips between build and load surface as a
-        ChunkIntegrityError instead of silently training on garbage
-        (DESIGN.md §13).
+      verify_chunks: crc32 verification policy for page-in (crcs are
+        recorded at build so bit-flips between build and load surface as a
+        ChunkIntegrityError instead of silently training on garbage,
+        DESIGN.md §13). True or "once" (default): each chunk is verified
+        the first time it is paged in and re-verified after any load
+        retry, then trusted — steady-state epochs pay zero checksum cost.
+        "always": re-verify on every page-in (paranoid mode for flaky
+        storage). False or "never": skip verification entirely.
       load_retries / load_backoff: transient page-in failures (I/O errors,
         integrity failures in the transfer path) are retried this many
         times with exponential backoff before the error propagates.
+      paging: "resident" pages the whole compressed stack to device once
+        and trains on the compiled chunked scan; "stream" keeps the stack
+        host-side and streams chunks through a bounded prefetching pager
+        every round (device footprint ~prefetch_chunks+1 chunks instead of
+        the full stack — for stacks that do not fit device memory);
+        "auto" (default) picks "stream" only when the device reports a
+        memory limit and the stack would occupy more than half of it,
+        otherwise "resident" (DESIGN.md §17).
+      prefetch_chunks: staged-chunk ring depth for streamed paging — the
+        worker thread keeps up to this many chunks in flight ahead of
+        compute (2 = double buffering). 0 disables the background thread
+        (synchronous loads, bit-identical results).
     """
 
     def __init__(
         self,
         batches,
         *,
-        chunk_rows: int = 65536,
+        chunk_rows: int = 131072,
         max_bins: int = Q.DEFAULT_MAX_BINS,
         ref=None,
         cuts="sketch",
         sketch_capacity: int = 1024,
         sketch_shards: int = 1,
-        verify_chunks: bool = True,
+        verify_chunks: bool | str = True,
         load_retries: int = 2,
         load_backoff: float = 0.05,
+        paging: str = "auto",
+        prefetch_chunks: int = 2,
     ):
         if chunk_rows <= 0:
             raise ValueError(f"chunk_rows must be positive, got {chunk_rows}")
+        if paging not in ("auto", "resident", "stream"):
+            raise ValueError(
+                f"paging must be 'auto', 'resident' or 'stream', got {paging!r}"
+            )
+        if prefetch_chunks < 0:
+            raise ValueError(
+                f"prefetch_chunks must be >= 0, got {prefetch_chunks}"
+            )
         xs, label, groups, n_features = _collect_batches(batches)
         n_rows = sum(c.shape[0] for c in xs)
         xs = _rechunk(xs, chunk_rows)
@@ -478,10 +609,14 @@ class ExternalDMatrix:
         self.group_ids = (
             None if groups is None else jnp.asarray(groups, jnp.int32)
         )
-        self.verify_chunks = verify_chunks
+        self.verify_chunks = _normalize_verify(verify_chunks)
         self.load_retries = load_retries
         self.load_backoff = load_backoff
+        self.paging = paging
+        self.prefetch_chunks = prefetch_chunks
         self._chunk_crcs = RES.crc32_chunks(host_chunks)
+        self._verified = np.zeros(host_chunks.shape[0], np.bool_)
+        self.stream_stats = None  # last streamed fit's counters (stream.py)
 
     @classmethod
     def from_dmatrix(cls, dmat: "DeviceDMatrix", *, chunk_rows: int,
@@ -498,8 +633,9 @@ class ExternalDMatrix:
 
     @classmethod
     def _from_host_bins(cls, bins, cuts, max_bins, label, group_ids,
-                        chunk_rows, *, verify_chunks: bool = True,
-                        load_retries: int = 2, load_backoff: float = 0.05):
+                        chunk_rows, *, verify_chunks: bool | str = True,
+                        load_retries: int = 2, load_backoff: float = 0.05,
+                        paging: str = "auto", prefetch_chunks: int = 2):
         """Build from already-quantised host bins (from_dmatrix / rechunk):
         the float->bins pipeline is skipped, everything downstream of
         quantisation is identical to __init__."""
@@ -530,10 +666,14 @@ class ExternalDMatrix:
         self.group_ids = (
             None if group_ids is None else jnp.asarray(group_ids, jnp.int32)
         )
-        self.verify_chunks = verify_chunks
+        self.verify_chunks = _normalize_verify(verify_chunks)
         self.load_retries = load_retries
         self.load_backoff = load_backoff
+        self.paging = paging
+        self.prefetch_chunks = prefetch_chunks
         self._chunk_crcs = RES.crc32_chunks(host_chunks)
+        self._verified = np.zeros(n_chunks, np.bool_)
+        self.stream_stats = None  # last streamed fit's counters (stream.py)
         return self
 
     def rechunk(self, chunk_rows: int) -> "ExternalDMatrix":
@@ -545,6 +685,7 @@ class ExternalDMatrix:
             self._decode_host_bins(), self.cuts, self.max_bins, self.label,
             self.group_ids, chunk_rows, verify_chunks=self.verify_chunks,
             load_retries=self.load_retries, load_backoff=self.load_backoff,
+            paging=self.paging, prefetch_chunks=self.prefetch_chunks,
         )
 
     def _decode_host_bins(self) -> np.ndarray:
@@ -561,7 +702,7 @@ class ExternalDMatrix:
 
     @classmethod
     def from_arrays(
-        cls, x, label=None, *, group_ids=None, chunk_rows: int = 65536, **kw
+        cls, x, label=None, *, group_ids=None, chunk_rows: int = 131072, **kw
     ) -> "ExternalDMatrix":
         """Artificially chunk an in-memory array (tests, benchmarks, and
         the parity check against `DeviceDMatrix`)."""
@@ -601,6 +742,26 @@ class ExternalDMatrix:
             return 0
         return int(np.prod(self._device_stack.shape)) * 4
 
+    def resolved_paging(self) -> str:
+        """The effective paging mode: "resident" or "stream".
+
+        "auto" resolves to "stream" only when the backing device reports a
+        memory limit and the compressed stack would occupy more than half
+        of it (leaving headroom for gradients, histograms and transients);
+        anywhere the limit is unknown — notably CPU backends — it resolves
+        to "resident", the proven compiled-scan path.
+        """
+        if self.paging != "auto":
+            return self.paging
+        try:
+            stats = jax.devices()[0].memory_stats()
+            limit = (stats or {}).get("bytes_limit")
+        except Exception:
+            limit = None
+        if limit and self.nbytes_host > 0.5 * limit:
+            return "stream"
+        return "resident"
+
     def packed_bins(self) -> C.ChunkedPackedBins:
         """Page the compressed chunk stack onto the device (cached) as the
         traced representation the training scan consumes. Page-in verifies
@@ -617,20 +778,27 @@ class ExternalDMatrix:
     def _page_in(self) -> jax.Array:
         """Host -> device transfer with integrity verification and
         retry/backoff. The chunk_load / chunk_corrupt fault sites
-        (repro.testing.faults) live here."""
+        (repro.testing.faults) live here. Verification follows the
+        verify_chunks policy: "once" verifies only stacks with unverified
+        chunks (first page-in, or after a retry cleared the flags),
+        "always" re-verifies every page-in, "never" skips."""
 
         def attempt():
             FA.check("chunk_load")
             stack = FA.corrupt_array("chunk_corrupt", self._host_packed)
-            if self.verify_chunks:
+            if self.verify_chunks == "always" or (
+                self.verify_chunks == "once" and not self._verified.all()
+            ):
                 RES.verify_chunk_crcs(
                     stack, self._chunk_crcs,
                     context=f"ExternalDMatrix({self.n_rows}x"
                             f"{self.n_features})",
                 )
+                self._verified[:] = True
             return jnp.asarray(stack)
 
         def note(n, exc):
+            self._verified[:] = False
             warnings.warn(
                 f"chunk page-in failed ({exc}); "
                 f"retry {n + 1}/{self.load_retries}"
@@ -641,41 +809,67 @@ class ExternalDMatrix:
             retry_on=(OSError, RES.ChunkIntegrityError), on_retry=note,
         )
 
+    def _load_chunk(self, i: int) -> jax.Array:
+        """Page ONE chunk host -> device: the per-chunk analogue of
+        `_page_in`, with the same fault sites, verify policy and
+        retry/backoff. A retry clears the chunk's verified flag so the
+        re-attempt re-checks the crc even under the "once" policy."""
+
+        def attempt():
+            FA.check("chunk_load")
+            chunk = FA.corrupt_array("chunk_corrupt", self._host_packed[i])
+            if self.verify_chunks == "always" or (
+                self.verify_chunks == "once" and not self._verified[i]
+            ):
+                RES.verify_chunk_crcs(
+                    chunk[None], self._chunk_crcs[i : i + 1],
+                    context=f"ExternalDMatrix chunk {i}",
+                )
+                self._verified[i] = True
+            return jnp.asarray(chunk)
+
+        def note(n, exc):
+            self._verified[i] = False
+            warnings.warn(
+                f"chunk {i} page-in failed ({exc}); "
+                f"retry {n + 1}/{self.load_retries}"
+            )
+
+        return RES.with_retries(
+            attempt, retries=self.load_retries, backoff=self.load_backoff,
+            retry_on=(OSError, RES.ChunkIntegrityError), on_retry=note,
+        )
+
+    def chunk_pager(self, indices=None, prefetch: int | None = None
+                    ) -> ChunkPager:
+        """A `ChunkPager` over `indices` (default: every chunk in order).
+
+        When the stack is already device-resident the pager serves cached
+        slices synchronously (they were verified when paged in); otherwise
+        a background worker stages up to `prefetch` chunks (default
+        `self.prefetch_chunks`) ahead of the consumer via `_load_chunk`,
+        so transfer of chunk k+1 overlaps compute on chunk k. Iterate
+        `(index, chunk)` pairs; iteration cleans up the worker on exit."""
+        if indices is None:
+            indices = range(self.n_chunks)
+        if self._device_stack is not None:
+            stack = self._device_stack
+            return ChunkPager(lambda i: stack[i], indices, 0)
+        if prefetch is None:
+            prefetch = self.prefetch_chunks
+        return ChunkPager(self._load_chunk, indices, prefetch)
+
     def iter_device_chunks(self):
         """Yield each packed chunk as a device array, ONE at a time — the
         streaming predict path (DESIGN.md §14). Unlike `packed_bins()` the
         full device stack is never materialised: device transients stay
-        bounded by one chunk's words, and `nbytes_device` stays 0. Each
-        chunk's crc32 is verified on page-in with the same retry/backoff
-        policy as training (when the stack is already device-resident the
-        cached copy is served instead — it was verified when paged in)."""
-        if self._device_stack is not None:
-            for i in range(self.n_chunks):
-                yield self._device_stack[i]
-            return
-
-        for i in range(self.n_chunks):
-            def attempt(i=i):
-                FA.check("chunk_load")
-                chunk = FA.corrupt_array("chunk_corrupt", self._host_packed[i])
-                if self.verify_chunks:
-                    RES.verify_chunk_crcs(
-                        chunk[None], self._chunk_crcs[i : i + 1],
-                        context=f"ExternalDMatrix chunk {i}",
-                    )
-                return jnp.asarray(chunk)
-
-            def note(n, exc, i=i):
-                warnings.warn(
-                    f"chunk {i} page-in failed ({exc}); "
-                    f"retry {n + 1}/{self.load_retries}"
-                )
-
-            yield RES.with_retries(
-                attempt, retries=self.load_retries,
-                backoff=self.load_backoff,
-                retry_on=(OSError, RES.ChunkIntegrityError), on_retry=note,
-            )
+        bounded by the pager ring (prefetch_chunks staged + 1 in use), and
+        `nbytes_device` stays 0. Chunk crc32s are verified per the
+        verify_chunks policy with the same retry/backoff as training (when
+        the stack is already device-resident the cached copy is served
+        instead — it was verified when paged in)."""
+        for _, chunk in self.chunk_pager():
+            yield chunk
 
     def unload(self) -> None:
         """Drop the device copy of the chunk stack (page out). The host

@@ -214,19 +214,105 @@ def build_histograms_chunked(
 
     def chunk_body(hist, chunk):
         words_c, g, p = chunk
-        base = p * max_bins
-
-        def per_feature(_, xs):
-            words, slab = xs
-            b = _unpack_words(words, bits)  # (rows_up,) — one chunk column
-            return None, _scatter_feature(slab, b, base, g)
-
-        _, hist = jax.lax.scan(per_feature, None, (words_c, hist))
-        return hist, None
+        return _chunk_slab_update(hist, words_c, g, p, bits, max_bins), None
 
     hist0 = jnp.zeros((f, slots, 2), jnp.float32)
     hist, _ = jax.lax.scan(chunk_body, hist0, (packed, gh_c, pos_c))
     return hist.reshape(f, n_nodes + 1, max_bins, 2).transpose(1, 0, 2, 3)[:n_nodes]
+
+
+def _chunk_slab_update(
+    hist: jax.Array,  # (f, (n_nodes + 1) * max_bins, 2) running slab stack
+    words_c: jax.Array,  # (f, w_c) uint32 — one chunk's packed columns
+    gh: jax.Array,  # (rows_up, 2) float32, word-alignment rows zero-padded
+    pos: jax.Array,  # (rows_up,) int32, dump slot for inactive/padding rows
+    bits: int,
+    max_bins: int,
+) -> jax.Array:
+    """Scatter ONE chunk's rows into the feature-major slab stack.
+
+    The single definition of the per-chunk scatter body, shared by the
+    compiled resident scan (build_histograms_chunked, which lax.scans it
+    over the device-resident stack) and the eager streamed path
+    (histogram_chunk_update, which applies it once per paged-in chunk).
+    Same ops, same per-(node, f, bin) f32 add order — which is the whole
+    bit-identity argument for streamed == resident == in-memory fits.
+    """
+    base = pos * max_bins
+
+    def per_feature(_, xs):
+        words, slab = xs
+        b = _unpack_words(words, bits)  # (rows_up,) — one chunk column
+        return None, _scatter_feature(slab, b, base, gh)
+
+    _, hist = jax.lax.scan(per_feature, None, (words_c, hist))
+    return hist
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "max_bins", "bits"))
+def histogram_chunk_update(
+    hist: jax.Array,  # (f, (n_nodes + 1) * max_bins, 2) running slab stack
+    words_c: jax.Array,  # (f, w_c) uint32 — one paged-in chunk
+    gh_c: jax.Array,  # (rows, 2) float32 — this chunk's gradient slice
+    pos_c: jax.Array,  # (rows,) int32 — this chunk's position slice
+    n_nodes: int,
+    max_bins: int,
+    bits: int,
+) -> jax.Array:
+    """One streamed chunk's scatter into the running slab stack — the eager
+    per-chunk twin of build_histograms_chunked's scan body (the streamed
+    out-of-core path pages chunks through a prefetching ring and cannot put
+    the whole stack inside one jit). rows may be short on the final chunk;
+    word-alignment padding rows go to the dump slot exactly as in the
+    resident scan. Callers finalise the threaded slab stack with
+    finalize_slab_histogram once every chunk has been applied.
+    """
+    spw = symbols_per_word(bits)
+    rows_up = words_c.shape[1] * spw
+    rows = pos_c.shape[0]
+    pos = jnp.minimum(pos_c, n_nodes).astype(jnp.int32)
+    if rows_up > rows:
+        pos = jnp.pad(pos, (0, rows_up - rows), constant_values=n_nodes)
+        gh_c = jnp.pad(gh_c, ((0, rows_up - rows), (0, 0)))
+    return _chunk_slab_update(hist, words_c, gh_c, pos, bits, max_bins)
+
+
+def finalize_slab_histogram(
+    hist: jax.Array, n_nodes: int, max_bins: int
+) -> jax.Array:
+    """(f, slots, 2) slab stack -> (n_nodes, f, max_bins, 2) histogram,
+    dropping the dump slot — the tail of every chunked builder above."""
+    f = hist.shape[0]
+    return hist.reshape(f, n_nodes + 1, max_bins, 2).transpose(1, 0, 2, 3)[:n_nodes]
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "max_bins", "bits"))
+def histogram_rows_chunk_update(
+    flat: jax.Array,  # ((n_nodes + 1) * f * max_bins, 2) running accumulator
+    words_c: jax.Array,  # (f, w_c) uint32 — one paged-in chunk
+    gh_b: jax.Array,  # (m, 2) float32 — this segment's compacted gradients
+    pos_b: jax.Array,  # (m,) int32 — this segment's node ids
+    rid_local: jax.Array,  # (m,) int32 CHUNK-LOCAL row ids
+    n_nodes: int,
+    max_bins: int,
+    bits: int,
+) -> jax.Array:
+    """One chunk-segment's compacted-row scatter into the running flat
+    histogram — the streamed twin of build_histograms_chunked_rows' body,
+    for the subtraction trick and GOSS-compacted builds out-of-core. The
+    caller splits the (ascending) compacted row list into per-chunk
+    segments, so applying segments in chunk order reproduces the resident
+    builder's global-row-order adds per (node, f, bin) slot bitwise;
+    padding entries carry pos_b = n_nodes (dump slot).
+    """
+    spw = symbols_per_word(bits)
+    mask = jnp.uint32((1 << bits) - 1)
+    r = jnp.minimum(rid_local, words_c.shape[1] * spw - 1)
+    words = words_c[:, r // spw]  # (f, m) word gather
+    shift = ((r % spw).astype(jnp.uint32) * jnp.uint32(bits))[None, :]
+    b = ((words >> shift) & mask).T.astype(jnp.int32)  # (m, f)
+    p = jnp.minimum(pos_b, n_nodes).astype(jnp.int32)
+    return _scatter_rows(flat, b, p, gh_b, max_bins)
 
 
 @functools.partial(

@@ -30,6 +30,13 @@ Row subsampling has two executions with identical semantics:
     their (g, h) zeroed instead. Adding 0.0 terms in the same row order
     leaves f32 bin sums bitwise unchanged, so the two modes agree exactly
     per shard.
+
+GOSS (`sampling_method="goss"`, Ke et al. 2017) rides the same two
+executions: keep the top-`a*n` rows by |g|, uniformly sample `b*n` of the
+rest and amplify their (g, h) by (1 - a) / b. Unlike uniform subsampling
+the selection depends on the DATA (the gradient vector), so distributed
+shards all_gather gh first and replay one replicated global selection —
+see `make_tree_context(axis_name=...)` and DESIGN.md §17.
 """
 from __future__ import annotations
 
@@ -45,6 +52,7 @@ TAG_ROWS = 0x517C0DE1
 TAG_COLS_TREE = 0x517C0DE2
 TAG_COLS_LEVEL = 0x517C0DE3
 TAG_COLS_NODE = 0x517C0DE4
+TAG_GOSS = 0x517C0DE5
 
 
 class StochasticParams(NamedTuple):
@@ -61,10 +69,17 @@ class StochasticParams(NamedTuple):
     colsample_bylevel: float = 1.0
     colsample_bynode: float = 1.0
     monotone: tuple | None = None
+    sampling_method: str = "uniform"
+    top_rate: float = 0.2
+    other_rate: float = 0.1
 
     @property
     def row_sampling(self) -> bool:
         return self.subsample < 1.0
+
+    @property
+    def goss(self) -> bool:
+        return self.sampling_method == "goss"
 
     @property
     def monotone_on(self) -> bool:
@@ -83,6 +98,7 @@ def stochastic_params(cfg) -> StochasticParams | None:
         and cfg.colsample_bylevel >= 1.0
         and cfg.colsample_bynode >= 1.0
         and mono is None
+        and cfg.sampling_method == "uniform"
     ):
         return None
     return StochasticParams(
@@ -91,6 +107,9 @@ def stochastic_params(cfg) -> StochasticParams | None:
         colsample_bylevel=cfg.colsample_bylevel,
         colsample_bynode=cfg.colsample_bynode,
         monotone=mono,
+        sampling_method=cfg.sampling_method,
+        top_rate=cfg.top_rate,
+        other_rate=cfg.other_rate,
     )
 
 
@@ -149,6 +168,36 @@ def compact_row_ids(sel: jax.Array, m: int) -> jax.Array:
         .at[jnp.where(sel, order, m)]
         .set(jnp.arange(n, dtype=jnp.int32), mode="drop")
     )
+
+
+def goss_sizes(n_total: int, params: StochasticParams) -> tuple[int, int]:
+    """(m_top, m_other): static GOSS buffer sizes over the GLOBAL row count.
+    m_other is clipped so top + rest never exceeds n_total (tiny-n corner
+    where round(n * a) + round(n * b) > n)."""
+    m_top = sample_size(n_total, params.top_rate)
+    m_other = min(sample_size(n_total, params.other_rate), n_total - m_top)
+    return m_top, max(m_other, 0)
+
+
+def goss_selection(
+    key: jax.Array, g_abs: jax.Array, m_top: int, m_other: int
+) -> tuple[jax.Array, jax.Array]:
+    """GOSS row selection (Ke et al. 2017, via the XGBoost lineage): keep
+    the m_top rows with largest |g|, then uniformly sample m_other of the
+    remainder. Returns (selected, rest) bool masks over the full row range
+    — `rest` marks the uniformly-sampled small-gradient rows that need the
+    (1 - a) / b reweighting.
+
+    Deterministic contract matches `row_selection_mask`: a pure function of
+    (key, |g|, sizes) over GLOBAL rows, with |g| ties broken by row index
+    (double-argsort rank), so every shard and device count replays the
+    identical selection.
+    """
+    top = _rank_along_last(-g_abs) < m_top
+    u = jax.random.uniform(jax.random.fold_in(key, TAG_GOSS), g_abs.shape)
+    u = jnp.where(top, jnp.inf, u)  # top rows never drawn again as "rest"
+    rest = _rank_along_last(u) < m_other
+    return top | rest, rest
 
 
 def feature_sample_mask(
@@ -230,6 +279,7 @@ def make_tree_context(
     compact: bool = True,
     n_total: int | None = None,
     row_offset=0,
+    axis_name=None,
 ) -> tuple[TreeContext, jax.Array]:
     """Build the per-tree context and the gh view grow_tree consumes.
 
@@ -240,11 +290,44 @@ def make_tree_context(
     count and `row_offset` this shard's first global row — the selection
     is drawn over n_total and sliced, so every shard sees the same global
     sample regardless of device count.
+
+    GOSS (params.goss) is data-dependent: the selection needs the GLOBAL
+    |g| vector, not just global sizes. Under shard_map callers pass
+    `axis_name` (the data axes) so gh is all_gather'd — the gather order
+    matches the runner's row linearisation, every shard then computes the
+    identical replicated selection and slices its rows at `row_offset`.
+    Selected small-gradient rows get BOTH g and h scaled by (1 - a) / b;
+    the per-row products are the same f32 values in compact and masked
+    mode, so the two executions stay bitwise-equal per histogram bin.
     """
     n_local = gh.shape[0]
     n_total = n_local if n_total is None else n_total
     row_ids = None
-    if params.row_sampling:
+    if params.goss:
+        m_top, m_other = goss_sizes(n_total, params)
+        if not compact and axis_name is not None and n_total != n_local:
+            gh_all = jax.lax.all_gather(gh, axis_name, tiled=True)
+        else:
+            gh_all = gh  # single shard: local rows ARE the global rows
+        sel, rest = goss_selection(
+            tree_key, jnp.abs(gh_all[:, 0]), m_top, m_other
+        )
+        amp = (1.0 - params.top_rate) / params.other_rate
+        w = jnp.where(rest, jnp.float32(amp), jnp.float32(1.0))
+        if compact:
+            if n_total != n_local:
+                raise ValueError(
+                    "compact GOSS needs the full row range on one shard "
+                    f"(n_total={n_total}, local={n_local})"
+                )
+            row_ids = compact_row_ids(sel, m_top + m_other)
+            gh = gh[row_ids] * w[row_ids][:, None]
+        else:
+            off = (jnp.asarray(row_offset, jnp.int32),)
+            sel_local = jax.lax.dynamic_slice(sel, off, (n_local,))
+            w_local = jax.lax.dynamic_slice(w, off, (n_local,))
+            gh = jnp.where(sel_local[:, None], gh * w_local[:, None], 0.0)
+    elif params.row_sampling:
         m = sample_size(n_total, params.subsample)
         sel = row_selection_mask(tree_key, n_total, m)
         if compact:

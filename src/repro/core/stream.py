@@ -1,0 +1,330 @@
+"""Streamed out-of-core training executor (DESIGN.md §17).
+
+The resident external-memory path (`ExternalDMatrix.packed_bins()`) pages
+the WHOLE compressed chunk stack to device before the fit and scans it
+inside one compiled program. That is the fastest shape when the stack fits,
+but it is exactly what an out-of-core path must not require. This module is
+the other execution of the same arithmetic: the stack stays host-side, a
+bounded prefetching pager (`dmatrix.ChunkPager`) stages chunks host->device
+on a background thread, and every per-chunk unit of work — histogram slab
+update, row routing, tree traversal — runs as an eagerly-dispatched jitted
+kernel that is the SAME scan body the resident path compiles
+(`histogram._chunk_slab_update` and friends). Chunk k+1 transfers while
+chunk k computes; device residency is bounded by the pager ring
+(prefetch_chunks staged + 1 in use) plus O(n) row state, never the stack.
+
+Bit-identity discipline (the repo's external-memory contract, DESIGN.md
+§11): per-(node, feature, bin) f32 adds happen in global row order in both
+executions, routing/traversal are elementwise, and the per-chunk kernels
+are the extracted bodies of the resident scans — so streamed fits equal
+resident fits equal in-memory fits bitwise on shared cuts, with the
+prefetch ring on or off (overlap changes WHEN a chunk arrives, never what
+is computed from it).
+
+GOSS composes with streaming through the compacted-row builders: the
+selection needs only the gradient vector (device-resident, O(n)) — never
+the matrix — and the compacted row ids arrive ascending, so they split
+into per-chunk segments host-side (`np.searchsorted`) and chunks with no
+selected rows are never requested from the pager at all. `rows_touched` /
+`chunks_paged` counters feed the BENCH `external_memory.goss` subsection.
+
+`StreamedChunkedBins` is duck-typed (class attr `is_streamed`) rather than
+a compress.py pytree: it is deliberately NOT traceable — it owns a Python
+pager and host-side counters — and tree.py/booster.py dispatch on the
+attribute to call its methods eagerly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compress as C
+from repro.core import histogram as H
+from repro.core import partition as P
+from repro.core import predict as PR
+from repro.core import sampling as SMP
+from repro.testing import faults as FA
+
+
+def _bucket(m: int) -> int:
+    """Next power of two >= m, floor 64 — segment buffers are padded to
+    bucket sizes so per-level jit kernels see O(log n) distinct shapes
+    instead of one per (level, chunk) segment length."""
+    return 1 << max(6, (max(m, 1) - 1).bit_length())
+
+
+def _pad1(arr: jax.Array, size: int, value) -> jax.Array:
+    pad = size - arr.shape[0]
+    return arr if pad == 0 else jnp.pad(arr, (0, pad), constant_values=value)
+
+
+def _pad2(arr: jax.Array, size: int) -> jax.Array:
+    pad = size - arr.shape[0]
+    return arr if pad == 0 else jnp.pad(arr, ((0, pad), (0, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("missing_bin", "bits"))
+def _update_positions_rows_chunk(
+    words, positions, split_mask, feature, split_bin, default_left,
+    missing_bin, bits, rid_local,
+):
+    """Route one chunk-segment of the compacted row buffer with that
+    chunk's words — the streamed twin of partition.update_positions_chunked_
+    rows, which gathers from the resident stack. Same `_route` body, same
+    elementwise rule, so per-slot results are identical."""
+    return P._route(
+        positions, split_mask, feature, split_bin, default_left, missing_bin,
+        lambda f: C.gather_feature_bins_rows(words, bits, f, rid_local),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "n_rows", "missing_bin", "max_depth"),
+)
+def _traverse_chunk(
+    feature, split_bin, default_left, leaf_value, is_leaf,
+    words, bits, n_rows, missing_bin, max_depth,
+):
+    """One chunk's leaf outputs for one tree — the body predict.traverse_
+    tree_chunked scans over the resident stack, applied per paged-in
+    chunk."""
+    return PR.traverse_tree_packed(
+        feature, split_bin, default_left, leaf_value, is_leaf,
+        words, bits, n_rows, missing_bin, max_depth,
+    )
+
+
+class StreamedChunkedBins:
+    """Duck-typed training representation over a host-resident chunk stack.
+
+    Presents the same work units grow_tree needs (histograms, routing,
+    traversal) as METHODS that internally stream chunks through the
+    source ExternalDMatrix's prefetching pager. tree.py and booster.py
+    dispatch on the `is_streamed` class attribute (duck typing avoids an
+    import cycle tree -> stream -> predict -> tree).
+
+    Counters (host ints, reset per fit by the stream runner's caller or
+    read cumulatively by benchmarks):
+      rows_touched — rows scattered into histograms (the GOSS win metric:
+        full fits touch ~n + (depth-1) * n/2 rows per tree, GOSS fits
+        ~(a+b) * that).
+      chunks_paged — chunks served by the pager (GOSS skips chunks with
+        no selected rows in the compacted builders).
+    """
+
+    is_streamed = True
+
+    def __init__(self, source):
+        self.source = source  # ExternalDMatrix
+        self.bits = source.bits
+        self.chunk_rows = source.chunk_rows
+        self.n_rows = source.n_rows
+        self.rows_touched = 0
+        self.chunks_paged = 0
+
+    @property
+    def n_chunks(self) -> int:
+        return self.source.n_chunks
+
+    @property
+    def n_features(self) -> int:
+        return self.source.n_features
+
+    def iter_chunks(self, indices=None):
+        """(index, device_chunk) pairs via the source's prefetching pager
+        (double-buffered by default; synchronous at prefetch_chunks=0)."""
+        for i, chunk in self.source.chunk_pager(indices):
+            self.chunks_paged += 1
+            yield i, chunk
+
+    def _segments(self, rid: np.ndarray):
+        """Split an ASCENDING global row-id buffer into per-chunk segments:
+        segment i covers slots [starts[i], ends[i]) whose rows live in
+        chunk i. Out-of-range sentinel ids (subtraction-buffer padding)
+        fall past the last boundary and are dropped — they only ever
+        scatter into the dump slot, which every builder slices off."""
+        bounds = np.arange(1, self.n_chunks + 1) * self.chunk_rows
+        ends = np.searchsorted(rid, bounds)
+        starts = np.concatenate(([0], ends[:-1]))
+        return starts, ends
+
+    # --- histogram builds --------------------------------------------------
+    def build_histograms(self, gh, pos, n_nodes, max_bins):
+        """Full-matrix level histogram: thread the feature-major slab stack
+        through every chunk (resident build_histograms_chunked's scan,
+        unrolled over the pager)."""
+        slots = (n_nodes + 1) * max_bins
+        hist = jnp.zeros((self.n_features, slots, 2), jnp.float32)
+        for i, words in self.iter_chunks():
+            s = i * self.chunk_rows
+            e = min(s + self.chunk_rows, self.n_rows)
+            hist = H.histogram_chunk_update(
+                hist, words, gh[s:e], pos[s:e], n_nodes, max_bins, self.bits
+            )
+            self.rows_touched += e - s
+        return H.finalize_slab_histogram(hist, n_nodes, max_bins)
+
+    def build_histograms_rows(self, gh_sel, pos_sel, row_ids, n_nodes,
+                              max_bins):
+        """Compacted-row level histogram (subtraction trick / GOSS): the
+        ascending buffer splits into per-chunk segments; chunks with no
+        selected rows are never paged. Scatter order per (node, f, bin)
+        slot is the buffer's global slot order, matching the resident
+        build_histograms_chunked_rows bitwise."""
+        rid = np.asarray(row_ids)
+        starts, ends = self._segments(rid)
+        f = self.n_features
+        flat = jnp.zeros(((n_nodes + 1) * f * max_bins, 2), jnp.float32)
+        todo = [i for i in range(self.n_chunks) if ends[i] > starts[i]]
+        for i, words in self.iter_chunks(todo):
+            s, e = int(starts[i]), int(ends[i])
+            size = _bucket(e - s)
+            rl = jnp.asarray(rid[s:e] - i * self.chunk_rows, jnp.int32)
+            flat = H.histogram_rows_chunk_update(
+                flat, words,
+                _pad2(gh_sel[s:e], size),
+                _pad1(pos_sel[s:e], size, n_nodes),
+                _pad1(rl, size, 0),
+                n_nodes, max_bins, self.bits,
+            )
+            self.rows_touched += e - s
+        return flat.reshape(n_nodes + 1, f, max_bins, 2)[:n_nodes]
+
+    # --- row routing -------------------------------------------------------
+    def update_positions(self, positions, split_mask, feature, split_bin,
+                         default_left, missing_bin):
+        """Full-row routing, one chunk slice at a time (elementwise — the
+        concatenation equals the resident update_positions_chunked)."""
+        parts = []
+        for i, words in self.iter_chunks():
+            s = i * self.chunk_rows
+            e = min(s + self.chunk_rows, self.n_rows)
+            parts.append(P.update_positions_packed(
+                words, positions[s:e], split_mask, feature, split_bin,
+                default_left, missing_bin, self.bits,
+            ))
+        return jnp.concatenate(parts)
+
+    def update_positions_rows(self, positions, split_mask, feature,
+                              split_bin, default_left, missing_bin, row_ids):
+        """Buffer-space routing for compacted rows: segments partition the
+        buffer (row_ids are real ascending rows here, no sentinels), so the
+        trimmed per-segment results concatenate back to the full buffer in
+        slot order."""
+        rid = np.asarray(row_ids)
+        starts, ends = self._segments(rid)
+        parts = []
+        todo = [i for i in range(self.n_chunks) if ends[i] > starts[i]]
+        for i, words in self.iter_chunks(todo):
+            s, e = int(starts[i]), int(ends[i])
+            size = _bucket(e - s)
+            rl = jnp.asarray(rid[s:e] - i * self.chunk_rows, jnp.int32)
+            res = _update_positions_rows_chunk(
+                words,
+                _pad1(positions[s:e], size, -1),
+                split_mask, feature, split_bin, default_left,
+                missing_bin, self.bits,
+                _pad1(rl, size, 0),
+            )
+            parts.append(res[: e - s])
+        return jnp.concatenate(parts)
+
+    # --- prediction --------------------------------------------------------
+    def traverse_tree(self, tr, missing_bin, max_depth):
+        """One tree's leaf outputs over all rows (the per-round margin
+        update). Streams the stack once per tree — multiclass rounds stream
+        it k times; correctness-first, the pager hides the transfers."""
+        parts = []
+        for _, words in self.iter_chunks():
+            parts.append(_traverse_chunk(
+                tr.feature, tr.split_bin, tr.default_left, tr.leaf_value,
+                tr.is_leaf, words, self.bits, self.chunk_rows, missing_bin,
+                max_depth,
+            ))
+        return jnp.concatenate(parts)[: self.n_rows]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _apply_eval(cfg, stacked, pb, em):
+    """Eval-set margin update for one round's stacked trees, jitted so the
+    streamed executor applies the same compiled arithmetic (same barrier
+    discipline) as the resident scan body."""
+    from repro.core import booster as B
+
+    return B._apply_stacked_trees(cfg, stacked, pb, em)
+
+
+def make_stream_runner(cfg, obj, cuts, dtrain, y, extra, eval_pbs, eval_ys,
+                       eval_extras, metrics, track_metric, base_key):
+    """A `run_chunk(length, start_round, margins, eval_margins)` closure
+    with the same contract as booster._make_train_fn's compiled scan, but
+    executing rounds EAGERLY over a StreamedChunkedBins: the per-round body
+    is the very same `_round_step_fn` the resident path scans — gradients,
+    GOSS/subsample context, tree growth, margin update — with the data
+    methods streaming chunks through the prefetch ring. The per-round PRNG
+    key folds the ABSOLUTE round index, so resume/update()/early-stopping
+    chunks replay one long fit's key stream exactly as the compiled scan
+    does."""
+    from repro.core import booster as B
+
+    sbins = StreamedChunkedBins(dtrain)
+    dtrain.stream_stats = sbins  # surface the counters (benchmarks/tests)
+    stoch = SMP.stochastic_params(cfg)
+    sentinel = cfg.numeric_check != "off"
+    steps: dict = {}
+
+    def run_chunk(length, start_round, margins, eval_margins):
+        fkey = FA.trace_key("nan_grad")
+        step = steps.get(fkey)
+        if step is None:
+            step = steps[fkey] = B._round_step_fn(cfg, obj, None)
+        ev = tuple(eval_margins)
+        trees, tr_ms, ev_ms, flags = [], [], [], []
+        for r in range(length):
+            ridx = jnp.asarray(start_round + r, jnp.int32)
+            rkey = (
+                jax.random.fold_in(base_key, start_round + r)
+                if stoch is not None else None
+            )
+            out = step(sbins, margins, y, extra, cuts, rkey, ridx)
+            if sentinel:
+                stacked, margins, ok = out
+                flags.append(ok)
+            else:
+                stacked, margins = out
+            new_ev, round_ev = [], []
+            for pb, em, ey, ex in zip(eval_pbs, ev, eval_ys, eval_extras):
+                em = _apply_eval(cfg, stacked, pb, em)
+                new_ev.append(em)
+                round_ev.append(tuple(
+                    m.fn(em, ey, **ex).astype(jnp.float32) for m in metrics
+                ))
+            ev = tuple(new_ev)
+            trees.append(stacked)
+            ev_ms.append(round_ev)
+            if track_metric:
+                tr_ms.append(tuple(
+                    m.fn(margins, y, **extra).astype(jnp.float32)
+                    for m in metrics
+                ))
+        all_trees = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+        tr_stack = tuple(
+            jnp.stack([row[j] for row in tr_ms])
+            for j in range(len(metrics))
+        ) if track_metric else ()
+        ev_stack = tuple(
+            tuple(
+                jnp.stack([ev_ms[r][si][j] for r in range(length)])
+                for j in range(len(metrics))
+            )
+            for si in range(len(eval_pbs))
+        )
+        flag_stack = jnp.stack(flags) if sentinel else ()
+        return margins, all_trees, tr_stack, ev, ev_stack, flag_stack
+
+    run_chunk.bins = sbins  # counters surface for benchmarks/tests
+    return run_chunk

@@ -106,7 +106,19 @@ def grow_tree(
         axis_name, extra_axes = collective.axes[0], collective.axes[1:]
     packed_mode = isinstance(bins, C.PackedBins)
     chunked_mode = isinstance(bins, C.ChunkedPackedBins)
-    if packed_mode or chunked_mode:
+    # Streamed out-of-core bins (core/stream.py) are duck-typed: they are
+    # not a traceable pytree (they own a Python chunk pager), so grow_tree
+    # must be running EAGERLY to use them — the stream runner guarantees
+    # that. Dispatch by attribute to avoid a tree -> stream import cycle.
+    streamed_mode = bool(getattr(bins, "is_streamed", False))
+    if streamed_mode and (axis_name is not None or collective is not None
+                          or feature_axis is not None
+                          or hist_builder is not None):
+        raise NotImplementedError(
+            "streamed out-of-core growth is single-shard with the default "
+            "builders; use resident paging for sharded or kernel fits"
+        )
+    if packed_mode or chunked_mode or streamed_mode:
         if feature_axis is not None:
             raise NotImplementedError(
                 "feature-sharded growth requires dense bins (unpack per shard)"
@@ -131,7 +143,7 @@ def grow_tree(
                 "sharded growth uses masked-mode subsampling "
                 "(ctx.row_ids=None); compact buffers are single-shard only"
             )
-        if not (packed_mode or chunked_mode):
+        if not (packed_mode or chunked_mode or streamed_mode):
             # Dense path: gather the sampled view once, then grow as usual.
             bins = bins[row_ids]
             row_ids, sampled = None, False
@@ -154,6 +166,13 @@ def grow_tree(
                 "default builders for external-memory training"
             )
         build = hist_builder
+    elif sampled and streamed_mode:
+        def build(sb, gh_, pos_, n_nodes_, max_bins_):
+            return sb.build_histograms_rows(gh_, pos_, row_ids, n_nodes_,
+                                            max_bins_)
+    elif streamed_mode:
+        def build(sb, gh_, pos_, n_nodes_, max_bins_):
+            return sb.build_histograms(gh_, pos_, n_nodes_, max_bins_)
     elif sampled and chunked_mode:
         def build(cpb, gh_, pos_, n_nodes_, max_bins_):
             return H.build_histograms_chunked_rows(
@@ -316,7 +335,17 @@ def grow_tree(
         full_feature = jnp.zeros(na, jnp.int32).at[idx].set(feature[idx])
         full_bin = jnp.zeros(na, jnp.int32).at[idx].set(split_bin[idx])
         full_dl = jnp.zeros(na, bool).at[idx].set(default_left[idx])
-        if sampled and chunked_mode:
+        if sampled and streamed_mode:
+            positions = bins.update_positions_rows(
+                positions, split_mask, full_feature, full_bin, full_dl,
+                missing_bin, row_ids,
+            )
+        elif streamed_mode:
+            positions = bins.update_positions(
+                positions, split_mask, full_feature, full_bin, full_dl,
+                missing_bin,
+            )
+        elif sampled and chunked_mode:
             positions = P.update_positions_chunked_rows(
                 bins.packed, positions, split_mask, full_feature, full_bin,
                 full_dl, missing_bin, bins.bits, bins.chunk_rows, row_ids,
@@ -438,7 +467,14 @@ def _histograms_by_subtraction(
     # row id but their pos is the dump slot, so they contribute nothing).
     rid_c = buf if row_ids is None else row_ids[jnp.minimum(buf, n - 1)]
 
-    if chunked_mode:
+    if getattr(bins, "is_streamed", False):
+        # buf is ascending (selected rows in row order, sentinels at the
+        # tail), so rid_c is ascending too — the streamed builder's
+        # per-chunk segmentation requirement. Sentinel slots route to the
+        # dump position and contribute nothing wherever they land.
+        hist_small = bins.build_histograms_rows(gh_c, pos_c, rid_c, n_par,
+                                                max_bins)
+    elif chunked_mode:
         hist_small = H.build_histograms_chunked_rows(
             bins.packed, gh_c, pos_c, rid_c, n_par, max_bins, bins.bits,
             bins.chunk_rows, block_rows=hist_block_rows,

@@ -165,6 +165,11 @@ def make_distributed_round(
                     compact=False,
                     n_total=n_local * n_shards,
                     row_offset=_shard_offset(n_local),
+                    # GOSS needs the GLOBAL |g| vector: gh is all_gather'd
+                    # over the data axes (gather order == the runner's row
+                    # linearisation) so every shard draws the identical
+                    # replicated selection, then slices at row_offset.
+                    axis_name=tuple(data_axes),
                 )
             tr = T.grow_tree(
                 rep,

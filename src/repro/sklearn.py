@@ -109,6 +109,9 @@ class _BoosterEstimator(BaseEstimator):
         verbose: int = 0,
         chunk_rows: int | None = None,
         subsample: float = 1.0,
+        sampling_method: str = "uniform",
+        top_rate: float = 0.2,
+        other_rate: float = 0.1,
         colsample_bytree: float = 1.0,
         colsample_bylevel: float = 1.0,
         colsample_bynode: float = 1.0,
@@ -143,7 +146,12 @@ class _BoosterEstimator(BaseEstimator):
         self.chunk_rows = chunk_rows
         # Stochastic regularisers + constraints (DESIGN.md §12); defaults
         # keep training fully deterministic regardless of random_state.
+        # sampling_method="goss" enables gradient-based one-side sampling
+        # (top_rate/other_rate, XGBoost/LightGBM semantics — DESIGN.md §17).
         self.subsample = subsample
+        self.sampling_method = sampling_method
+        self.top_rate = top_rate
+        self.other_rate = other_rate
         self.colsample_bytree = colsample_bytree
         self.colsample_bylevel = colsample_bylevel
         self.colsample_bynode = colsample_bynode
@@ -191,6 +199,9 @@ class _BoosterEstimator(BaseEstimator):
             n_classes=n_classes,
             quantile_alpha=self.quantile_alpha,
             subsample=self.subsample,
+            sampling_method=self.sampling_method,
+            top_rate=self.top_rate,
+            other_rate=self.other_rate,
             colsample_bytree=self.colsample_bytree,
             colsample_bylevel=self.colsample_bylevel,
             colsample_bynode=self.colsample_bynode,

@@ -289,3 +289,118 @@ def test_chunked_packed_bins_roundtrip(data):
     ]
     bins_chunked = np.concatenate(rows)[: ext.n_rows]
     np.testing.assert_array_equal(bins_chunked, np.asarray(d.matrix.unpack()))
+
+
+# --- streamed out-of-core executor (DESIGN.md §17) -------------------------
+
+
+def _ext(x, y, paging, prefetch=2, chunk_rows=700):
+    return ExternalDMatrix.from_arrays(
+        x,
+        y,
+        chunk_rows=chunk_rows,
+        cuts="exact",
+        paging=paging,
+        prefetch_chunks=prefetch,
+    )
+
+
+def test_streamed_fit_bit_identical_resident_and_overlap_off(data):
+    """The tentpole guarantee: the streamed executor (async prefetch ring)
+    equals the resident compiled-scan fit bit for bit, with the overlap on
+    (prefetch_chunks=2) or off (prefetch_chunks=0), and equals the
+    in-memory fit on the same cuts."""
+    x, y = data
+    kw = dict(n_rounds=8, max_depth=4, objective="binary:logistic")
+    ext = _ext(x, y, "resident")
+    b_res = Booster(**kw).fit(ext)
+    b_str = Booster(**kw).fit(_ext(x, y, "stream"))
+    b_syn = Booster(**kw).fit(_ext(x, y, "stream", prefetch=0))
+    b_mem = Booster(**kw).fit(DeviceDMatrix(x, label=y, cuts=ext.cuts))
+    assert_boosters_identical(b_res, b_str)
+    assert_boosters_identical(b_str, b_syn)
+    assert_boosters_identical(b_str, b_mem)
+    np.testing.assert_array_equal(np.asarray(b_res.margins), np.asarray(b_str.margins))
+    np.testing.assert_array_equal(
+        np.asarray(b_res.predict(x)), np.asarray(b_str.predict(x))
+    )
+
+
+def test_streamed_fit_never_pages_full_stack(data):
+    """The point of streaming: device residency stays bounded by the pager
+    ring — the full chunk stack is never device-resident."""
+    x, y = data
+    ext = _ext(x, y, "stream")
+    bst = Booster(n_rounds=4, max_depth=3, objective="binary:logistic").fit(ext)
+    assert ext.nbytes_device == 0  # no cached device stack after the fit
+    assert ext.stream_stats is not None
+    assert ext.stream_stats.chunks_paged > 0
+    assert ext.stream_stats.rows_touched > 0
+    assert bst.n_rounds_trained == 4
+
+
+def test_streamed_multiclass_and_sampled_bit_identical(data):
+    x, _ = data
+    rng = np.random.default_rng(11)
+    y3 = rng.integers(0, 3, x.shape[0]).astype(np.float32)
+    kw = dict(n_rounds=5, max_depth=3, objective="multi:softmax", n_classes=3)
+    assert_boosters_identical(
+        Booster(**kw).fit(_ext(x, y3, "resident")),
+        Booster(**kw).fit(_ext(x, y3, "stream")),
+    )
+    _, y = data
+    kw = dict(
+        n_rounds=5,
+        max_depth=3,
+        objective="binary:logistic",
+        subsample=0.6,
+        colsample_bytree=0.8,
+        seed=3,
+    )
+    assert_boosters_identical(
+        Booster(**kw).fit(_ext(x, y, "resident")),
+        Booster(**kw).fit(_ext(x, y, "stream")),
+    )
+
+
+def test_streamed_update_continuation_matches_longer_fit(data):
+    """update() over a streamed matrix replays one long fit's key stream
+    and margins exactly (resume-safe eager executor)."""
+    x, y = data
+    kw = dict(n_rounds=8, max_depth=3, objective="binary:logistic")
+    long = Booster(**kw).fit(_ext(x, y, "stream"))
+    ext = _ext(x, y, "stream")
+    short = Booster(n_rounds=5, max_depth=3, objective="binary:logistic").fit(ext)
+    short.update(ext, 3)
+    assert_boosters_identical(long, short)
+
+
+def test_streamed_eval_sets_and_early_stopping_match_resident(data):
+    x, y = data
+    rng = np.random.default_rng(5)
+    xv = rng.standard_normal((600, x.shape[1])).astype(np.float32)
+    yv = (xv[:, 0] > 0).astype(np.float32)
+    boosters = []
+    for paging in ("resident", "stream"):
+        ext = _ext(x, y, paging, chunk_rows=800)
+        dv = DeviceDMatrix(xv, label=yv, ref=ext)
+        bst = Booster(n_rounds=30, max_depth=3, objective="binary:logistic")
+        boosters.append(bst.fit(ext, evals=[(dv, "valid")], early_stopping_rounds=4))
+    b_res, b_str = boosters
+    assert b_res.best_iteration == b_str.best_iteration
+    assert b_res.history == b_str.history
+    assert_boosters_identical(b_res, b_str)
+
+
+def test_paging_knob_validation_and_auto(data):
+    x, y = data
+    with pytest.raises(ValueError, match="paging"):
+        ExternalDMatrix.from_arrays(x, y, chunk_rows=700, paging="bogus")
+    with pytest.raises(ValueError, match="prefetch_chunks"):
+        ExternalDMatrix.from_arrays(x, y, chunk_rows=700, prefetch_chunks=-1)
+    ext = ExternalDMatrix.from_arrays(x, y, chunk_rows=700)
+    assert ext.paging == "auto"
+    # CPU backends report no usable memory limit -> proven resident path
+    assert ext.resolved_paging() in ("resident", "stream")
+    assert _ext(x, y, "stream").resolved_paging() == "stream"
+    assert _ext(x, y, "resident").resolved_paging() == "resident"

@@ -529,3 +529,78 @@ def test_fault_harness_contract():
         k2 = faults.trace_key("nan_grad")
     assert k1 != k2 and k1 is not None
     assert faults.trace_key("nan_grad") is None
+
+
+# --------------------------------------------------------------------------
+# Streamed paging (DESIGN.md §17): faults inside the async prefetch ring
+# --------------------------------------------------------------------------
+
+def _stream_ext(x, y, **kw):
+    base = dict(chunk_rows=128, max_bins=32, cuts="exact", paging="stream")
+    base.update(kw)
+    return ExternalDMatrix.from_arrays(x, y, **base)
+
+
+def test_streamed_prefetch_transient_fault_retried(data):
+    """A transient load failure inside the background pager thread is
+    retried by _load_chunk's own retry policy without corrupting the ring:
+    the fit completes and is bit-identical to an unfaulted streamed fit."""
+    x, y = data
+    clean = Booster(_cfg()).fit(_stream_ext(x, y))
+    ext = _stream_ext(x, y)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        with faults.inject("chunk_load", error=faults.TransientLoadError,
+                           times=2) as spec:
+            faulted = Booster(_cfg()).fit(ext)
+    assert spec.fired == 2  # default load_retries=2 absorbed both
+    assert any("retry" in str(m.message) for m in w)
+    assert (clean.ensemble.leaf_value == faulted.ensemble.leaf_value).all()
+    assert (clean.ensemble.feature == faulted.ensemble.feature).all()
+
+
+def test_streamed_prefetch_persistent_fault_raises(data):
+    """When retries are exhausted the worker forwards the error through the
+    queue, stops producing, and the consumer re-raises it."""
+    x, y = data
+    ext = _stream_ext(x, y, load_retries=1, load_backoff=0.0)
+    with faults.inject("chunk_load", error=faults.TransientLoadError,
+                       times=None):
+        with pytest.raises(faults.TransientLoadError):
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                Booster(_cfg()).fit(ext)
+
+
+def test_streamed_corruption_detected_and_retried(data):
+    """crc verification runs on first page-in of each chunk: a one-shot
+    corrupted transfer is detected and absorbed by the retry."""
+    x, y = data
+    clean = Booster(_cfg()).fit(_stream_ext(x, y))
+    ext = _stream_ext(x, y)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        with faults.inject("chunk_corrupt", times=1, chunk=0,
+                           index=2) as spec:
+            faulted = Booster(_cfg()).fit(ext)
+    assert spec.fired == 1
+    assert any("retry" in str(m.message) for m in w)
+    assert (clean.ensemble.leaf_value == faulted.ensemble.leaf_value).all()
+
+
+def test_verify_once_vs_always_on_repaged_chunks(data):
+    """The verify_chunks policy split: "once" trusts chunks it has already
+    verified (later corrupted transfers sail through unchecked), "always"
+    re-checks the crc on EVERY page-in and catches them."""
+    x, y = data
+    for policy, caught in (("once", False), ("always", True)):
+        ext = _stream_ext(x, y, verify_chunks=policy)
+        Booster(_cfg(n_rounds=2)).fit(ext)  # every chunk verified once
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            with faults.inject("chunk_corrupt", times=1, chunk=0,
+                               index=2) as spec:
+                Booster(_cfg(n_rounds=2)).fit(ext)
+        assert spec.fired == 1
+        retried = any("retry" in str(m.message) for m in w)
+        assert retried == caught, (policy, [str(m.message) for m in w])
